@@ -1,0 +1,43 @@
+"""Fig. 12: extreme data-drift scenarios (ES1/ES2, all four drift axes).
+
+Paper: Ekya degrades most (-12.9% vs regular), EOMU tolerates better
+(+7.8% over Ekya), DaCapo-ST best (+4.4% over EOMU, +13.0% over Ekya).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import run_system
+from repro.configs.dacapo_pairs import PAIRS
+
+SYSTEMS_12 = ("OrinHigh-Ekya", "OrinHigh-EOMU", "DaCapo-Spatiotemporal")
+
+
+def run():
+    rows = []
+    accs = {}
+    for scen in ("ES1", "ES2"):
+        for name in SYSTEMS_12:
+            t0 = time.time()
+            res = run_system(name, PAIRS[0][0], PAIRS[0][1], scen)
+            accs[(scen, name)] = res.avg_accuracy
+            rows.append((
+                f"fig12/{scen}/{name}", (time.time() - t0) * 1e6,
+                f"avg_acc={res.avg_accuracy*100:.1f}% "
+                f"drifts={res.drift_events}"))
+    for scen in ("ES1", "ES2"):
+        dc = accs[(scen, "DaCapo-Spatiotemporal")]
+        ek = accs[(scen, "OrinHigh-Ekya")]
+        eo = accs[(scen, "OrinHigh-EOMU")]
+        rows.append((
+            f"fig12/{scen}/ordering", 0.0,
+            f"DaCapo-vs-Ekya={100*(dc-ek):+.1f}pp (paper +13.0) "
+            f"DaCapo-vs-EOMU={100*(dc-eo):+.1f}pp (paper +4.4) "
+            f"PASS={dc >= max(ek, eo) - 0.02}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,111 @@
+"""Shared benchmark machinery: system variants (paper §VII-A baselines),
+cached pretraining, CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.dacapo_pairs import PAIRS, VisionConfig
+from repro.core.cl_system import ContinuousLearningSystem, pretrain_model
+from repro.core.estimator import DaCapoEstimator, TPUEstimator
+from repro.core.scheduler import CLHyperParams
+from repro.data.stream import DriftStream, scenario
+
+FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+
+
+@dataclasses.dataclass(frozen=True)
+class OrinEstimator(TPUEstimator):
+    """NVIDIA Jetson Orin model (paper Table IV): FP32 only — no MX
+    bandwidth/compute benefit; high (60 W, default clocks) or low (30 W,
+    624.8 MHz) power envelope."""
+
+    total_rows: int = 16  # normalized resource units, same split API
+    peak_flops: float = 5.3e12 * 0.45  # sustained fp32
+    hbm_bw: float = 204.8e9
+    mx_speedup = {"mx4": 1.0, "mx6": 1.0, "mx9": 1.0}  # FP32 everywhere
+
+    def forward_time(self, cfg, rows, precision, batch=1):
+        from repro.core.estimator import vision_gemms
+
+        flops = sum(2 * m * n * k for m, n, k in vision_gemms(cfg, batch))
+        bytes_moved = sum((m * k + k * n + m * n) * 4
+                          for m, n, k in vision_gemms(cfg, batch))
+        frac = rows / self.total_rows
+        t_c = flops / (self.peak_flops * frac)
+        t_m = bytes_moved / (self.hbm_bw * frac)
+        return max(t_c, t_m)
+
+
+def orin_estimator(power: str) -> OrinEstimator:
+    scale = 1.0 if power == "high" else 0.45
+    return OrinEstimator(peak_flops=5.3e12 * 0.45 * scale,
+                         hbm_bw=204.8e9 * (1.0 if power == "high" else 0.7))
+
+
+# (name, estimator factory, allocator, apply_mx)
+SYSTEMS = {
+    "OrinLow-Ekya": (lambda: orin_estimator("low"), "ekya", False),
+    "OrinHigh-Ekya": (lambda: orin_estimator("high"), "ekya", False),
+    "OrinHigh-EOMU": (lambda: orin_estimator("high"), "eomu", False),
+    "DaCapo-Ekya": (DaCapoEstimator, "ekya", True),
+    "DaCapo-Spatial": (DaCapoEstimator, "dacapo-spatial", True),
+    "DaCapo-Spatiotemporal": (DaCapoEstimator, "dacapo-spatiotemporal", True),
+}
+
+POWER_W = {"OrinLow-Ekya": 30.0, "OrinHigh-Ekya": 60.0,
+           "OrinHigh-EOMU": 60.0, "DaCapo-Ekya": 0.236,
+           "DaCapo-Spatial": 0.236, "DaCapo-Spatiotemporal": 0.236}
+
+_PRETRAIN_CACHE: Dict[Tuple, Tuple] = {}
+
+
+def default_hp() -> CLHyperParams:
+    if FAST:
+        return CLHyperParams(n_t=48, n_l=24, c_b=192, epochs=1)
+    return CLHyperParams(n_t=96, n_l=48, c_b=384, epochs=1)
+
+
+def make_stream(scen: str, n_segments: Optional[int] = None) -> DriftStream:
+    n = n_segments or (3 if FAST else 5)
+    return DriftStream(scenario(scen, n), seed=17, img=24)
+
+
+def pretrained(student: VisionConfig, teacher: VisionConfig,
+               stream_key: str, stream: DriftStream):
+    key = (student.name, teacher.name, stream_key)
+    if key not in _PRETRAIN_CACHE:
+        rng = np.random.default_rng(0)
+        probe = ContinuousLearningSystem(student, teacher,
+                                         apply_mx_numerics=False)
+        t_steps, s_steps = (30, 20) if FAST else (120, 45)
+        tp = pretrain_model(probe.teacher, stream, t_steps, 48, rng)
+        sp = pretrain_model(probe.student, stream, s_steps, 48, rng,
+                            segments=stream.segments[:1], seed=8)
+        _PRETRAIN_CACHE[key] = (tp, sp)
+    return _PRETRAIN_CACHE[key]
+
+
+def run_system(name: str, student: VisionConfig, teacher: VisionConfig,
+               scen: str, duration: Optional[float] = None,
+               hp: Optional[CLHyperParams] = None):
+    est_fn, allocator, apply_mx = SYSTEMS[name]
+    stream = make_stream(scen)
+    hp = hp or default_hp()
+    sys_ = ContinuousLearningSystem(
+        student, teacher, hp=hp, estimator=est_fn(), allocator=allocator,
+        apply_mx_numerics=apply_mx, eval_fps=0.5)
+    tp, sp = pretrained(student, teacher, scen, stream)
+    sys_.set_pretrained(tp, sp)
+    dur = duration or (90.0 if FAST else 180.0)
+    return sys_.run(stream, duration=dur)
+
+
+def emit(rows):
+    """Print 'name,us_per_call,derived' CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

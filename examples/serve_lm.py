@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill + autoregressive
+decode with ring-buffer/sequence KV caches.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "mixtral-8x7b", "--reduced", "--batch", "4",
+        "--prompt-len", "32", "--gen", "16",
+    ]
+    raise SystemExit(main(argv))

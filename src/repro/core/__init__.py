@@ -1,0 +1,12 @@
+"""The paper's primary contribution: MX precision, Algorithm 1 scheduling,
+mesh spatial partitioning, the performance estimator and the CL system."""
+from repro.core.cl_system import CLResult, ContinuousLearningSystem  # noqa: F401
+from repro.core.estimator import (  # noqa: F401
+    DaCapoEstimator,
+    TPUEstimator,
+    spatial_allocation,
+)
+from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy, mx_dense  # noqa: F401
+from repro.core.partition import SpatialPartition, partition_mesh  # noqa: F401
+from repro.core.sample_buffer import SampleBuffer  # noqa: F401
+from repro.core.scheduler import CLHyperParams, SCHEDULERS  # noqa: F401

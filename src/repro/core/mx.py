@@ -1,0 +1,105 @@
+"""MX precision as a first-class training/inference feature.
+
+``mx_dense`` is a drop-in matmul whose forward runs at a configurable MX
+precision (MX6 for inference/labeling, MX9 for retraining — the paper's §IV
+operating points) with a straight-through-estimator backward at MX9. Model
+quantization helpers fake-quant whole parameter trees for MX inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-kernel MX precisions (paper §IV step 2)."""
+
+    inference: str = "mx6"
+    labeling: str = "mx6"
+    retraining: str = "mx9"
+    backward: str = "mx9"
+
+
+DEFAULT_POLICY = PrecisionPolicy()
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def mx_dense(x: jax.Array, w: jax.Array, fwd_prec: str = "mx9",
+             bwd_prec: str = "mx9") -> jax.Array:
+    """x [..., K] @ w [K, N] with MX quantization of both operands.
+
+    Differentiable: backward quantizes the incoming cotangent and the saved
+    operands at ``bwd_prec`` (straight-through estimator), mirroring the
+    paper's MX9 retraining path where the precision-conversion unit emits
+    column-major (transposed) MX blocks for the gradient GEMMs (§V-C).
+    """
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = ops.mx_matmul(x2, w, fwd_prec, fwd_prec)
+    return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
+
+
+def _mx_dense_fwd(x, w, fwd_prec, bwd_prec):
+    return mx_dense(x, w, fwd_prec, bwd_prec), (x, w)
+
+
+def _mx_dense_bwd(fwd_prec, bwd_prec, res, g):
+    x, w = res
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    # dX = g @ W^T ; dW = X^T @ g — both through MX at bwd_prec.
+    dx = ops.mx_matmul(g2, w.T, bwd_prec, bwd_prec)
+    dw = ops.mx_matmul(x2.T, g2, bwd_prec, bwd_prec)
+    return dx.reshape(shape).astype(x.dtype), dw.astype(w.dtype)
+
+
+mx_dense.defvjp(_mx_dense_fwd, _mx_dense_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def _fake_quant(x, precision: str):
+    from repro.kernels import ref as _ref
+
+    flat = x.reshape(-1, x.shape[-1])
+    pad = (-flat.shape[-1]) % _ref.BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    y = _ref.mx_quant_dequant_ref(flat, precision)
+    if pad:
+        y = y[:, : x.shape[-1]]
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+def quantize_tree(params, precision: str, min_size: int = 1024):
+    """Fake-quant every >=2D parameter (weights) in a pytree to ``precision``.
+
+    Used to run student inference / teacher labeling at MX6 while the
+    retraining master copy stays fp32 (the paper's precision-flexible SAs).
+    Uses the jitted jnp reference path (bit-identical to the kernel; the
+    Pallas kernel is for TPU, interpret mode is too slow for host loops).
+    """
+    def q(p):
+        if not isinstance(p, jax.Array) and not hasattr(p, "ndim"):
+            return p
+        if p.ndim < 2 or p.size < min_size or not jnp.issubdtype(
+                p.dtype, jnp.floating):
+            return p
+        return _fake_quant(p, precision)
+
+    return jax.tree_util.tree_map(q, params)
+
+
+def activation_quant(x: jax.Array, precision: Optional[str]) -> jax.Array:
+    """Straight-through activation fake-quant (identity gradient)."""
+    if precision is None:
+        return x
+    y = ops.mx_quant_dequant(x, precision)
+    return x + jax.lax.stop_gradient(y - x)

@@ -1,0 +1,57 @@
+"""Spatial partitioning: mesh fission into T-SA / B-SA sub-meshes.
+
+The paper splits a systolic array's rows into a top (training+labeling) and
+bottom (inference) sub-accelerator (§V-A). The TPU-pod analogue splits the
+device mesh along its first axis into two sub-meshes; JAX dispatches onto
+disjoint device sets concurrently, which is exactly the paper's concurrency
+model. On a single device the partition degenerates to time-sharing (the
+paper's own fallback when R_tsa or R_bsa is 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialPartition:
+    t_sa: Optional[Mesh]  # retraining + labeling (time-shared, Alg. 1)
+    b_sa: Optional[Mesh]  # inference, sized to the input frame rate
+    time_shared: bool  # single-resource fallback
+
+    @property
+    def t_devices(self):
+        return None if self.t_sa is None else self.t_sa.devices
+
+    @property
+    def b_devices(self):
+        return None if self.b_sa is None else self.b_sa.devices
+
+
+def partition_mesh(mesh: Mesh, rows_bsa: int,
+                   row_axis: Optional[str] = None) -> SpatialPartition:
+    """Split ``mesh`` along ``row_axis`` (default: first axis): the last
+    ``rows_bsa`` rows become B-SA, the rest T-SA.
+
+    Mirrors the paper's row-granular fission — the 'programmable memory
+    interface' reprogramming becomes the NamedShardings of each sub-mesh.
+    """
+    axis = row_axis or mesh.axis_names[0]
+    ax_idx = mesh.axis_names.index(axis)
+    n_rows = mesh.devices.shape[ax_idx]
+    if n_rows < 2 or rows_bsa <= 0 or rows_bsa >= n_rows:
+        return SpatialPartition(t_sa=mesh, b_sa=mesh, time_shared=True)
+    dev = np.moveaxis(mesh.devices, ax_idx, 0)
+    t_dev = np.moveaxis(dev[: n_rows - rows_bsa], 0, ax_idx)
+    b_dev = np.moveaxis(dev[n_rows - rows_bsa:], 0, ax_idx)
+    t_sa = Mesh(t_dev, mesh.axis_names)
+    b_sa = Mesh(b_dev, mesh.axis_names)
+    return SpatialPartition(t_sa=t_sa, b_sa=b_sa, time_shared=False)
+
+
+def single_device_partition() -> SpatialPartition:
+    return SpatialPartition(t_sa=None, b_sa=None, time_shared=True)

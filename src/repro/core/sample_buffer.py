@@ -1,0 +1,54 @@
+"""Fixed-capacity labeled sample buffer (Algorithm 1 state).
+
+Host-side numpy storage: the buffer lives across retraining/labeling phases
+and is the unit the scheduler draws D_t/D_v from and resets on drift.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class SampleBuffer:
+    def __init__(self, capacity: int, seed: int = 0):
+        self.capacity = int(capacity)
+        self._x: Optional[np.ndarray] = None
+        self._y: Optional[np.ndarray] = None
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return 0 if self._x is None else len(self._x)
+
+    @property
+    def full(self) -> bool:
+        return len(self) >= self.capacity
+
+    def update(self, x: np.ndarray, y: np.ndarray) -> None:
+        """UpdateBuffer (Alg. 1 line 14): append, evict oldest beyond C_b."""
+        assert len(x) == len(y)
+        if self._x is None:
+            self._x, self._y = np.asarray(x).copy(), np.asarray(y).copy()
+        else:
+            self._x = np.concatenate([self._x, x])
+            self._y = np.concatenate([self._y, y])
+        if len(self._x) > self.capacity:
+            self._x = self._x[-self.capacity:]
+            self._y = self._y[-self.capacity:]
+
+    def reset(self) -> None:
+        """ResetBuffer (Alg. 1 line 12): drop outdated samples on drift."""
+        self._x, self._y = None, None
+
+    def get_data(self, n_train: int,
+                 n_valid: int) -> Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray, np.ndarray]:
+        """GetData (Alg. 1 line 4): disjoint D_t / D_v draws."""
+        n = len(self)
+        if n == 0:
+            raise ValueError("empty sample buffer")
+        idx = self._rng.permutation(n)
+        n_valid = min(n_valid, max(1, n // 5))
+        n_train = min(n_train, n - n_valid)
+        ti, vi = idx[:n_train], idx[n_train:n_train + n_valid]
+        return self._x[ti], self._y[ti], self._x[vi], self._y[vi]

@@ -1,0 +1,2 @@
+from repro.data.stream import DriftStream, SCENARIOS, Segment, scenario  # noqa: F401
+from repro.data.tokens import TokenPipeline  # noqa: F401

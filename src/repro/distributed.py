@@ -1,0 +1,181 @@
+"""Logical-axis sharding utilities (MaxText-style logical→mesh rules).
+
+Model code annotates arrays with *logical* axis names; a ``ShardingRules``
+mapping (installed via ``use_rules``) translates them to mesh axes. Outside a
+mesh context everything is a no-op, so the same model code runs on 1 CPU
+device (smoke tests) and on a 512-chip multi-pod mesh (dry-run / production).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class ShardingRules(dict):
+    """Maps logical axis name -> mesh axis (or tuple of axes, or None)."""
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]]) -> P:
+        out = []
+        used: set = set()
+        for name in logical_axes:
+            axes = self.get(name) if name is not None else None
+            # Drop mesh axes already consumed by an earlier dim (JAX forbids
+            # reusing a mesh axis across dims of one array).
+            if isinstance(axes, (tuple, list)):
+                axes = tuple(a for a in axes if a not in used)
+                used.update(axes)
+                axes = axes if axes else None
+                if isinstance(axes, tuple) and len(axes) == 1:
+                    axes = axes[0]
+            elif isinstance(axes, str):
+                if axes in used:
+                    axes = None
+                else:
+                    used.add(axes)
+            out.append(axes)
+        return P(*out)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    mesh = getattr(_STATE, "mesh", None)
+    if mesh is not None:
+        return mesh
+    # Fall back to the ambient `with mesh:` context if one is active.
+    env = jax.sharding.get_abstract_mesh() if hasattr(jax.sharding, "get_abstract_mesh") else None
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules], mesh: Optional[Mesh] = None):
+    prev_rules = getattr(_STATE, "rules", None)
+    prev_mesh = getattr(_STATE, "mesh", None)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev_rules, prev_mesh
+
+
+def logical_spec(*logical_axes: Optional[str]) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec_for(logical_axes)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without rules/mesh."""
+    rules = current_rules()
+    mesh = getattr(_STATE, "mesh", None)
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(f"rank {x.ndim} vs logical axes {logical_axes}")
+    spec = rules.spec_for(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *logical_axes: Optional[str]) -> NamedSharding:
+    rules = current_rules()
+    spec = rules.spec_for(logical_axes) if rules else P()
+    return NamedSharding(mesh, spec)
+
+
+def mesh_axis_size(mesh: Optional[Mesh], axes: MeshAxes) -> int:
+    if mesh is None or axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+# ---------------------------------------------------------------------------
+# Param spec system: declarative parameter trees that can be initialized,
+# shape-evaluated (dry-run) and sharded without duplication.
+# ---------------------------------------------------------------------------
+class ParamDef:
+    """Declares one parameter: shape, logical axes, initializer."""
+
+    __slots__ = ("shape", "logical", "init", "dtype", "scale")
+
+    def __init__(self, shape, logical, init="normal", dtype=jnp.float32, scale=None):
+        assert len(shape) == len(logical), (shape, logical)
+        self.shape = tuple(int(s) for s in shape)
+        self.logical = tuple(logical)
+        self.init = init
+        self.dtype = dtype
+        self.scale = scale
+
+    def initialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "const":
+            return jnp.full(self.shape, self.scale, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1)
+        scale = self.scale if self.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+    def shape_struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    """Materialize a ParamDef tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_param_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [d.initialize(k) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def param_shapes(defs):
+    return jax.tree_util.tree_map(
+        lambda d: d.shape_struct(), defs, is_leaf=is_param_def)
+
+
+def param_specs(defs) -> object:
+    """PartitionSpec tree for a ParamDef tree under the current rules."""
+    rules = current_rules() or ShardingRules()
+    return jax.tree_util.tree_map(
+        lambda d: rules.spec_for(d.logical), defs, is_leaf=is_param_def)
+
+
+def param_shardings(defs, mesh: Mesh):
+    specs = param_specs(defs)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_defs(defs_list):
+    """Stack N same-structure ParamDef trees along a new leading 'layers' axis."""
+    n = len(defs_list)
+
+    def _stack(*ds: ParamDef) -> ParamDef:
+        d0 = ds[0]
+        return ParamDef((n,) + d0.shape, ("layers",) + d0.logical,
+                        d0.init, d0.dtype, d0.scale)
+
+    return jax.tree_util.tree_map(_stack, *defs_list, is_leaf=is_param_def)

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: forward flash attention (causal / sliding-window /
+logit-softcap), GQA-aware.
+
+Grid (B*H, nQ, nKV): the kv axis is innermost (sequential on TPU), with the
+online-softmax state (m, l, acc) living in VMEM scratch across kv steps.
+Fully-masked (q_block, kv_block) pairs are skipped via pl.when — causal
+attention does ~S^2/2 work and sliding-window ~S*W, matching the ideal FLOP
+counts (this is the TPU answer to masked-rectangle waste; see EXPERIMENTS.md
+§Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_QB = 128
+DEFAULT_KVB = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 softcap: Optional[float], q_offset: int, nkv: int,
+                 kvb: int, qb: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_blk = pl.program_id(1)
+    q_start = q_blk * qb + q_offset
+    kv_start = kv_idx * kvb
+
+    # Static-shape masks from block coordinates.
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 0)
+    kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 1)
+    needed = True
+    if causal:
+        needed = jnp.logical_and(needed, kv_start <= q_start + qb - 1)
+    if window is not None:
+        needed = jnp.logical_and(needed, kv_start + kvb - 1 > q_start - window)
+
+    @pl.when(needed if not isinstance(needed, bool) else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [qb, d]
+        k = k_ref[0].astype(jnp.float32)  # [kvb, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((qb, kvb), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(kv_idx == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "q_offset", "qb", "kvb",
+    "interpret"))
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, Kv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    qb: int = DEFAULT_QB,
+    kvb: int = DEFAULT_KVB,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d ** -0.5 if scale is None else float(scale)
+    qb = min(qb, sq)
+    kvb = min(kvb, skv)
+    assert sq % qb == 0 and skv % kvb == 0
+    nq, nkv = sq // qb, skv // kvb
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, nkv=nkv, kvb=kvb, qb=qb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, qb, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, kvb, d), lambda bh, i, j, g=g: (bh // g, j, 0)),
+            pl.BlockSpec((1, kvb, d), lambda bh, i, j, g=g: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: MX-quantized matmul (the DPE array of the paper, §V-B,
+adapted to the MXU).
+
+Mantissas (int8) and per-block scales stream HBM->VMEM in MXU-aligned
+[128-multiple] tiles; blocks are dequantized in VMEM and hit the MXU as fp32
+dot products with fp32 accumulation in a VMEM scratch accumulator. Storage &
+bandwidth see MX compression; compute runs at MXU rates — the TPU-native
+equivalent of the paper's 2/4/8-bit DPE trees (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import BLOCK, MANTISSA_BITS, MXTensor
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _unpack_scales_k_last(e, mx, bk: int):
+    """e [bm, bk/16] int8, mx [bm, bk/16] uint8 -> eff exp [bm, bk] int32."""
+    bm = e.shape[0]
+    nb = bk // BLOCK
+    sub = jnp.arange(BLOCK // SUBBLOCK_SAFE, dtype=jnp.uint8)
+    bits = ((mx[..., None] >> sub) & 1).astype(jnp.int32)  # [bm, nb, 8]
+    eff = e.astype(jnp.int32)[..., None] - bits  # [bm, nb, 8]
+    eff = jnp.broadcast_to(eff[..., None], (bm, nb, BLOCK // 2, 2))
+    return eff.reshape(bm, bk)
+
+
+SUBBLOCK_SAFE = 2
+
+
+def _dequant_lhs(m, e, mx, mb: int):
+    eff = _unpack_scales_k_last(e, mx, m.shape[1])
+    scale = jnp.exp2(eff.astype(jnp.float32) - (mb - 1))
+    return m.astype(jnp.float32) * scale
+
+
+def _dequant_rhs(m, e, mx, mb: int):
+    """m [bk, bn]; e/mx [bk/16, bn] -> fp32 [bk, bn]."""
+    bk, bn = m.shape
+    nb = bk // BLOCK
+    row = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0)
+    sub_idx = ((row % BLOCK) // 2).astype(jnp.uint8)
+    e_rep = jnp.repeat(e.astype(jnp.int32), BLOCK, axis=0)
+    mx_rep = jnp.repeat(mx, BLOCK, axis=0)
+    bits = ((mx_rep >> sub_idx) & 1).astype(jnp.int32)
+    eff = e_rep - bits
+    scale = jnp.exp2(eff.astype(jnp.float32) - (mb - 1))
+    return m.astype(jnp.float32) * scale
+
+
+def _matmul_kernel(lm, le, lx, rm, re, rx, out_ref, acc_ref, *,
+                   mb_lhs: int, mb_rhs: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _dequant_lhs(lm[...], le[...], lx[...], mb_lhs)  # [bm, bk]
+    b = _dequant_rhs(rm[...], re[...], rx[...], mb_rhs)  # [bk, bn]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def mx_matmul(lhs: MXTensor, rhs: MXTensor, *, bm: int = DEFAULT_BM,
+              bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+              interpret: bool = False) -> jax.Array:
+    """lhs [M, K] (quantized along K), rhs [K, N] (quantized along K, i.e.
+    rhs.mantissa is [K, N] with exponents [K/16, N]) -> fp32 [M, N]."""
+    m_dim, k_dim = lhs.mantissa.shape
+    k2, n_dim = rhs.mantissa.shape
+    assert k_dim == k2, (k_dim, k2)
+    bm, bn, bk = min(bm, m_dim), min(bn, n_dim), min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0
+    assert bk % BLOCK == 0
+    nk = k_dim // bk
+    grid = (m_dim // bm, n_dim // bn, nk)
+    kernel = functools.partial(
+        _matmul_kernel, mb_lhs=MANTISSA_BITS[lhs.precision],
+        mb_rhs=MANTISSA_BITS[rhs.precision], nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk // BLOCK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk // BLOCK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // BLOCK, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // BLOCK, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(lhs.mantissa, lhs.exponent, lhs.mx_bits,
+      rhs.mantissa, rhs.exponent, rhs.mx_bits)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: FP32/BF16 -> MX quantization (the precision-conversion
+unit of the paper, §V-C).
+
+Tiles [bm, bk] HBM->VMEM; per 16-element block along the contraction (last)
+axis computes the shared exponent (max-tree), per-2 sub-block micro-exponent
+bits, and sign-magnitude mantissas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import BLOCK, EXP_MIN, MANTISSA_BITS, MXTensor, SUBBLOCK
+
+DEFAULT_BM = 128
+DEFAULT_BK = 512
+
+
+def _exponent(x):
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    return jnp.where(x == 0.0, EXP_MIN, e)
+
+
+def _quantize_kernel(x_ref, mant_ref, exp_ref, mx_ref, *, mb: int):
+    x = x_ref[...].astype(jnp.float32)  # [bm, bk]
+    bm, bk = x.shape
+    nb = bk // BLOCK
+    xb = x.reshape(bm, nb, BLOCK)
+    e = _exponent(xb)
+    e_shared = jnp.max(e, axis=-1)  # [bm, nb]
+    e_sub = jnp.max(e.reshape(bm, nb, BLOCK // SUBBLOCK, SUBBLOCK), axis=-1)
+    mx = (e_sub < e_shared[..., None]).astype(jnp.uint32)  # [bm, nb, 8]
+    weights = (1 << jnp.arange(BLOCK // SUBBLOCK, dtype=jnp.uint32))
+    mx_packed = jnp.sum(mx * weights, axis=-1).astype(jnp.uint8)
+    e_eff = (e_shared[..., None] - mx.astype(jnp.int32))  # [bm, nb, 8]
+    scale = jnp.exp2(jnp.float32(mb - 1) - e_eff.astype(jnp.float32))
+    xs = xb.reshape(bm, nb, BLOCK // SUBBLOCK, SUBBLOCK)
+    m = jnp.clip(jnp.round(jnp.abs(xs) * scale[..., None]), 0, 2 ** mb - 1)
+    m = m * jnp.sign(xs)
+    mant_ref[...] = m.reshape(bm, bk).astype(jnp.int8)
+    exp_ref[...] = e_shared.astype(jnp.int8)
+    mx_ref[...] = mx_packed
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "bm", "bk",
+                                             "interpret"))
+def mx_quantize(x: jax.Array, precision: str, *, bm: int = DEFAULT_BM,
+                bk: int = DEFAULT_BK, interpret: bool = False) -> MXTensor:
+    """x [M, K] (K % 16 == 0) -> MXTensor quantized along K."""
+    m_dim, k_dim = x.shape
+    bm = min(bm, m_dim)
+    bk = min(bk, k_dim)
+    assert k_dim % BLOCK == 0 and k_dim % bk == 0 and m_dim % bm == 0
+    grid = (m_dim // bm, k_dim // bk)
+    mant, exp, mx = pl.pallas_call(
+        functools.partial(_quantize_kernel, mb=MANTISSA_BITS[precision]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // BLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, k_dim), jnp.int8),
+            jax.ShapeDtypeStruct((m_dim, k_dim // BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((m_dim, k_dim // BLOCK), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(x)
+    return MXTensor(mant, exp, mx, precision)

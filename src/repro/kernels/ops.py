@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU backends the kernels lower natively; everywhere else (this CPU
+container, the dry-run host platform) they execute in ``interpret=True`` mode
+or fall back to the pure-jnp oracle — selected automatically, overridable via
+``REPRO_KERNEL_MODE`` in {"pallas", "interpret", "ref"}.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mx_matmul as _mm
+from repro.kernels import mx_quantize as _mq
+from repro.kernels import ref as _ref
+from repro.kernels.ref import BLOCK, MXTensor
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode != "auto":
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _pad_last(x, multiple):
+    k = x.shape[-1]
+    pad = (-k) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, pad
+
+
+def mx_quantize(x: jax.Array, precision: str) -> MXTensor:
+    """Quantize along the last axis (auto-padded to a multiple of 16)."""
+    mode = kernel_mode()
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    x2, pad = _pad_last(x2, BLOCK)
+    if mode == "ref" or x2.shape[0] % 8:
+        q = _ref.mx_quantize_ref(x2, precision)
+    else:
+        q = _mq.mx_quantize(x2, precision, interpret=(mode == "interpret"))
+    return q
+
+
+def mx_dequantize(q: MXTensor) -> jax.Array:
+    return _ref.mx_dequantize_ref(q)
+
+
+def mx_quant_dequant(x: jax.Array, precision: str) -> jax.Array:
+    """Fake-quant round trip (used by the MX training autodiff wrapper)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    x2p, pad = _pad_last(x2, BLOCK)
+    y = mx_dequantize(mx_quantize(x2p, precision))
+    if pad:
+        y = y[:, : shape[-1]]
+    return y.reshape(shape).astype(x.dtype)
+
+
+def mx_matmul(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
+              precision_b: str = "mx6") -> jax.Array:
+    """a [M, K] @ b [K, N] with both operands MX-quantized along K."""
+    mode = kernel_mode()
+    if mode == "ref":
+        return _ref.mx_matmul_fp_ref(a, b, precision_a, precision_b)
+    qa = mx_quantize(a, precision_a)
+    qb_t = mx_quantize(b.T, precision_b)
+    qb = MXTensor(qb_t.mantissa.T, qb_t.exponent.T, qb_t.mx_bits.T,
+                  qb_t.precision)
+    m, k = qa.mantissa.shape
+    n = qb.mantissa.shape[1]
+    if m % 8 or n % 128 or k % 128:
+        return _ref.mx_matmul_ref(qa, MXTensor(
+            qb.mantissa.T, qb.exponent.T, qb.mx_bits.T, qb.precision))
+    return _mm.mx_matmul(qa, qb, interpret=(mode == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Flash attention; q [B,Sq,H,D], k/v [B,Skv,Kv,D]."""
+    mode = kernel_mode()
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        softcap=softcap, scale=scale)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, q_offset=q_offset,
+                               interpret=(mode == "interpret"))

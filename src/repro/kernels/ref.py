@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+MX (micro-exponent block floating point) semantics, faithful to the paper's
+§V-B / the MX paper [19]:
+  - blocks of 16 address-adjacent values along the contraction axis share an
+    8-bit exponent E = max exponent in the block;
+  - sub-blocks of 2 values carry a 1-bit micro-exponent, set when *both*
+    exponents are < E (shifting the sub-block scale down by 1, recovering one
+    mantissa bit of precision);
+  - mantissas are sign-magnitude with 2 (MX4), 4 (MX6) or 7 (MX9) bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 16
+SUBBLOCK = 2
+MANTISSA_BITS = {"mx4": 2, "mx6": 4, "mx9": 7}
+EXP_MIN = -126
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MXTensor:
+    """Quantized tensor: blocks of 16 along the LAST axis."""
+
+    mantissa: jax.Array  # int8, same shape as source [..., K]
+    exponent: jax.Array  # int8, [..., K//16] (shared, unbiased)
+    mx_bits: jax.Array  # uint8, [..., K//16] (bit i = sub-block i flag)
+    precision: str = dataclasses.field(metadata={"static": True})
+
+
+def _exponent(x: jax.Array) -> jax.Array:
+    """Unbiased fp32 exponent, elementwise (denormals flush to EXP_MIN)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    return jnp.where(x == 0.0, EXP_MIN, e)
+
+
+def mx_quantize_ref(x: jax.Array, precision: str) -> MXTensor:
+    """Quantize along the last axis (must be divisible by 16)."""
+    mb = MANTISSA_BITS[precision]
+    *lead, k = x.shape
+    assert k % BLOCK == 0, f"last dim {k} not divisible by {BLOCK}"
+    xb = x.astype(jnp.float32).reshape(*lead, k // BLOCK, BLOCK)
+    e = _exponent(xb)
+    e_shared = jnp.max(e, axis=-1)  # [..., k/16]
+    e_sub = jnp.max(e.reshape(*lead, k // BLOCK, BLOCK // SUBBLOCK, SUBBLOCK),
+                    axis=-1)  # [..., k/16, 8]
+    mx = (e_sub < e_shared[..., None]).astype(jnp.uint8)
+    mx_packed = jnp.sum(mx.astype(jnp.uint32)
+                        * (1 << jnp.arange(BLOCK // SUBBLOCK, dtype=jnp.uint32)),
+                        axis=-1).astype(jnp.uint8)
+    e_eff = e_shared[..., None, None] - mx[..., None].astype(jnp.int32)
+    scale = jnp.exp2((mb - 1) - e_eff.astype(jnp.float32))
+    xs = xb.reshape(*lead, k // BLOCK, BLOCK // SUBBLOCK, SUBBLOCK)
+    m = jnp.clip(jnp.round(jnp.abs(xs) * scale), 0, 2 ** mb - 1)
+    m = (m * jnp.sign(xs)).astype(jnp.int8).reshape(*lead, k)
+    return MXTensor(m, e_shared.astype(jnp.int8), mx_packed, precision)
+
+
+def mx_dequantize_ref(q: MXTensor) -> jax.Array:
+    mb = MANTISSA_BITS[q.precision]
+    *lead, k = q.mantissa.shape
+    m = q.mantissa.astype(jnp.float32).reshape(
+        *lead, k // BLOCK, BLOCK // SUBBLOCK, SUBBLOCK)
+    sub = jnp.arange(BLOCK // SUBBLOCK, dtype=jnp.uint8)
+    mx = ((q.mx_bits[..., None] >> sub) & 1).astype(jnp.int32)  # [...,k/16,8]
+    e_eff = q.exponent.astype(jnp.int32)[..., None] - mx
+    x = m * jnp.exp2(e_eff[..., None].astype(jnp.float32) - (mb - 1))
+    return x.reshape(*lead, k)
+
+
+def mx_quant_dequant_ref(x: jax.Array, precision: str) -> jax.Array:
+    """Fake-quant: the numerical effect of storing x in MX."""
+    return mx_dequantize_ref(mx_quantize_ref(x, precision)).astype(x.dtype)
+
+
+def mx_matmul_ref(lhs: MXTensor, rhs: MXTensor) -> jax.Array:
+    """[M, K] @ [N, K]^T -> [M, N] fp32 (both quantized along K)."""
+    a = mx_dequantize_ref(lhs)
+    b = mx_dequantize_ref(rhs)
+    return jnp.einsum("mk,nk->mn", a, b, preferred_element_type=jnp.float32)
+
+
+def mx_matmul_fp_ref(a: jax.Array, b: jax.Array, precision_a: str,
+                     precision_b: str) -> jax.Array:
+    """fp inputs a [M,K], b [K,N] -> quantize both along K, matmul fp32."""
+    qa = mx_quantize_ref(a, precision_a)
+    qb = mx_quantize_ref(b.T, precision_b)
+    return mx_matmul_ref(qa, qb)
+
+
+# -------------------------------------------------------- flash attention ---
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """Naive masked attention oracle. q [B,Sq,H,D], k/v [B,Skv,Kv,D]."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

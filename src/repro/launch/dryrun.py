@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / roofline analysis.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); only this entry point ever sees 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out results.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import flops_per_token, supports_shape  # noqa: E402
+from repro.launch import roofline as roofline_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.sharding import make_rules  # noqa: E402
+from repro.launch.steps import build_bundle, lower_bundle  # noqa: E402
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, dump_hlo: str = None) -> dict:
+    arch = configs.get_arch(arch_name)
+    shape = configs.get_shape(shape_name)
+    if not supports_shape(arch, shape):
+        return {"arch": arch_name, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = make_rules(arch, shape, mesh)
+    t0 = time.time()
+    try:
+        bundle = build_bundle(arch, shape, mesh, rules)
+        lowered = lower_bundle(bundle, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo)
+        rf = roofline_lib.analyze(compiled, hlo, chips)
+        n_tokens = shape.global_batch * (
+            shape.seq_len if shape.kind == "train" else
+            shape.seq_len if shape.kind == "prefill" else 1)
+        model_flops = flops_per_token(arch, shape.kind == "train") * n_tokens
+        result = {
+            "arch": arch_name, "shape": shape_name,
+            "mesh": "multipod" if multi_pod else "pod",
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", 0) + getattr(
+                mem, "argument_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            "roofline": rf.to_dict(),
+            "model_flops": model_flops,
+            # rf.flops is per-device (post-SPMD HLO): useful fraction of the
+            # total compiled compute across the mesh.
+            "useful_flops_ratio": (model_flops / (rf.flops * chips))
+            if rf.flops else 0,
+        }
+        if verbose:
+            print(f"[{arch_name} x {shape_name} x "
+                  f"{'multipod' if multi_pod else 'pod'}] OK "
+                  f"compile={t_compile:.0f}s "
+                  f"mem/dev={result['bytes_per_device']/2**30:.2f}GiB "
+                  f"bottleneck={rf.bottleneck} "
+                  f"t=({rf.t_compute*1e3:.1f}, {rf.t_memory*1e3:.1f}, "
+                  f"{rf.t_collective*1e3:.1f})ms "
+                  f"useful={result['useful_flops_ratio']:.2f}",
+                  flush=True)
+        return result
+    except Exception as e:  # noqa: BLE001
+        if verbose:
+            traceback.print_exc()
+            print(f"[{arch_name} x {shape_name}] FAIL {e}", flush=True)
+        return {"arch": arch_name, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "fail", "error": str(e)[:2000]}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--out", default=None)
+    p.add_argument("--dump-hlo", default=None)
+    args = p.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch, shape, ok in configs.all_cells(include_skipped=True):
+            cells.append((arch.name, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for arch_name, shape_name in cells:
+            results.append(run_cell(arch_name, shape_name, mp,
+                                    dump_hlo=args.dump_hlo))
+            if args.out:  # incremental flush: a crash loses nothing
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

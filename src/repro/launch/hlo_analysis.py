@@ -1,0 +1,489 @@
+"""Structural HLO analyzer: per-device FLOPs / HBM traffic / collective bytes
+with while-loop trip-count multipliers.
+
+XLA's built-in ``cost_analysis`` counts a while-loop body ONCE; with
+scan-over-layers (+ microbatch scans + remat) that undercounts by the product
+of trip counts (~500x for a 60-layer model). This module parses the compiled
+(post-SPMD, per-device) HLO text into computations, builds the call graph
+(entry -> while bodies / calls / conditionals), extracts loop trip counts
+from the loop-condition compare-against-constant pattern, and accumulates:
+
+* flops            — 2*out_elems*K for every ``dot`` (contracting dims from
+                     the lhs operand shape); convolutions likewise;
+* hbm traffic      — operand+output bytes of every non-fused top-level op
+                     (each un-fused op boundary is an HBM materialization in
+                     XLA; fusion-internal ops are free);
+* collective bytes — operand bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "custom-call",
+}
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _shapes_in(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        total += math.prod(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    out_type: str
+    kind: str
+    rhs: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fusion_body: bool = False
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_NAME_RE = re.compile(r"^%?([\w.\-_]+)\s*=\s*")
+_KIND_RE = re.compile(r"([\w\-]+)(\(.*)$")
+
+
+def _balanced_prefix(s: str) -> int:
+    """Index just past the balanced paren group starting at s[0] == '('."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple type (possibly nested)
+        end = _balanced_prefix(rest)
+        out_type = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        out_type = rest[:sp]
+        rest = rest[sp + 1:]
+    m2 = _KIND_RE.match(rest)
+    if not m2:
+        return None
+    kind, rhs = m2.groups()
+    args_end = _balanced_prefix(rhs)
+    operands = []
+    inner = rhs[1: args_end - 1]
+    if inner.strip():
+        depth = 0
+        buf = ""
+        parts = []
+        for ch in inner:
+            if ch in "({[":
+                depth += 1
+            elif ch in ")}]":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append(buf)
+                buf = ""
+            else:
+                buf += ch
+        parts.append(buf)
+        for a in parts:
+            a = a.strip()
+            operands.append(a.split(" ")[-1].lstrip("%"))
+    return Op(name, out_type, kind, rhs, operands)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEAD.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is not None:
+            cur.ops.append(op)
+    return comps
+
+
+def _op_types(comp: Computation) -> Dict[str, str]:
+    return {op.name: op.out_type for op in comp.ops}
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop bound: the compare-against-constant in the loop condition (the
+    compare may be wrapped in a fusion, so take the max integer constant
+    defined in the condition computation)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.match(r"\((\d+)\)", op.rhs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_CALLEE_RE = {
+    "while": [re.compile(r"body=%?([\w.\-_]+)")],
+    "conditional": [re.compile(r"(?:true_computation|false_computation|branch_computations=\{)%?([\w.\-_]+)")],
+    "call": [re.compile(r"to_apply=%?([\w.\-_]+)")],
+    "fusion": [],  # fusion bodies' traffic is represented at the call site
+    "reduce": [], "sort": [], "scatter": [], "map": [], "reduce-window": [],
+    "select-and-scatter": [],
+}
+
+
+_FUSED_TRAFFIC_KINDS = {
+    # TPU-fusion-aware traffic model: elementwise/reduce chains fuse into
+    # producers (Pallas flash keeps the whole softmax in VMEM), so HBM
+    # traffic happens only at these boundaries.
+    "dot", "convolution", "fusion", "dynamic-slice", "dynamic-update-slice",
+    "copy", "transpose", "gather", "scatter", "concatenate", "pad",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    traffic_bytes_fused: float = 0.0
+    collective_bytes: float = 0.0
+    collective_ring_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    dot_flops_by_shape: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    traffic_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def merge_scaled(self, other: "HLOCost", k: float):
+        self.flops += other.flops * k
+        self.traffic_bytes += other.traffic_bytes * k
+        self.traffic_bytes_fused += other.traffic_bytes_fused * k
+        self.collective_bytes += other.collective_bytes * k
+        self.collective_ring_bytes += other.collective_ring_bytes * k
+        for kk, v in other.collective_by_kind.items():
+            self.collective_by_kind[kk] = \
+                self.collective_by_kind.get(kk, 0.0) + v * k
+        for kk, v in other.collective_counts.items():
+            self.collective_counts[kk] = \
+                self.collective_counts.get(kk, 0) + int(v * k)
+        for kk, v in other.dot_flops_by_shape.items():
+            self.dot_flops_by_shape[kk] = \
+                self.dot_flops_by_shape.get(kk, 0.0) + v * k
+        for kk, v in other.traffic_by_kind.items():
+            self.traffic_by_kind[kk] = \
+                self.traffic_by_kind.get(kk, 0.0) + v * k
+
+
+def _dot_flops(op: Op, types: Dict[str, str]) -> float:
+    out_shapes = _shapes_in(op.out_type)
+    if not out_shapes:
+        return 0.0
+    out_elems = math.prod(out_shapes[0][1]) if out_shapes[0][1] else 1
+    # K = product of lhs contracting dim sizes.
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+    lhs_type = types.get(op.operands[0], "") if op.operands else ""
+    lhs_shapes = _shapes_in(lhs_type)
+    k = 1
+    if m and m.group(1) and lhs_shapes:
+        dims = lhs_shapes[0][1]
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(dims):
+                k *= dims[di]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, types: Dict[str, str]) -> float:
+    out_shapes = _shapes_in(op.out_type)
+    rhs_type = types.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    rhs_shapes = _shapes_in(rhs_type)
+    if not out_shapes or not rhs_shapes:
+        return 0.0
+    out_elems = math.prod(out_shapes[0][1]) if out_shapes[0][1] else 1
+    m = re.search(r"dim_labels=\S*_(\S+?)->", op.rhs)
+    kdims = rhs_shapes[0][1]
+    feat = math.prod(kdims) / max(kdims[-1], 1) if kdims else 1
+    # kernel elems / output-feature dim ~= K per output element
+    return 2.0 * out_elems * feat
+
+
+def _group_size(rhs: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rhs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"source_target_pairs=", rhs)
+    if m:
+        return 2
+    return 2
+
+
+_ALIAS_KINDS = ("convert", "copy", "bitcast", "reshape", "transpose")
+
+
+def _fusion_param_traffic(body: Computation) -> Tuple[Dict[int, float],
+                                                      Optional[float]]:
+    """(input overrides, output override) for a fusion body.
+
+    A parameter that — following convert/copy/bitcast alias chains — is only
+    ever the *source* of dynamic-slice / gather / dynamic-update-slice ops
+    costs the slice bytes, not the full array. This covers both
+    scan-over-layers weight slicing AND XLA:CPU's bf16->f32 legalization,
+    which wraps in-place cache updates in whole-buffer convert round-trips
+    that do not exist on TPU (bf16-native). If the fusion ROOT is such a DUS
+    chain, the output traffic is likewise the update bytes (in-place write).
+    """
+    types = _op_types(body)
+    param_idx: Dict[str, int] = {}
+    for op in body.ops:
+        if op.kind == "parameter":
+            m = re.search(r"\((\d+)\)", op.rhs)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    # Alias chains: convert(param) etc. count as the param itself; select
+    # (the GSPMD sharded-DUS idiom select(in_shard?, dus(...), orig)) is a
+    # pass-through over its data operands.
+    origin: Dict[str, str] = {p: p for p in param_idx}
+    changed = True
+    while changed:
+        changed = False
+        for op in body.ops:
+            if op.name in origin:
+                continue
+            if op.kind in _ALIAS_KINDS and op.operands \
+                    and op.operands[0] in origin:
+                origin[op.name] = origin[op.operands[0]]
+                changed = True
+            elif op.kind == "select" and len(op.operands) == 3:
+                srcs = {origin.get(op.operands[1]), origin.get(op.operands[2])}
+                srcs.discard(None)
+                if len(srcs) == 1:
+                    origin[op.name] = srcs.pop()
+                    changed = True
+
+    uses: Dict[str, List[Tuple[str, int]]] = {p: [] for p in param_idx}
+    slice_bytes: Dict[str, float] = {p: 0.0 for p in param_idx}
+    root_name = body.ops[-1].name if body.ops else None
+    for op in body.ops:
+        for i, o in enumerate(op.operands):
+            if o not in origin:
+                continue
+            p = origin[o]
+            if op.kind in _ALIAS_KINDS and i == 0:
+                continue  # alias link, not a real use
+            if op.kind == "select" and i in (1, 2):
+                continue  # pass-through
+            uses[p].append((op.kind, i))
+            if op.kind in ("dynamic-slice", "gather") and i == 0:
+                slice_bytes[p] += _type_bytes(op.out_type)
+            elif op.kind == "dynamic-update-slice" and i == 0:
+                upd = op.operands[1] if len(op.operands) > 1 else None
+                ub = _type_bytes(types.get(upd, ""))
+                if ub == 0 and upd in origin:
+                    ub = 0.0
+                slice_bytes[p] += ub
+
+    overrides: Dict[int, float] = {}
+    sliceable = set()
+    for pname, ulist in uses.items():
+        if ulist and all(
+                kind in ("dynamic-slice", "gather", "dynamic-update-slice")
+                and pos == 0 for kind, pos in ulist):
+            overrides[param_idx[pname]] = slice_bytes[pname]
+            sliceable.add(pname)
+    # Output override: root is (an alias/select chain over) a DUS on a param.
+    out_override = None
+    by_name = {o.name: o for o in body.ops}
+    if root_name is not None:
+        frontier = [root_name]
+        seen = set()
+        while frontier:
+            node = frontier.pop()
+            if node in seen:
+                continue
+            seen.add(node)
+            op = by_name.get(node)
+            if op is None:
+                continue
+            if op.kind in _ALIAS_KINDS and op.operands:
+                frontier.append(op.operands[0])
+            elif op.kind == "select" and len(op.operands) == 3:
+                frontier.extend(op.operands[1:])
+            elif op.kind == "dynamic-update-slice" and op.operands and \
+                    origin.get(op.operands[0]) in sliceable:
+                upd = op.operands[1] if len(op.operands) > 1 else None
+                out_override = _type_bytes(types.get(upd, "")) or None
+    return overrides, out_override
+
+
+def analyze_computation(comp: Computation, comps: Dict[str, Computation],
+                        memo: Dict[str, HLOCost]) -> HLOCost:
+    if comp.name in memo:
+        return memo[comp.name]
+    cost = HLOCost()
+    types = _op_types(comp)
+    for op in comp.ops:
+        # --- recursion into called computations
+        if op.kind == "while":
+            body_m = re.search(r"body=%?([\w.\-]+)", op.rhs)
+            cond_m = re.search(r"condition=%?([\w.\-]+)", op.rhs)
+            if body_m and body_m.group(1) in comps:
+                trips = _trip_count(comps, cond_m.group(1)) if cond_m else 1
+                sub = analyze_computation(comps[body_m.group(1)], comps, memo)
+                cost.merge_scaled(sub, trips)
+            continue
+        if op.kind in ("call", "conditional", "async-start"):
+            for pat in (_CALLEE_RE.get(op.kind) or
+                        [re.compile(r"to_apply=%?([\w.\-_]+)")]):
+                for cm in pat.finditer(op.rhs):
+                    if cm.group(1) in comps:
+                        sub = analyze_computation(comps[cm.group(1)], comps,
+                                                  memo)
+                        cost.merge_scaled(sub, 1.0)
+            continue
+        # --- flops
+        if op.kind == "dot":
+            f = _dot_flops(op, types)
+            cost.flops += f
+            key = op.out_type
+            cost.dot_flops_by_shape[key] = \
+                cost.dot_flops_by_shape.get(key, 0.0) + f
+        elif op.kind == "convolution":
+            cost.flops += _conv_flops(op, types)
+        elif op.kind == "fusion":
+            # dots inside fusions (rare on TPU; CPU fuses aggressively).
+            body_m = re.search(r"calls=%?([\w.\-_]+)", op.rhs)
+            if body_m and body_m.group(1) in comps:
+                sub = analyze_computation(comps[body_m.group(1)], comps, memo)
+                cost.flops += sub.flops
+                # fusion-internal collectives still count:
+                cost.collective_bytes += sub.collective_bytes
+                cost.collective_ring_bytes += sub.collective_ring_bytes
+        # --- collectives
+        for kind in COLLECTIVE_KINDS:
+            if op.kind in (kind, kind + "-start"):
+                operand_bytes = sum(
+                    _type_bytes(types.get(o, "")) for o in op.operands
+                    if o in types)
+                if operand_bytes == 0.0:
+                    operand_bytes = _type_bytes(op.out_type)
+                    if kind == "all-gather":
+                        operand_bytes /= max(_group_size(op.rhs), 1)
+                ksz = _group_size(op.rhs)
+                cost.collective_bytes += operand_bytes
+                cost.collective_by_kind[kind] = \
+                    cost.collective_by_kind.get(kind, 0.0) + operand_bytes
+                cost.collective_counts[kind] = \
+                    cost.collective_counts.get(kind, 0) + 1
+                if kind == "all-gather":
+                    ring = operand_bytes * max(ksz - 1, 1)
+                elif kind == "all-reduce":
+                    ring = 2.0 * operand_bytes * (ksz - 1) / max(ksz, 1)
+                else:
+                    ring = operand_bytes * (ksz - 1) / max(ksz, 1)
+                cost.collective_ring_bytes += ring
+                break
+        # --- HBM traffic: materialized op boundaries
+        if op.kind not in _SKIP_TRAFFIC:
+            tb = _type_bytes(op.out_type)
+            overrides: Dict[int, float] = {}
+            if op.kind == "fusion":
+                body_m = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+                if body_m and body_m.group(1) in comps:
+                    overrides, out_over = _fusion_param_traffic(
+                        comps[body_m.group(1)])
+                    if out_over is not None:
+                        tb = out_over
+            elif op.kind in ("dynamic-slice", "gather"):
+                overrides = {0: _type_bytes(op.out_type)}
+            elif op.kind == "dynamic-update-slice":
+                upd_bytes = _type_bytes(
+                    types.get(op.operands[1], "")) if len(op.operands) > 1 \
+                    else 0.0
+                overrides = {0: 0.0, 1: upd_bytes}
+                tb = upd_bytes  # write slice; read of update counted below
+            for i, o in enumerate(op.operands):
+                if o not in types:
+                    continue
+                tb += overrides.get(i, _type_bytes(types[o]))
+            cost.traffic_bytes += tb
+            cost.traffic_by_kind[op.kind] = \
+                cost.traffic_by_kind.get(op.kind, 0.0) + tb
+            if op.kind in _FUSED_TRAFFIC_KINDS:
+                cost.traffic_bytes_fused += tb
+    memo[comp.name] = cost
+    return cost
+
+
+def analyze_hlo_text(text: str) -> HLOCost:
+    comps = parse_hlo(text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-_]+)", text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    return analyze_computation(comps[entry], comps, {})

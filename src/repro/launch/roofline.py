@@ -1,0 +1,192 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute    = HLO_FLOPs / (chips x 197 TFLOP/s)
+memory     = HLO_bytes / (chips x 819 GB/s)
+collective = collective_bytes / (chips x 50 GB/s)   [spec formula]
+
+collective_bytes is parsed from HLO text: the summed operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+A refined per-op ring estimate (bytes x (k-1)/k with k = replica-group size)
+is reported alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+from repro.core.estimator import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _parse_type_bytes(type_str: str) -> float:
+    """'f32[16,128]' or tuple '(f32[2], s32[4])' -> total bytes."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: Dict[str, float]
+    op_counts: Dict[str, int]
+    total_bytes: float
+    ring_bytes: float  # refined: x (k-1)/k per op
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # Pass 1: map %name -> output type string (first token after '=').
+    def_types: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        tm = _SHAPE_RE.search(rhs.split(" ")[0]) or _SHAPE_RE.search(rhs)
+        if tm:
+            # capture full leading type expression (may be a tuple)
+            paren = rhs.split("=")[0]
+            def_types[m.group(1)] = rhs.split(") ")[0] if rhs.startswith("(") \
+                else rhs.split(" ")[0]
+
+    op_bytes: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+    op_counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    ring_bytes = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        rhs = m.group(2)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue  # avoid double counting start/done pairs
+        # Operand bytes: resolve %operand names to their defined types.
+        args_m = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", rhs)
+        operand_bytes = 0.0
+        if args_m:
+            for arg in args_m.group(1).split(","):
+                arg = arg.strip().lstrip("%")
+                if arg in def_types:
+                    operand_bytes += _parse_type_bytes(def_types[arg])
+        if operand_bytes == 0.0:
+            # Fallback: use this op's own output type.
+            operand_bytes = _parse_type_bytes(rhs.split(" ")[0])
+        # Group size from replica_groups (k devices participating).
+        k_size = _group_size(rhs)
+        op_bytes[kind] += operand_bytes
+        op_counts[kind] += 1
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        if kind == "all-gather":
+            operand_ring = operand_bytes * max(k_size - 1, 1)
+        else:
+            operand_ring = operand_bytes * factor * (k_size - 1) / max(k_size, 1)
+        ring_bytes += operand_ring
+    total = sum(op_bytes.values())
+    return CollectiveStats(op_bytes, op_counts, total, ring_bytes)
+
+
+def _group_size(rhs: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rhs)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    ring_bytes: float
+    chips: int
+    peak_flops: float = TPU_PEAK_FLOPS
+    hbm_bw: float = TPU_HBM_BW
+    ici_bw: float = TPU_ICI_BW
+    collective_detail: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "ring_bytes": self.ring_bytes, "chips": self.chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int) -> Roofline:
+    """Roofline terms from the structural analyzer (hlo_analysis): the
+    compiled HLO is the per-device (post-SPMD) program, so flops/bytes are
+    per-chip directly and the 'chips x' denominators below see chips=1.
+    XLA's own cost_analysis is NOT used — it counts while bodies once
+    (~500x undercount with scan-over-layers)."""
+    from repro.launch import hlo_analysis
+
+    cost = hlo_analysis.analyze_hlo_text(hlo_text)
+    rf = Roofline(
+        flops=cost.flops, hbm_bytes=cost.traffic_bytes_fused,
+        collective_bytes=cost.collective_bytes,
+        ring_bytes=cost.collective_ring_bytes,
+        chips=1)
+    rf.collective_detail = {
+        "by_kind": cost.collective_by_kind,
+        "counts": cost.collective_counts,
+        "hbm_bytes_unfused": cost.traffic_bytes,
+    }
+    return rf

@@ -1,0 +1,79 @@
+"""Logical->mesh sharding rules per (arch x shape-kind x mesh).
+
+Scheme (DESIGN.md §5):
+  * train   — DP over ("pod","data"), FSDP(ZeRO-3) weight sharding over
+    "data", megatron TP over "model"; MoE expert-parallel over "data".
+  * prefill — batch over "data", TP over "model"; weights replicated over
+    "data" (except experts) for latency; seq-parallel attention (shard_map)
+    for archs whose head count doesn't divide the model axis.
+  * decode  — batch over "data"; KV caches SEQUENCE-sharded over "model"
+    (flash-decode combine); long_500k shards KV seq over ("data","model").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import ShardingRules, mesh_axis_size
+
+
+def heads_divisible(arch: ArchConfig, mesh: Optional[Mesh]) -> bool:
+    tp = mesh_axis_size(mesh, "model") if mesh else 1
+    return arch.num_heads % tp == 0
+
+
+def make_rules(arch: ArchConfig, shape: ShapeConfig,
+               mesh: Optional[Mesh]) -> ShardingRules:
+    if mesh is None:
+        return ShardingRules()
+    multi_pod = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi_pod else ("data",)
+    head_mode = heads_divisible(arch, mesh)
+
+    rules = ShardingRules({
+        # Weights.
+        "ff": "model",
+        "ff2": "model",
+        "vocab": "model",
+        "expert": "model",  # EP over the tensor axis (batch stays on data)
+        "expert_in": "data",  # expert d_model dim FSDP-sharded
+        "expert_ff": None,
+        "kv_heads": None,  # kv heads replicated across TP (GQA < tp)
+        "heads": "model" if head_mode else None,
+        "heads_fused": "model",  # fused h*dh always divides the TP axis
+        "kv_fused": "model",
+        "head_dim": None,
+        "layers": None,
+        # Activations.
+        "act_batch": dp,
+        "act_embed": None,
+        "act_seq": None,
+        # KV cache.
+        "kv_batch": "data",
+        "kv_seq": "model",
+    })
+
+    if shape.kind == "train":
+        rules["embed"] = "data"  # FSDP / ZeRO-3 over the data axis
+        rules["batch"] = dp
+        if not head_mode:
+            # Sequence-parallel attention (shard_map over model).
+            rules["attn_seq"] = "model"
+    else:
+        # Serving: replicate non-expert weights over data for latency
+        # (experts stay EP over data — too large to replicate).
+        rules["embed"] = None
+        rules["batch"] = ("data",)
+        if not head_mode and shape.kind == "prefill":
+            rules["attn_seq"] = "model"
+
+    if shape.kind == "decode":
+        if shape.global_batch < mesh_axis_size(mesh, "data"):
+            # long_500k: batch of 1 — shard the KV sequence over everything.
+            rules["kv_batch"] = None
+            rules["act_batch"] = None
+            rules["batch"] = None
+            rules["kv_seq"] = ("data", "model")
+    return rules

@@ -1,0 +1,251 @@
+"""Step builders: train_step / prefill_step / serve_step per (arch, shape).
+
+``abstract_inputs``/``abstract_state`` produce ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) for the dry-run; the same
+builders drive real training in launch/train.py on host meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import (
+    ShardingRules,
+    param_shapes,
+    param_specs,
+    use_rules,
+)
+from repro.models.transformer import LMModel
+from repro.training.grad import microbatched_grads
+from repro.training.optimizer import OptimizerConfig, apply_updates
+from repro.training.train_state import TrainState
+
+DEFAULT_MICROBATCHES = {"train": 16}
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything needed to lower one (arch x shape) cell."""
+
+    fn: Any  # the jittable step function
+    in_shardings: Any
+    out_shardings: Any
+    abstract_args: Tuple  # ShapeDtypeStructs matching fn's signature
+    donate_argnums: Tuple = ()  # train: state; decode: caches (in-place)
+
+
+def _sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _shape_of(defs):
+    return param_shapes(defs)
+
+
+# ------------------------------------------------------------------- inputs
+def input_specs(arch: ArchConfig, shape: ShapeConfig,
+                rules: ShardingRules) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs + their specs."""
+    b, s = shape.global_batch, shape.seq_len
+    batch_axes = rules.get("batch")
+    if shape.kind == "train":
+        if arch.input_mode == "embeddings":
+            inputs = jax.ShapeDtypeStruct((b, s, arch.d_model), jnp.bfloat16)
+            in_spec = P(batch_axes, None, None)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            in_spec = P(batch_axes, None)
+        if arch.num_output_heads > 1:
+            labels = jax.ShapeDtypeStruct((b, s, arch.num_output_heads),
+                                          jnp.int32)
+            lbl_spec = P(batch_axes, None, None)
+        else:
+            labels = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            lbl_spec = P(batch_axes, None)
+        return {"batch": {"inputs": inputs, "labels": labels},
+                "specs": {"inputs": in_spec, "labels": lbl_spec}}
+    if shape.kind == "prefill":
+        if arch.input_mode == "embeddings":
+            inputs = jax.ShapeDtypeStruct((b, s, arch.d_model), jnp.bfloat16)
+            in_spec = P(batch_axes, None, None)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            in_spec = P(batch_axes, None)
+        return {"batch": {"inputs": inputs}, "specs": {"inputs": in_spec}}
+    # decode: one new token against a cache of seq_len.
+    if arch.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct((b, 1, arch.d_model), jnp.bfloat16)
+        in_spec = P(batch_axes, None, None)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        in_spec = P(batch_axes, None)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"batch": {"inputs": inputs, "t": t},
+            "specs": {"inputs": in_spec, "t": P()}}
+
+
+# -------------------------------------------------------------------- train
+def build_train_bundle(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                       rules: ShardingRules,
+                       opt_cfg: Optional[OptimizerConfig] = None,
+                       num_microbatches: Optional[int] = None,
+                       zero2_gather: bool = False) -> StepBundle:
+    # zero2_gather measured NEGATIVE on this workload (EXPERIMENTS.md §Perf
+    # B-H2): collective -1%, memory 2x — kept as an option, off by default.
+    from repro.distributed import mesh_axis_size
+
+    model = LMModel(arch)
+    opt_cfg = opt_cfg or OptimizerConfig(name="adamw", lr=3e-4)
+    if num_microbatches is None:
+        # >100B models need small microbatches to fit gathered weights.
+        num_microbatches = 16 if arch.param_count() > 8e10 \
+            else DEFAULT_MICROBATCHES["train"] // 2
+    nmb = num_microbatches
+    dp = mesh_axis_size(mesh, rules.get("batch"))
+    nmb = max(1, min(nmb, shape.global_batch // max(dp, 1)))
+    while shape.global_batch % nmb:
+        nmb -= 1
+
+    # ZeRO-2: gather FSDP-sharded weights ONCE per step (not per microbatch
+    # per direction) and reduce-scatter grads into sharded accumulators.
+    gather_rules = ShardingRules(rules)
+    gather_rules["embed"] = None
+    gather_rules["expert_in"] = None
+
+    def train_step(state: TrainState, batch):
+        with use_rules(rules, mesh):
+            defs_in = model.param_defs()
+            fsdp_shardings = _sharding_tree(param_specs(defs_in), mesh)
+        with use_rules(gather_rules, mesh):
+            gathered_shardings = _sharding_tree(param_specs(defs_in), mesh)
+
+        if zero2_gather and nmb > 1:
+            params_g = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, state.params,
+                gathered_shardings)
+            constrain_grads = lambda g: jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, g, fsdp_shardings)
+        else:
+            params_g = state.params
+            constrain_grads = None
+
+        def loss_fn(p, b):
+            return model.loss(p, b)
+
+        loss, metrics, grads = microbatched_grads(
+            loss_fn, params_g, batch, nmb, constrain_grads=constrain_grads)
+        params, opt, om = apply_updates(
+            state.params, grads, state.opt_state, state.step, opt_cfg)
+        return (TrainState(params, opt, state.step + 1),
+                {**metrics, **om})
+
+    with use_rules(rules, mesh):
+        defs = model.param_defs()
+        p_specs = param_specs(defs)
+        state_specs = TrainState(
+            params=p_specs,
+            opt_state={"mu": p_specs, "nu": p_specs},
+            step=P())
+        p_shapes = _shape_of(defs)
+        opt_shapes = jax.tree_util.tree_map(
+            lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.float32), p_shapes)
+        state_shapes = TrainState(
+            params=p_shapes,
+            opt_state={"mu": opt_shapes, "nu": opt_shapes},
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        io = input_specs(arch, shape, rules)
+
+    state_sh = _sharding_tree(state_specs, mesh)
+    batch_sh = _sharding_tree(io["specs"], mesh)
+    metrics_sh = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        abstract_args=(state_shapes, io["batch"]),
+        donate_argnums=(0,),
+    )
+
+
+# ------------------------------------------------------------------ prefill
+def build_prefill_bundle(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                         rules: ShardingRules) -> StepBundle:
+    model = LMModel(arch)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch["inputs"],
+                                       cache_capacity=shape.seq_len)
+        return logits, caches
+
+    with use_rules(rules, mesh):
+        defs = model.param_defs()
+        p_specs = param_specs(defs)
+        p_shapes = _shape_of(defs)
+        cache_defs = model.cache_defs(shape.global_batch, shape.seq_len)
+        cache_specs = param_specs(cache_defs)
+        io = input_specs(arch, shape, rules)
+
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(_sharding_tree(p_specs, mesh),
+                      _sharding_tree(io["specs"], mesh)),
+        out_shardings=(None, _sharding_tree(cache_specs, mesh)),
+        abstract_args=(p_shapes, io["batch"]),
+    )
+
+
+# ------------------------------------------------------------------- decode
+def build_decode_bundle(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                        rules: ShardingRules) -> StepBundle:
+    model = LMModel(arch)
+
+    def serve_step(params, caches, batch):
+        logits, new_caches = model.decode_step(
+            params, batch["inputs"], batch["t"], caches)
+        return logits, new_caches
+
+    with use_rules(rules, mesh):
+        defs = model.param_defs()
+        p_specs = param_specs(defs)
+        p_shapes = _shape_of(defs)
+        cache_defs = model.cache_defs(shape.global_batch, shape.seq_len)
+        cache_specs = param_specs(cache_defs)
+        cache_shapes = _shape_of(cache_defs)
+        io = input_specs(arch, shape, rules)
+
+    cache_sh = _sharding_tree(cache_specs, mesh)
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=(_sharding_tree(p_specs, mesh), cache_sh,
+                      _sharding_tree(io["specs"], mesh)),
+        out_shardings=(None, cache_sh),
+        abstract_args=(p_shapes, cache_shapes, io["batch"]),
+        donate_argnums=(1,),
+    )
+
+
+def build_bundle(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                 rules: ShardingRules, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_bundle(arch, shape, mesh, rules, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_bundle(arch, shape, mesh, rules)
+    return build_decode_bundle(arch, shape, mesh, rules)
+
+
+def lower_bundle(bundle: StepBundle, mesh: Mesh, rules: ShardingRules):
+    """jit + lower under the mesh/rules context (dry-run entry point)."""
+    fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                 out_shardings=bundle.out_shardings,
+                 donate_argnums=bundle.donate_argnums)
+    with mesh, use_rules(rules, mesh):
+        lowered = fn.lower(*bundle.abstract_args)
+    return lowered

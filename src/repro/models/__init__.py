@@ -1,0 +1,5 @@
+from repro.models.transformer import (  # noqa: F401
+    LMModel,
+    init_cache_defs,
+    make_model,
+)

@@ -1,0 +1,417 @@
+"""GQA attention: chunked (online-softmax) flash for train/prefill, sliding
+window / local-global variants, logit softcapping, and a sequence-sharded
+flash-decode (shard_map + psum combine) for serving.
+
+Pure-jnp implementations here double as the oracles for the Pallas kernels in
+``repro.kernels`` and as the CPU-lowerable dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ParamDef, constrain, current_rules, _STATE
+from repro.models.layers import apply_rope, rope_freqs, softcap
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- params
+def attn_defs(cfg: ArchConfig):
+    """QKV/O weights stored with FUSED (heads*head_dim) output dims: the
+    fused dim is always divisible by the TP axis, so odd head counts
+    (yi-34b 56H, musicgen 24H, gemma2 8H) still shard their projection
+    weights & compute 16-ways instead of replicating (the un-fused layout
+    left 14 GiB of yi-34b attention weights replicated per device)."""
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": ParamDef((d, h * dh), ("embed", "heads_fused"), dtype=dt),
+        "wk": ParamDef((d, kv * dh), ("embed", "kv_fused"), dtype=dt),
+        "wv": ParamDef((d, kv * dh), ("embed", "kv_fused"), dtype=dt),
+        "wo": ParamDef((h * dh, d), ("heads_fused", "embed"), dtype=dt),
+    }
+
+
+def effective_window(cfg: ArchConfig, layer_idx: int) -> Optional[int]:
+    if cfg.local_global_period and cfg.is_local_layer(layer_idx):
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+def _qscale(cfg: ArchConfig) -> float:
+    return cfg.query_scale or cfg.resolved_head_dim ** -0.5
+
+
+# ----------------------------------------------------- chunked flash attention
+def _attend_block(q, k, v, mask, scale, cap):
+    """q [B,Kv,G,qb,D], k/v [B,Kv,T,D], mask [B,1,1,qb,T] -> (o, m, l) fp32."""
+    s = jnp.einsum("bkgqd,bktd->bkgqt", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    s = softcap(s, cap)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # [B,Kv,G,qb]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, Kv, D]
+    v: jax.Array,  # [B, Skv, Kv, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention, O(S·window) FLOPs for windowed layers.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (for decode-append
+    this is Skv - Sq).
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = d ** -0.5 if scale is None else scale
+    qb = min(q_block, sq)
+    n_q = math.ceil(sq / qb)
+    pad_q = n_q * qb - sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    # [nQ, B, Kv, G, qb, D]
+    qr = q.reshape(b, n_q, qb, kvh, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kt = k.transpose(0, 2, 1, 3)  # [B, Kv, Skv, D]
+    vt = v.transpose(0, 2, 1, 3)
+    kv_pos = jnp.arange(skv)
+
+    if window is not None:
+        # Static-length slice per q block: positions [i*qb - wpad, i*qb + qb).
+        wpad = window
+        kt_p = jnp.pad(kt, ((0, 0), (0, 0), (wpad, 0), (0, 0)))
+        vt_p = jnp.pad(vt, ((0, 0), (0, 0), (wpad, 0), (0, 0)))
+        pos_p = jnp.pad(kv_pos, (wpad, 0), constant_values=-10**9)
+
+        def q_step(carry, qi):
+            i, qblk = qi
+            start = i * qb  # in padded coords == i*qb - wpad in real coords
+            kblk = jax.lax.dynamic_slice_in_dim(kt_p, start, wpad + qb, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(vt_p, start, wpad + qb, axis=2)
+            pblk = jax.lax.dynamic_slice_in_dim(pos_p, start, wpad + qb, axis=0)
+            qpos = q_offset + i * qb + jnp.arange(qb)
+            mask = (pblk[None, :] <= qpos[:, None]) & (
+                pblk[None, :] > qpos[:, None] - window)
+            mask = mask[None, None, None]
+            o, m, l = _attend_block(qblk, kblk, vblk, mask, scale, logit_softcap)
+            out = o / jnp.maximum(l[..., None], 1e-30)
+            return carry, out.astype(q.dtype)
+
+        _, outs = jax.lax.scan(
+            q_step, None, (jnp.arange(n_q), qr))
+    else:
+        # Two-level flash: outer scan over q blocks, inner scan over kv
+        # blocks with online-softmax carries — peak logits memory is
+        # [B,Kv,G,qb,kv_block] regardless of sequence length.
+        kvb = min(kv_block, skv)
+        n_kv = math.ceil(skv / kvb)
+        pad_kv = n_kv * kvb - skv
+        kt_p = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vt_p = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        kr = kt_p.reshape(b, kvh, n_kv, kvb, d).transpose(2, 0, 1, 3, 4)
+        vr = vt_p.reshape(b, kvh, n_kv, kvb, d).transpose(2, 0, 1, 3, 4)
+
+        def q_step(carry, qi):
+            i, qblk = qi
+            qpos = q_offset + i * qb + jnp.arange(qb)
+
+            def kv_step(acc, kj):
+                j, kblk, vblk = kj
+                o_acc, m_acc, l_acc = acc
+                kpos = j * kvb + jnp.arange(kvb)
+                mask = kpos[None, :] < skv
+                if causal:
+                    mask &= kpos[None, :] <= qpos[:, None]
+                else:
+                    mask = jnp.broadcast_to(mask, (qb, kvb))
+                mask = mask[None, None, None]
+                o, m, l = _attend_block(qblk, kblk, vblk, mask, scale,
+                                        logit_softcap)
+                m_new = jnp.maximum(m_acc, m)
+                alpha = jnp.exp(m_acc - m_new)
+                beta = jnp.exp(m - m_new)
+                o_acc = o_acc * alpha[..., None] + o * beta[..., None]
+                l_acc = l_acc * alpha + l * beta
+                return (o_acc, m_new, l_acc), None
+
+            o0 = jnp.zeros((b, kvh, g, qb, d), jnp.float32)
+            m0 = jnp.full((b, kvh, g, qb), NEG_INF)
+            l0 = jnp.zeros((b, kvh, g, qb))
+            (o_acc, m_acc, l_acc), _ = jax.lax.scan(
+                kv_step, (o0, m0, l0), (jnp.arange(n_kv), kr, vr))
+            out = o_acc / jnp.maximum(l_acc[..., None], 1e-30)
+            return carry, out.astype(q.dtype)
+
+        _, outs = jax.lax.scan(q_step, None, (jnp.arange(n_q), qr))
+
+    # outs: [nQ, B, Kv, G, qb, D] -> [B, S, H, D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, n_q * qb, h, d)
+    return out[:, :sq]
+
+
+# ------------------------------------------------------------- decode (1 tok)
+def _local_decode(q, k, v, valid, scale, cap):
+    """q [B,Kv,G,D]; k/v [B,Kv,L,D] (head-major cache layout: the attention
+    einsums consume it directly, no per-layer [L,Kv]->[Kv,L] transposes) ->
+    partial (o, m, l) fp32.
+
+    No explicit .astype on k/v: a materialized fp32 copy of the KV cache
+    (and XLA convert chains around the cache update) tripled decode traffic;
+    fp32 accumulation comes from preferred_element_type alone."""
+    s = jnp.einsum("bkgd,bkld->bkgl", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s * scale
+    s = softcap(s, cap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgl,bkld->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def flash_decode(
+    q: jax.Array,  # [B, H, D] (one new token)
+    k_cache: jax.Array,  # [B, Kv, L, D] (L possibly sharded over axis_names)
+    v_cache: jax.Array,
+    kv_pos: jax.Array,  # [L] int32; -1 = empty slot
+    t,  # scalar int32: current position
+    *,
+    window: Optional[int],
+    logit_softcap: Optional[float],
+    scale: float,
+    axis_names: Tuple[str, ...] = (),
+) -> jax.Array:
+    """Flash-decoding: per-shard partial softmax + psum combine over the
+    sequence-sharded KV axis. With no axis_names this is plain local attention.
+    """
+    b, h, d = q.shape
+    kvh = k_cache.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    valid = (kv_pos >= 0) & (kv_pos <= t)
+    if window is not None:
+        valid &= kv_pos > t - window
+    valid = jnp.broadcast_to(valid[None, :], (b, kv_pos.shape[0]))
+    o, m, l = _local_decode(qg, k_cache, v_cache, valid, scale, logit_softcap)
+    if axis_names:
+        # Cross-shard online-softmax combine: one tiny psum per layer.
+        m_g = jax.lax.pmax(m, axis_names)
+        corr = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * corr, axis_names)
+        o = jax.lax.psum(o * corr[..., None], axis_names)
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def sharded_flash_decode(q, k_cache, v_cache, kv_pos, t, *, window,
+                         logit_softcap, scale):
+    """Dispatch flash_decode under shard_map when KV-seq sharding rules are
+    active; falls back to local computation otherwise."""
+    rules = current_rules()
+    mesh = getattr(_STATE, "mesh", None)
+    seq_axes = rules.get("kv_seq") if rules else None
+    if mesh is None or seq_axes is None:
+        return flash_decode(q, k_cache, v_cache, kv_pos, t, window=window,
+                            logit_softcap=logit_softcap, scale=scale)
+    if isinstance(seq_axes, str):
+        seq_axes = (seq_axes,)
+    batch_axes = rules.get("kv_batch")
+
+    q_spec = P(batch_axes, None, None)
+    kv_spec = P(batch_axes, None, seq_axes, None)
+    pos_spec = P(seq_axes)
+    fn = functools.partial(
+        flash_decode, window=window, logit_softcap=logit_softcap, scale=scale,
+        axis_names=tuple(seq_axes))
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, pos_spec, P()),
+        out_specs=q_spec,
+        check_vma=False,
+    )(q, k_cache, v_cache, kv_pos, t)
+
+
+def seq_parallel_flash(q, k, v, *, window, logit_softcap, scale):
+    """Context-parallel attention for archs whose heads don't divide the TP
+    axis: q/k/v are sequence-sharded over the 'attn_seq' axes; each shard
+    all-gathers K/V (tiled) and runs chunked flash on its local queries with
+    the appropriate causal offset. One all-gather of K/V per layer; query
+    compute perfectly seq-balanced (causal skew noted in DESIGN.md §5)."""
+    rules = current_rules()
+    mesh = getattr(_STATE, "mesh", None)
+    seq_axes = rules.get("attn_seq") if rules else None
+    if mesh is None or seq_axes is None:
+        return flash_attention(q, k, v, causal=True, window=window,
+                               logit_softcap=logit_softcap, scale=scale)
+    if isinstance(seq_axes, str):
+        seq_axes = (seq_axes,)
+    batch_axes = rules.get("act_batch")
+
+    def local_attn(ql, kl, vl):
+        kf = jax.lax.all_gather(kl, seq_axes, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vl, seq_axes, axis=1, tiled=True)
+        idx = jax.lax.axis_index(seq_axes[0])
+        offset = idx * ql.shape[1]
+        return flash_attention(q=ql, k=kf, v=vf, causal=True, window=window,
+                               logit_softcap=logit_softcap, scale=scale,
+                               q_offset=offset)
+
+    spec = P(batch_axes, seq_axes, None, None)
+    return jax.shard_map(local_attn, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)
+
+
+# --------------------------------------------------------------- full forward
+def cache_slot(t, capacity: int):
+    return jnp.mod(t, capacity)
+
+
+def attention_forward(
+    params,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    layer_idx: int,
+    *,
+    positions: jax.Array,  # [S] (train/prefill) or scalar t (decode)
+    mode: str,  # train | prefill | decode
+    cache: Optional[dict] = None,
+    cache_capacity: int = 0,
+):
+    window = effective_window(cfg, layer_idx)
+    scale = _qscale(cfg)
+    dh = cfg.resolved_head_dim
+
+    b, s, _ = x.shape
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    q = constrain(q, "act_batch", "act_seq", "heads_fused")
+    k = constrain(k, "act_batch", "act_seq", "kv_fused")
+    v = constrain(v, "act_batch", "act_seq", "kv_fused")
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kvh, dh)
+    v = v.reshape(b, s, kvh, dh)
+    q = constrain(q, "act_batch", "act_seq", "heads", None)
+    k = constrain(k, "act_batch", "act_seq", "kv_heads", None)
+    v = constrain(v, "act_batch", "act_seq", "kv_heads", None)
+
+    if cfg.pos == "rope":
+        sin, cos = rope_freqs(positions, dh, cfg.rope_theta)
+        if mode == "decode":
+            rq = (sin[None, None, :], cos[None, None, :])  # [1,1,D/2]
+        else:
+            rq = (sin[None, :, None, :], cos[None, :, None, :])
+        q = apply_rope(q, *rq)
+        k = apply_rope(k, *rq)
+
+    if mode == "decode":
+        # x is [B, 1, D]; insert (k, v) at slot t mod capacity, then attend.
+        t = positions
+        capacity = cache["k"].shape[2]  # [B, Kv, L, D] head-major layout
+        slot = cache_slot(t, capacity)
+        # The barrier pins the rope fp32->bf16 convert to the tiny new-token
+        # tensors; without it XLA folds the convert into the cache-update
+        # fusion and round-trips the whole stacked cache through fp32
+        # (~1 GiB/layer/token of pure convert traffic).
+        k_ins, v_ins = jax.lax.optimization_barrier(
+            (k.astype(cache["k"].dtype).transpose(0, 2, 1, 3),
+             v.astype(cache["v"].dtype).transpose(0, 2, 1, 3)))
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_ins, slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_ins, slot, axis=2)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], t[None].astype(cache["pos"].dtype), slot, axis=0)
+        out = sharded_flash_decode(
+            q[:, 0], k_cache, v_cache, kv_pos, t,
+            window=window, logit_softcap=cfg.attn_softcap, scale=scale)
+        out = out[:, None]  # [B, 1, H, D]
+        new_cache = {"k": k_cache, "v": v_cache, "pos": kv_pos}
+    else:
+        rules = current_rules()
+        if rules and rules.get("attn_seq"):
+            out = seq_parallel_flash(
+                q, k, v, window=window, logit_softcap=cfg.attn_softcap,
+                scale=scale)
+        else:
+            out = flash_attention(
+                q, k, v, causal=True, window=window,
+                logit_softcap=cfg.attn_softcap, scale=scale)
+        new_cache = None
+        if mode == "prefill":
+            capacity = cache["k"].shape[2] if cache is not None \
+                else cache_capacity  # [B, Kv, L, D]
+            new_cache = prefill_cache(cfg, k, v, window, capacity)
+
+    out = constrain(out.reshape(b, -1, h * dh),
+                    "act_batch", "act_seq", "heads_fused")
+    y = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def prefill_cache(cfg: ArchConfig, k, v, window, capacity: int):
+    """Lay out prefilled K/V into the (ring-buffer, head-major) decode cache
+    format [B, Kv, L, D]."""
+    b, s, kvh, dh = k.shape
+    if window is not None:
+        capacity = min(capacity, window)
+    dt = jnp.dtype(cfg.dtype)
+    k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)  # [B,Kv,S,D]
+    if s >= capacity:
+        # Keep last `capacity` positions at slots p mod capacity.
+        k_tail, v_tail = k[:, :, s - capacity:], v[:, :, s - capacity:]
+        shift = s % capacity
+        k_c = jnp.roll(k_tail, shift, axis=2)
+        v_c = jnp.roll(v_tail, shift, axis=2)
+        pos_tail = jnp.arange(s - capacity, s)
+        pos = jnp.roll(pos_tail, shift, axis=0)
+    else:
+        k_c = jnp.pad(k, ((0, 0), (0, 0), (0, capacity - s), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, 0), (0, capacity - s), (0, 0)))
+        pos = jnp.concatenate(
+            [jnp.arange(s), jnp.full((capacity - s,), -1, jnp.int32)])
+    return {"k": k_c.astype(dt), "v": v_c.astype(dt),
+            "pos": pos.astype(jnp.int32)}
+
+
+def attn_cache_defs(cfg: ArchConfig, layer_idx: int, batch: int, capacity: int):
+    window = effective_window(cfg, layer_idx)
+    cap = min(capacity, window) if window is not None else capacity
+    kvh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": ParamDef((batch, kvh, cap, dh),
+                      ("kv_batch", "kv_heads_cache", "kv_seq", None),
+                      init="zeros", dtype=dt),
+        "v": ParamDef((batch, kvh, cap, dh),
+                      ("kv_batch", "kv_heads_cache", "kv_seq", None),
+                      init="zeros", dtype=dt),
+        "pos": ParamDef((cap,), ("kv_seq",), init="const", scale=-1,
+                        dtype=jnp.int32),
+    }

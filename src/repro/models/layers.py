@@ -1,0 +1,102 @@
+"""Shared building blocks: norms, positions, activations, MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ParamDef, constrain
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_defs(cfg: ArchConfig, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": ParamDef((d,), (None,), init="zeros", dtype=jnp.float32)}
+    return {
+        "scale": ParamDef((d,), (None,), init="ones", dtype=jnp.float32),
+        "bias": ParamDef((d,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def apply_norm(params, x, cfg: ArchConfig):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------------- positions
+def rope_freqs(positions, head_dim: int, theta: float):
+    """positions [*(shape)] -> (sin, cos) [*shape, head_dim/2], fp32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, D]; sin/cos broadcastable [..., S, 1, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_positions(positions, d_model: int):
+    half = d_model // 2
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------------------ MLPs
+def mlp_defs(cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "ff"), dtype=dt),
+            "w_up": ParamDef((d, f), ("embed", "ff"), dtype=dt),
+            "w_down": ParamDef((f, d), ("ff", "embed"), dtype=dt),
+        }
+    if cfg.mlp == "gelu":
+        return {
+            "w_up": ParamDef((d, f), ("embed", "ff"), dtype=dt),
+            "b_up": ParamDef((f,), ("ff",), init="zeros", dtype=dt),
+            "w_down": ParamDef((f, d), ("ff", "embed"), dtype=dt),
+            "b_down": ParamDef((d,), (None,), init="zeros", dtype=dt),
+        }
+    raise ValueError(cfg.mlp)
+
+
+def mlp_forward(params, x, cfg: ArchConfig):
+    """x [B, S, D] -> [B, S, D]; intermediate sharded over 'ff'."""
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+        h = act(g) * u
+        h = constrain(h, "act_batch", "act_seq", "ff")
+        return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    h = jnp.einsum("bsd,df->bsf", x, params["w_up"]) + params["b_up"]
+    h = jax.nn.gelu(h)
+    h = constrain(h, "act_batch", "act_seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"]) + params["b_down"]

@@ -1,0 +1,119 @@
+"""Top-k Mixture-of-Experts with grouped capacity dispatch and expert
+fission (virtual experts).
+
+Two scale mechanisms (DESIGN.md §5):
+
+* **Grouped routing** — tokens route within their batch row (group = row),
+  so the dispatch/combine einsums cost ~e*c/(6*f*k) ≈ 6% of the expert FFN
+  FLOPs instead of scaling with the global token count.
+* **Expert fission** — when the expert-parallel axis doesn't divide the
+  expert count (mixtral: 8 experts on a 16-wide axis), each expert is split
+  along d_ff into r virtual experts (exact for SwiGLU: gate/up/down split
+  along f and the down-projections sum). This is the paper's row-granular
+  fission idea applied to experts; it keeps every device busy instead of
+  leaving half the axis idle under padded sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import (
+    ParamDef,
+    _STATE,
+    constrain,
+    current_rules,
+    mesh_axis_size,
+)
+
+
+def expert_split_factor(cfg: ArchConfig) -> int:
+    """Smallest r with (num_experts * r) divisible by the EP axis size."""
+    rules = current_rules()
+    mesh = getattr(_STATE, "mesh", None)
+    ep = mesh_axis_size(mesh, rules.get("expert")) if (rules and mesh) else 1
+    r = 1
+    while (cfg.num_experts * r) % ep or cfg.d_ff % r:
+        r += 1
+        if r > ep:
+            return 1
+    return r
+
+
+def moe_defs(cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    r = expert_split_factor(cfg)
+    ev, fv = e * r, f // r
+    dt = jnp.dtype(cfg.dtype)
+    # Experts shard over the tensor axis ("expert"->model), their d_model dim
+    # over the FSDP axis ("expert_in"->data) — batch parallelism stays intact
+    # through dispatch (no batch<->expert axis conflict).
+    return {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32),
+        "w_gate": ParamDef((ev, d, fv), ("expert", "expert_in", "expert_ff"),
+                           dtype=dt),
+        "w_up": ParamDef((ev, d, fv), ("expert", "expert_in", "expert_ff"),
+                         dtype=dt),
+        "w_down": ParamDef((ev, fv, d), ("expert", "expert_ff", "expert_in"),
+                           dtype=dt),
+    }
+
+
+MOE_GROUP = 512  # tokens per routing group (dispatch cost ∝ group size)
+
+
+def moe_forward(params, x: jax.Array, cfg: ArchConfig, *,
+                no_drop: bool = False):
+    """x [B, S, D] -> (y [B, S, D], aux_loss). Routing groups are
+    MOE_GROUP-token slices of each row: the dispatch/combine einsums cost
+    s*c*d with c ∝ group size, so grouping keeps them a few % of the expert
+    FFN FLOPs at 4k-32k sequence lengths."""
+    b_orig, s_orig, d = x.shape
+    gs = MOE_GROUP if (s_orig % MOE_GROUP == 0 and not no_drop) else s_orig
+    b, s = b_orig * (s_orig // gs), gs
+    x = x.reshape(b, s, d)
+    e, k = cfg.num_experts, cfg.top_k
+    ev = params["w_gate"].shape[0]
+    r = ev // e
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [b,s,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balancing aux loss (over all tokens).
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    capacity = s if no_drop else max(1, int(cfg.capacity_factor * s * k / e))
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [b,s,k,e]
+    flat = onehot.reshape(b, s * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # [b,s,k]
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=x.dtype) * keep[..., None]
+    # dispatch/combine [b, s, e, c]
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot.astype(x.dtype), pos_oh)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals.astype(x.dtype),
+                         onehot.astype(x.dtype), pos_oh)
+    if r > 1:  # expert fission: each logical expert -> r virtual experts
+        dispatch = jnp.repeat(dispatch, r, axis=2)
+        combine = jnp.repeat(combine, r, axis=2)
+
+    xe = jnp.einsum("bsd,bsec->becd", x, dispatch)  # [b, ev, c, d]
+    # batch stays data-parallel; experts shard over the tensor axis.
+    xe = constrain(xe, "act_batch", "expert", None, None)
+    g = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "act_batch", "expert", None, "expert_ff")
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    ye = constrain(ye, "act_batch", "expert", None, None)
+    y = jnp.einsum("becd,bsec->bsd", ye, combine)
+    return y.reshape(b_orig, s_orig, d), aux

@@ -1,0 +1,44 @@
+"""Unified handles for vision (CL pairs) and LM (assigned archs) models."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.configs.dacapo_pairs import VisionConfig
+from repro.models import resnet as resnet_lib
+from repro.models import vit as vit_lib
+from repro.models.transformer import LMModel
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionModel:
+    cfg: VisionConfig
+
+    def init(self, key):
+        if self.cfg.kind == "resnet":
+            return resnet_lib.init_resnet(key, self.cfg)
+        return vit_lib.init_vit(key, self.cfg)
+
+    def apply(self, params, images):
+        if self.cfg.kind == "resnet":
+            return resnet_lib.resnet_forward(params, images, self.cfg)
+        return vit_lib.vit_forward(params, images, self.cfg)
+
+    def flops(self) -> float:
+        if self.cfg.kind == "resnet":
+            return resnet_lib.resnet_flops(self.cfg)
+        return vit_lib.vit_flops(self.cfg)
+
+    def param_count(self, params) -> int:
+        return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+def make_vision_model(cfg: VisionConfig) -> VisionModel:
+    return VisionModel(cfg)
+
+
+def make_lm_model(cfg: ArchConfig) -> LMModel:
+    return LMModel(cfg)

@@ -1,0 +1,149 @@
+"""Mamba (S6) mixer — selective state-space layer in JAX.
+
+Training/prefill use a chunked scan: an outer ``lax.scan`` over sequence
+chunks carrying the SSM state (checkpointed so the backward pass recomputes
+within-chunk intermediates instead of saving [B,S,di,ds] tensors), with an
+associative scan inside each chunk for intra-chunk parallelism on the VPU.
+Decode is a single recurrent step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ParamDef, constrain
+
+MAMBA_CHUNK = 32
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def mamba_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_in_x": ParamDef((d, di), ("embed", "ff"), dtype=dt),
+        "w_in_z": ParamDef((d, di), ("embed", "ff"), dtype=dt),
+        "conv_w": ParamDef((dc, di), (None, "ff"), dtype=dt, scale=0.5),
+        "conv_b": ParamDef((di,), ("ff",), init="zeros", dtype=dt),
+        "w_bc": ParamDef((di, 2 * ds), ("ff", None), dtype=dt),
+        "w_dt_down": ParamDef((di, dtr), ("ff", None), dtype=dt),
+        "w_dt_up": ParamDef((dtr, di), (None, "ff"), dtype=dt),
+        "dt_bias": ParamDef((di,), ("ff",), init="const", scale=-4.0,
+                            dtype=jnp.float32),
+        "a_log": ParamDef((di, ds), ("ff", None), init="const", scale=0.0,
+                          dtype=jnp.float32),
+        "d_skip": ParamDef((di,), ("ff",), init="ones", dtype=jnp.float32),
+        "w_out": ParamDef((di, d), ("ff", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x, w, b, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over seq. x [B,S,di], w [dc,di]."""
+    dc = w.shape[0]
+    if conv_state is not None:  # decode: state [B, dc-1, di]
+        xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        xx = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xx[:, i:i + s] * w[i] for i in range(dc))
+    new_state = xx[:, -(dc - 1):] if dc > 1 else None
+    return y + b, new_state
+
+
+def _ssm_inputs(params, xc, cfg: ArchConfig):
+    """xc [B,S,di] -> (dA [B,S,di,ds], dBx [B,S,di,ds], y_skip)."""
+    ds = cfg.mamba_d_state
+    bc = jnp.einsum("bsd,dn->bsn", xc, params["w_bc"]).astype(jnp.float32)
+    b_in, c_in = jnp.split(bc, 2, axis=-1)  # [B,S,ds]
+    dt_low = jnp.einsum("bsd,dr->bsr", xc, params["w_dt_down"])
+    dt = jnp.einsum("bsr,rd->bsd", dt_low, params["w_dt_up"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # [B,S,di]
+    a = -jnp.exp(params["a_log"])  # [di,ds]
+    dA = jnp.exp(dt[..., None] * a)  # [B,S,di,ds]
+    dBx = dt[..., None] * b_in[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+    return dA, dBx, c_in
+
+
+def _chunk_scan(h0, dA, dBx, c_in, xc, d_skip):
+    """One chunk: associative scan over S_chunk. h0 [B,di,ds]."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = a_cum * h0[:, None] + b_cum  # [B,S,di,ds]
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_in)
+    y = y + xc.astype(jnp.float32) * d_skip
+    return h[:, -1], y
+
+
+def mamba_forward(params, x, cfg: ArchConfig, *, mode: str,
+                  cache: Optional[dict] = None):
+    """x [B,S,D] -> (y [B,S,D], new_cache)."""
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+
+    xi = jnp.einsum("bsd,de->bse", x, params["w_in_x"])
+    z = jnp.einsum("bsd,de->bse", x, params["w_in_z"])
+    xi = constrain(xi, "act_batch", "act_seq", "ff")
+
+    if mode == "decode":
+        xc, conv_state = _causal_conv(xi, params["conv_w"], params["conv_b"],
+                                      cache["conv"])
+        xc = jax.nn.silu(xc)
+        dA, dBx, c_in = _ssm_inputs(params, xc, cfg)
+        h = dA[:, 0] * cache["ssm"] + dBx[:, 0]  # [B,di,ds]
+        y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0])[:, None]
+        y = y + xc.astype(jnp.float32) * params["d_skip"]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
+    else:
+        xc, _ = _causal_conv(xi, params["conv_w"], params["conv_b"])
+        xc = jax.nn.silu(xc)
+        csz = MAMBA_CHUNK if s % MAMBA_CHUNK == 0 else s
+        n_chunks = s // csz
+
+        def body(h, xc_c):
+            # [B,csz,di,ds] intermediates live only inside this (rematted)
+            # chunk body — never [B,S,di,ds].
+            dA_c, dBx_c, cin_c = _ssm_inputs(params, xc_c, cfg)
+            return _chunk_scan(h, dA_c, dBx_c, cin_c, xc_c, params["d_skip"])
+
+        xc_chunks = xc.reshape(b, n_chunks, csz, di).swapaxes(0, 1)
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+        h_last, ys = jax.lax.scan(jax.checkpoint(body), h0, xc_chunks)
+        y = ys.swapaxes(0, 1).reshape(b, s, di)
+        new_cache = None
+        if mode == "prefill":
+            dc = cfg.mamba_d_conv
+            pad = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))[:, -(dc - 1):]
+            new_cache = {"conv": pad.astype(jnp.dtype(cfg.dtype)),
+                         "ssm": h_last}
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "act_batch", "act_seq", "ff")
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"]), new_cache
+
+
+def mamba_cache_defs(cfg: ArchConfig, batch: int):
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": ParamDef((batch, cfg.mamba_d_conv - 1, di),
+                         ("kv_batch", None, "ff"), init="zeros",
+                         dtype=jnp.dtype(cfg.dtype)),
+        "ssm": ParamDef((batch, di, cfg.mamba_d_state),
+                        ("kv_batch", "ff", None), init="zeros",
+                        dtype=jnp.float32),
+    }

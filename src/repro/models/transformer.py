@@ -1,0 +1,313 @@
+"""Composable decoder LM: Block(mixer, mlp) stacks with scan-over-layers.
+
+The layer stack is grouped by the config's repeating pattern period (dense=1,
+gemma2=2, xlstm=6, jamba=8); parameters for each period position are stacked
+[n_groups, ...] and the model scans over groups, keeping HLO size O(period)
+instead of O(num_layers). Remat is applied per group in training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ArchConfig,
+    MIXER_ATTENTION,
+    MIXER_MAMBA,
+    MIXER_MLSTM,
+    MIXER_SLSTM,
+)
+from repro.distributed import (
+    ParamDef,
+    constrain,
+    init_params,
+    param_shapes,
+    param_specs,
+    stack_defs,
+)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (
+    apply_norm,
+    mlp_defs,
+    mlp_forward,
+    norm_defs,
+    sincos_positions,
+    softcap,
+)
+
+CE_CHUNK = 1024
+
+
+# ----------------------------------------------------------------- param defs
+def _block_defs(cfg: ArchConfig, pos: int) -> Dict[str, Any]:
+    mixer = cfg.mixer_for_layer(pos)
+    defs: Dict[str, Any] = {"norm1": norm_defs(cfg, cfg.d_model)}
+    if mixer == MIXER_ATTENTION:
+        defs["mixer"] = attn.attn_defs(cfg)
+    elif mixer == MIXER_MAMBA:
+        defs["mixer"] = ssm_lib.mamba_defs(cfg)
+    elif mixer == MIXER_MLSTM:
+        defs["mixer"] = xlstm_lib.mlstm_defs(cfg)
+    elif mixer == MIXER_SLSTM:
+        defs["mixer"] = xlstm_lib.slstm_defs(cfg)
+    if cfg.post_block_norm:
+        defs["post_norm1"] = norm_defs(cfg, cfg.d_model)
+    if cfg.mlp != "none" and cfg.d_ff > 0:
+        defs["norm2"] = norm_defs(cfg, cfg.d_model)
+        defs["ffn"] = (moe_lib.moe_defs(cfg) if cfg.is_moe_layer(pos)
+                       else mlp_defs(cfg))
+        if cfg.post_block_norm:
+            defs["post_norm2"] = norm_defs(cfg, cfg.d_model)
+    return defs
+
+
+def _block_forward(bp, x, cfg: ArchConfig, pos: int, *, mode: str,
+                   positions, cache):
+    mixer = cfg.mixer_for_layer(pos)
+    h = apply_norm(bp["norm1"], x, cfg)
+    if mixer == MIXER_ATTENTION:
+        y, new_cache = attn.attention_forward(
+            bp["mixer"], h, cfg, pos, positions=positions, mode=mode,
+            cache=cache)
+    elif mixer == MIXER_MAMBA:
+        y, new_cache = ssm_lib.mamba_forward(bp["mixer"], h, cfg, mode=mode,
+                                             cache=cache)
+    elif mixer == MIXER_MLSTM:
+        y, new_cache = xlstm_lib.mlstm_forward(bp["mixer"], h, cfg, mode=mode,
+                                               cache=cache)
+    else:
+        y, new_cache = xlstm_lib.slstm_forward(bp["mixer"], h, cfg, mode=mode,
+                                               cache=cache)
+    if cfg.post_block_norm:
+        y = apply_norm(bp["post_norm1"], y, cfg)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in bp:
+        h = apply_norm(bp["norm2"], x, cfg)
+        if cfg.is_moe_layer(pos):
+            y, aux = moe_lib.moe_forward(bp["ffn"], h, cfg,
+                                         no_drop=(mode == "decode"))
+        else:
+            y = mlp_forward(bp["ffn"], h, cfg)
+        if cfg.post_block_norm:
+            y = apply_norm(bp["post_norm2"], y, cfg)
+        x = x + y
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------- model
+@dataclasses.dataclass
+class LMModel:
+    cfg: ArchConfig
+
+    @property
+    def period(self) -> int:
+        return self.cfg.pattern_period()
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.num_layers // self.period
+
+    # ----------------------------------------------------------------- params
+    def param_defs(self):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        defs: Dict[str, Any] = {
+            "embed": ParamDef((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), dtype=dt, scale=1.0),
+            "final_norm": norm_defs(cfg, cfg.d_model),
+        }
+        if cfg.pos == "learned":
+            defs["pos_embed"] = ParamDef(
+                (cfg.max_position_embeddings, cfg.d_model), (None, "embed"),
+                dtype=dt, scale=0.02)
+        if not cfg.tie_embeddings:
+            defs["head"] = ParamDef(
+                (cfg.num_output_heads, cfg.d_model, cfg.vocab_size),
+                (None, "embed", "vocab"), dtype=dt)
+        blocks = []
+        for pos in range(self.period):
+            blocks.append(stack_defs([_block_defs(self.cfg, pos)]
+                                     * self.n_groups))
+        defs["blocks"] = tuple(blocks)
+        return defs
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def param_shapes(self):
+        return param_shapes(self.param_defs())
+
+    def param_specs(self):
+        return param_specs(self.param_defs())
+
+    # ----------------------------------------------------------------- embeds
+    def embed(self, params, inputs, positions, mode: str):
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings":
+            x = inputs.astype(jnp.dtype(cfg.dtype))
+        else:
+            x = jnp.take(params["embed"], inputs, axis=0)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        if cfg.pos == "learned":
+            if mode == "decode":
+                pe = jax.lax.dynamic_index_in_dim(
+                    params["pos_embed"], positions, keepdims=True)[None]
+            else:
+                pe = params["pos_embed"][positions][None]
+            x = x + pe
+        elif cfg.pos == "sincos":
+            pos_arr = positions[None] if jnp.ndim(positions) == 0 \
+                else positions
+            x = x + sincos_positions(pos_arr, cfg.d_model)[None].astype(x.dtype)
+        return x
+
+    # ---------------------------------------------------------------- forward
+    def hidden(self, params, inputs, *, mode: str, positions,
+               caches=None, remat: bool = True):
+        """inputs: tokens [B,S] / embeds [B,S,D]; decode: [B,1]/[B,1,D]."""
+        cfg = self.cfg
+        x = self.embed(params, inputs, positions, mode)
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        period = self.period
+
+        def group_body(x, xs):
+            group_params, group_caches = xs
+            new_caches: List[Any] = []
+            aux_sum = jnp.zeros((), jnp.float32)
+            for pos in range(period):
+                cache_p = None if group_caches is None else group_caches[pos]
+                x, nc, aux = _block_forward(
+                    group_params[pos], x, cfg, pos, mode=mode,
+                    positions=positions, cache=cache_p)
+                new_caches.append(nc)
+                aux_sum = aux_sum + aux
+            if all(c is None for c in new_caches):
+                return x, (aux_sum,)
+            return x, (aux_sum, tuple(new_caches))
+
+        body = group_body
+        if remat and mode == "train":
+            body = jax.checkpoint(
+                group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (params["blocks"], caches)
+        x, ys = jax.lax.scan(body, x, xs)
+        aux_total = jnp.sum(ys[0])
+        new_caches = ys[1] if len(ys) > 1 else None
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, new_caches, aux_total
+
+    def head_matrix(self, params):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return params["embed"].T[None]  # [1, D, V]
+        return params["head"]  # [nH, D, V]
+
+    def logits(self, params, x):
+        """x [B,S,D] -> [B,S,nH,V] (nH==1 squeezed to [B,S,V])."""
+        cfg = self.cfg
+        w = self.head_matrix(params)
+        out = jnp.einsum("bsd,hdv->bshv", x, w)
+        out = softcap(out.astype(jnp.float32), cfg.final_softcap)
+        if cfg.num_output_heads == 1:
+            out = out[:, :, 0]
+        return out
+
+    # ------------------------------------------------------------------ steps
+    def loss(self, params, batch, *, remat: bool = True):
+        """batch: inputs [B,S](tokens)/[B,S,D](embeds), labels [B,S] or
+        [B,S,nH], optional mask [B,S]. Chunked-vocab CE (never materializes
+        [B,S,V] logits)."""
+        cfg = self.cfg
+        inputs, labels = batch["inputs"], batch["labels"]
+        b, s = labels.shape[:2]
+        positions = jnp.arange(s)
+        x, _, aux = self.hidden(params, inputs, mode="train",
+                                positions=positions, remat=remat)
+        w = self.head_matrix(params)  # [nH, D, V]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones((b, s), jnp.float32)
+        if labels.ndim == 2:
+            labels = labels[..., None]  # [B,S,1]
+
+        csz = CE_CHUNK if s % CE_CHUNK == 0 else s
+        n_chunks = s // csz
+
+        def to_chunks(t):
+            return t.reshape((b, n_chunks, csz) + t.shape[2:]).swapaxes(0, 1)
+
+        def ce_chunk(carry, xs):
+            xc, lc, mc = xs  # [B,csz,D], [B,csz,nH], [B,csz]
+            logits = jnp.einsum("bsd,hdv->bshv", xc, w).astype(jnp.float32)
+            logits = softcap(logits, cfg.final_softcap)
+            logits = constrain(logits, "act_batch", "act_seq", None, "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)  # [B,csz,nH]
+            picked = jnp.take_along_axis(logits, lc[..., None],
+                                         axis=-1)[..., 0]
+            nll = (lse - picked).mean(axis=-1) * mc  # [B,csz]
+            correct = (jnp.argmax(logits, axis=-1) == lc).all(-1) * mc
+            return (carry[0] + nll.sum(), carry[1] + correct.sum()), None
+
+        (nll_sum, correct), _ = jax.lax.scan(
+            ce_chunk, (jnp.zeros(()), jnp.zeros(())),
+            (to_chunks(x), to_chunks(labels), to_chunks(mask)))
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = nll_sum / denom + aux
+        metrics = {"loss": loss, "nll": nll_sum / denom, "aux": aux,
+                   "accuracy": correct / denom}
+        return loss, metrics
+
+    def prefill(self, params, inputs, *, cache_capacity: int):
+        """Run prefill; returns (last_logits [B,(nH,)V], caches)."""
+        s = inputs.shape[1]
+        positions = jnp.arange(s)
+        x, caches, _ = self.hidden(
+            params, inputs, mode="prefill", positions=positions,
+            caches=self.init_caches(inputs.shape[0], cache_capacity),
+            remat=False)
+        return self.logits(params, x[:, -1:])[:, 0], caches
+
+    def decode_step(self, params, inputs, t, caches):
+        """One token: inputs [B,1] / [B,1,D]; t scalar position."""
+        x, new_caches, _ = self.hidden(
+            params, inputs, mode="decode", positions=t, caches=caches,
+            remat=False)
+        return self.logits(params, x)[:, 0], new_caches
+
+    # ------------------------------------------------------------------ cache
+    def cache_defs(self, batch: int, capacity: int):
+        caches = []
+        for pos in range(self.period):
+            mixer = self.cfg.mixer_for_layer(pos)
+            if mixer == MIXER_ATTENTION:
+                cd = attn.attn_cache_defs(self.cfg, pos, batch, capacity)
+            elif mixer == MIXER_MAMBA:
+                cd = ssm_lib.mamba_cache_defs(self.cfg, batch)
+            elif mixer == MIXER_MLSTM:
+                cd = xlstm_lib.mlstm_cache_defs(self.cfg, batch)
+            else:
+                cd = xlstm_lib.slstm_cache_defs(self.cfg, batch)
+            caches.append(stack_defs([cd] * self.n_groups))
+        return tuple(caches)
+
+    def init_caches(self, batch: int, capacity: int):
+        return init_params(self.cache_defs(batch, capacity),
+                           jax.random.PRNGKey(0))
+
+
+def make_model(cfg: ArchConfig) -> LMModel:
+    return LMModel(cfg)
+
+
+def init_cache_defs(cfg: ArchConfig, batch: int, capacity: int):
+    return LMModel(cfg).cache_defs(batch, capacity)

@@ -1,0 +1,92 @@
+"""ViT-B/32 and ViT-B/16 (paper Table III) — compact functional ViT."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dacapo_pairs import VisionConfig
+
+
+def _dense_def(key, cin, cout):
+    return {"w": jax.random.normal(key, (cin, cout)) * cin ** -0.5,
+            "b": jnp.zeros((cout,))}
+
+
+def _dense(x, p):
+    return x @ p["w"] + p["b"]
+
+
+def _ln(x, p):
+    mean = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+
+
+def _ln_def(d):
+    return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+
+
+def init_vit(key, cfg: VisionConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    n_patches = (cfg.img_size // cfg.patch) ** 2
+    keys = iter(jax.random.split(key, 16 + 8 * cfg.num_layers))
+    params: Dict[str, Any] = {
+        "patch": _dense_def(next(keys), cfg.patch * cfg.patch * 3, d),
+        "cls": jax.random.normal(next(keys), (1, 1, d)) * 0.02,
+        "pos": jax.random.normal(next(keys), (1, n_patches + 1, d)) * 0.02,
+        "final_ln": _ln_def(d),
+        "head": _dense_def(next(keys), d, cfg.num_classes),
+    }
+    blocks = []
+    for _ in range(cfg.num_layers):
+        blocks.append({
+            "ln1": _ln_def(d),
+            "qkv": _dense_def(next(keys), d, 3 * d),
+            "proj": _dense_def(next(keys), d, d),
+            "ln2": _ln_def(d),
+            "fc1": _dense_def(next(keys), d, cfg.d_ff),
+            "fc2": _dense_def(next(keys), cfg.d_ff, d),
+        })
+    params["blocks"] = blocks
+    return params
+
+
+def vit_forward(params, images, cfg: VisionConfig):
+    """images [B,H,W,3] -> logits [B,C]."""
+    b, h, w, _ = images.shape
+    p = cfg.patch
+    x = images.reshape(b, h // p, p, w // p, p, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, (h // p) * (w // p), p * p * 3)
+    x = _dense(x, params["patch"])
+    x = jnp.concatenate([jnp.tile(params["cls"], (b, 1, 1)), x], axis=1)
+    x = x + params["pos"][:, : x.shape[1]]
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    for bp in params["blocks"]:
+        y = _ln(x, bp["ln1"])
+        qkv = _dense(y, bp["qkv"]).reshape(b, -1, 3, nh, dh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / dh ** 0.5
+        a = jax.nn.softmax(s, axis=-1)
+        y = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, -1, cfg.d_model)
+        x = x + _dense(y, bp["proj"])
+        y = _ln(x, bp["ln2"])
+        x = x + _dense(jax.nn.gelu(_dense(y, bp["fc1"])), bp["fc2"])
+    x = _ln(x, params["final_ln"])
+    return _dense(x[:, 0], params["head"])
+
+
+def vit_flops(cfg: VisionConfig) -> float:
+    n = (cfg.img_size // cfg.patch) ** 2 + 1
+    d, f = cfg.d_model, cfg.d_ff
+    per_layer = 2 * n * (4 * d * d + 2 * d * f) + 2 * 2 * n * n * d
+    total = cfg.num_layers * per_layer
+    total += 2 * n * cfg.patch * cfg.patch * 3 * d
+    total += 2 * d * cfg.num_classes
+    return total
+
+
+def vit_param_count(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,284 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation notes (documented in DESIGN.md): the mLSTM runs in a
+*chunkwise-parallel* form — inter-chunk state passing plus intra-chunk
+masked-matmul attention-like computation — so the MXU sees dense matmuls
+instead of a length-S elementwise recurrence. Numerical safety comes from a
+tanh softcap on the input-gate preactivation (exp(i)<=e^8) and sigmoid forget
+gates whose log-cumsums are <=0, replacing the paper's running-max stabilizer
+(equivalent up to gate saturation, and chunk-parallelizable).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ParamDef, constrain
+
+MLSTM_CHUNK = 256
+IGATE_CAP = 8.0
+
+
+def _heads(cfg: ArchConfig):
+    return cfg.num_heads
+
+
+# ------------------------------------------------------------------ mLSTM ---
+def mlstm_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    h = _heads(cfg)
+    dc = 4
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_in_x": ParamDef((d, di), ("embed", "ff"), dtype=dt),
+        "w_in_z": ParamDef((d, di), ("embed", "ff"), dtype=dt),
+        "conv_w": ParamDef((dc, di), (None, "ff"), dtype=dt, scale=0.5),
+        "conv_b": ParamDef((di,), ("ff",), init="zeros", dtype=dt),
+        "w_q": ParamDef((di, di), ("ff", "ff2"), dtype=dt),
+        "w_k": ParamDef((di, di), ("ff", "ff2"), dtype=dt),
+        "w_v": ParamDef((di, di), ("ff", "ff2"), dtype=dt),
+        "w_i": ParamDef((di, h), ("ff", None), dtype=jnp.float32),
+        "b_i": ParamDef((h,), (None,), init="zeros", dtype=jnp.float32),
+        "w_f": ParamDef((di, h), ("ff", None), dtype=jnp.float32),
+        "b_f": ParamDef((h,), (None,), init="const", scale=3.0,
+                        dtype=jnp.float32),
+        "gn_scale": ParamDef((di,), ("ff",), init="ones", dtype=jnp.float32),
+        "w_out": ParamDef((di, d), ("ff", "embed"), dtype=dt),
+    }
+
+
+def _mlstm_chunk(carry, qkvif):
+    """Chunkwise-parallel mLSTM. carry: (C [B,H,dv,dk], n [B,H,dk]).
+    q,k,v [B,L,H,dh] fp32; lf (log forget) / li (log input) [B,L,H]."""
+    C, n = carry
+    q, k, v, lf, li = qkvif
+    b_cum = jnp.cumsum(lf, axis=1)  # [B,L,H], <= 0, decreasing
+    w_in = jnp.exp(b_cum)  # decay from chunk start
+    # A[t,s] = (q_t . k_s) * exp(b_t - b_s + li_s) for s <= t.
+    L = q.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = b_cum[:, :, None, :] - b_cum[:, None, :, :] + li[:, None, :, :]
+    decay = jnp.where(mask[None, :, :, None], decay, -jnp.inf)
+    d_mat = jnp.exp(decay)  # [B,t,s,H] <= e^IGATE_CAP
+    qk = jnp.einsum("bthd,bshd->btsh", q, k)
+    a_mat = qk * d_mat
+    h_intra = jnp.einsum("btsh,bshd->bthd", a_mat, v)
+    h_inter = jnp.einsum("bthk,bhvk->bthv", q * w_in[..., None], C)
+    # Normalizer n_t = exp(b_t) n_prev + sum_{s<=t} exp(b_t-b_s+li_s) k_s.
+    n_intra = jnp.einsum("btsh,bshd->bthd", d_mat, k)
+    n_t = w_in[..., None] * n[:, None] + n_intra  # [B,L,H,dk]
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, q)), 1.0)
+    h = (h_intra + h_inter) / denom[..., None]
+    # State to next chunk.
+    w_end = jnp.exp(b_cum[:, -1:] - b_cum + li)  # [B,L,H]
+    C_new = jnp.exp(b_cum[:, -1])[:, :, None, None] * C + jnp.einsum(
+        "blh,blhv,blhk->bhvk", w_end, v, k)
+    n_new = jnp.exp(b_cum[:, -1])[..., None] * n + jnp.einsum(
+        "blh,blhk->bhk", w_end, k)
+    return (C_new, n_new), h
+
+
+def _mlstm_step(C, n, q, k, v, lf, li):
+    """Single decode step. q,k,v [B,H,dh]; lf/li [B,H]."""
+    f = jnp.exp(lf)[..., None, None]
+    i = jnp.exp(li)[..., None, None]
+    C_new = f * C + i * jnp.einsum("bhv,bhk->bhvk", v, k)
+    n_new = f[..., 0] * n + i[..., 0] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = jnp.einsum("bhvk,bhk->bhv", C_new, q) / denom[..., None]
+    return C_new, n_new, h
+
+
+def _group_rms(h, scale, nh):
+    """Per-head RMS norm (GroupNorm stand-in). h [..., di]."""
+    shp = h.shape
+    hh = h.reshape(shp[:-1] + (nh, shp[-1] // nh))
+    var = jnp.mean(jnp.square(hh), axis=-1, keepdims=True)
+    hh = hh * jax.lax.rsqrt(var + 1e-6)
+    return hh.reshape(shp) * scale
+
+
+def mlstm_forward(params, x, cfg: ArchConfig, *, mode: str,
+                  cache: Optional[dict] = None):
+    from repro.models.ssm import _causal_conv
+
+    b, s, d = x.shape
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = _heads(cfg)
+    dh = di // nh
+
+    xi = jnp.einsum("bsd,de->bse", x, params["w_in_x"])
+    z = jnp.einsum("bsd,de->bse", x, params["w_in_z"])
+    xi = constrain(xi, "act_batch", "act_seq", "ff")
+    conv_state = cache["conv"] if mode == "decode" else None
+    xc, new_conv = _causal_conv(xi, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xc = jax.nn.silu(xc)
+
+    def proj(w, src):
+        return jnp.einsum("bse,ef->bsf", src, w).reshape(b, -1, nh, dh)
+
+    q = proj(params["w_q"], xc).astype(jnp.float32)
+    k = (proj(params["w_k"], xc) / math.sqrt(dh)).astype(jnp.float32)
+    v = proj(params["w_v"], xi).astype(jnp.float32)
+    xc32 = xc.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xc32, params["w_f"]) + params["b_f"])
+    li = IGATE_CAP * jnp.tanh(
+        (jnp.einsum("bse,eh->bsh", xc32, params["w_i"]) + params["b_i"])
+        / IGATE_CAP)
+
+    if mode == "decode":
+        C, n, hh = _mlstm_step(cache["C"], cache["n"], q[:, 0], k[:, 0],
+                               v[:, 0], lf[:, 0], li[:, 0])
+        h = hh[:, None]  # [B,1,H,dh]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "C": C, "n": n}
+    else:
+        csz = MLSTM_CHUNK if s % MLSTM_CHUNK == 0 else s
+        nchunk = s // csz
+
+        def to_chunks(t):
+            return t.reshape((b, nchunk, csz) + t.shape[2:]).swapaxes(0, 1)
+
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        (C, n), hs = jax.lax.scan(
+            jax.checkpoint(_mlstm_chunk), (C0, n0),
+            (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(lf),
+             to_chunks(li)))
+        h = hs.swapaxes(0, 1).reshape(b, s, nh, dh)
+        new_cache = None
+        if mode == "prefill":
+            dc = params["conv_w"].shape[0]
+            pad = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))[:, -(dc - 1):]
+            new_cache = {"conv": pad.astype(jnp.dtype(cfg.dtype)),
+                         "C": C, "n": n}
+
+    h = h.reshape(b, -1, di)
+    h = _group_rms(h, params["gn_scale"], nh)
+    y = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"]), new_cache
+
+
+def mlstm_cache_defs(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = _heads(cfg)
+    dh = di // nh
+    return {
+        "conv": ParamDef((batch, 3, di), ("kv_batch", None, "ff"),
+                         init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        "C": ParamDef((batch, nh, dh, dh), ("kv_batch", None, None, None),
+                      init="zeros", dtype=jnp.float32),
+        "n": ParamDef((batch, nh, dh), ("kv_batch", None, None),
+                      init="zeros", dtype=jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ sLSTM ---
+def slstm_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    h = _heads(cfg)
+    dh = d // h
+    pf = cfg.slstm_proj_factor
+    du = int(pf * d)
+    dt = jnp.dtype(cfg.dtype)
+    defs = {}
+    for g in ("z", "i", "f", "o"):
+        defs[f"w_{g}"] = ParamDef((d, d), ("embed", "ff2"), dtype=dt)
+        defs[f"r_{g}"] = ParamDef((h, dh, dh), (None, None, None),
+                                  dtype=jnp.float32, scale=dh ** -0.5)
+        defs[f"b_{g}"] = ParamDef(
+            (d,), (None,), init="const" if g == "f" else "zeros",
+            scale=3.0 if g == "f" else None, dtype=jnp.float32)
+    defs["gn_scale"] = ParamDef((d,), (None,), init="ones", dtype=jnp.float32)
+    defs["w_up1"] = ParamDef((d, du), ("embed", "ff"), dtype=dt)
+    defs["w_up2"] = ParamDef((d, du), ("embed", "ff"), dtype=dt)
+    defs["w_down"] = ParamDef((du, d), ("ff", "embed"), dtype=dt)
+    return defs
+
+
+def _slstm_step(params, state, gates_x, nh):
+    """state: (c, n, h, m) each [B, H, dh]; gates_x: zx/ix/fx/ox [B,H,dh]."""
+    c, n, h, m = state
+    zx, ix, fx, ox = gates_x
+
+    def rec(name, prev_h):
+        return jnp.einsum("bhd,hde->bhe", prev_h, params[f"r_{name}"])
+
+    z = jnp.tanh(zx + rec("z", h))
+    it = ix + rec("i", h)
+    ft = fx + rec("f", h)
+    o = jax.nn.sigmoid(ox + rec("o", h))
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params, x, cfg: ArchConfig, *, mode: str,
+                  cache: Optional[dict] = None):
+    b, s, d = x.shape
+    nh = _heads(cfg)
+    dh = d // nh
+    x32 = x.astype(jnp.float32)
+
+    def gate_in(name):
+        g = jnp.einsum("bsd,de->bse", x, params[f"w_{name}"]).astype(
+            jnp.float32) + params[f"b_{name}"]
+        return g.reshape(b, s, nh, dh)
+
+    zx, ix, fx, ox = (gate_in(g) for g in ("z", "i", "f", "o"))
+
+    if mode == "decode":
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+        state = _slstm_step(params, state,
+                            (zx[:, 0], ix[:, 0], fx[:, 0], ox[:, 0]), nh)
+        hs = state[2][:, None]  # [B,1,H,dh]
+        new_cache = dict(zip(("c", "n", "h", "m"), state))
+    else:
+        zeros = jnp.zeros((b, nh, dh), jnp.float32)
+        state0 = (zeros, zeros, zeros, jnp.full((b, nh, dh), -1e9))
+
+        def step(state, g):
+            new = _slstm_step(params, state, g, nh)
+            return new, new[2]
+
+        state, hs = jax.lax.scan(
+            step, state0,
+            (zx.swapaxes(0, 1), ix.swapaxes(0, 1), fx.swapaxes(0, 1),
+             ox.swapaxes(0, 1)))
+        hs = hs.swapaxes(0, 1)  # [B,S,H,dh]
+        new_cache = dict(zip(("c", "n", "h", "m"), state)) \
+            if mode == "prefill" else None
+
+    h = hs.reshape(b, -1, d)
+    h = _group_rms(h, params["gn_scale"], nh)
+    h = h.astype(x.dtype)
+    # Post up/down projection (GeGLU, factor 4/3).
+    u1 = jnp.einsum("bsd,de->bse", h, params["w_up1"])
+    u2 = jnp.einsum("bsd,de->bse", h, params["w_up2"])
+    y = jax.nn.gelu(u1) * u2
+    y = constrain(y, "act_batch", "act_seq", "ff")
+    return jnp.einsum("bse,ed->bsd", y, params["w_down"]), new_cache
+
+
+def slstm_cache_defs(cfg: ArchConfig, batch: int):
+    nh = _heads(cfg)
+    dh = cfg.d_model // nh
+    def sdef(init="zeros", scale=None):
+        return ParamDef((batch, nh, dh), ("kv_batch", None, None),
+                        init=init, scale=scale, dtype=jnp.float32)
+    return {"c": sdef(), "n": sdef(), "h": sdef(),
+            "m": sdef(init="const", scale=-1e9)}

@@ -1,0 +1,7 @@
+from repro.runtime.fault import (  # noqa: F401
+    FailureInjector,
+    Heartbeat,
+    StragglerDetector,
+    resilient_loop,
+)
+from repro.runtime.elastic import reshard_tree  # noqa: F401

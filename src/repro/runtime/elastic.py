@@ -1,0 +1,37 @@
+"""Elastic scaling: reshard live state onto a different mesh.
+
+``reshard_tree`` moves a (possibly sharded) pytree onto new shardings —
+used when the pod scheduler grows/shrinks the data axis (node failure,
+preemption backfill) without restarting from a checkpoint.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def shardings_for(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def reshard_tree(tree, new_shardings):
+    """device_put every leaf onto its new sharding (handles cross-mesh
+    moves; on CPU this is a host-side reshuffle)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, new_shardings)
+
+
+def elastic_data_axis(mesh: Mesh, lost_rows: int) -> tuple:
+    """Shrink the data axis by ``lost_rows`` (failed hosts) — returns the new
+    mesh built from surviving devices, keeping the model axis intact."""
+    import numpy as np
+
+    ax = 0  # data-like axis is first by convention ("pod" or "data")
+    dev = mesh.devices
+    keep = dev.shape[ax] - lost_rows
+    if keep <= 0:
+        raise ValueError("no surviving rows")
+    new_dev = np.take(dev, range(keep), axis=ax)
+    return Mesh(new_dev, mesh.axis_names)

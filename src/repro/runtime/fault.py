@@ -1,0 +1,129 @@
+"""Fault tolerance: heartbeats, straggler detection, preemption-safe loops.
+
+On a real multi-pod deployment the Heartbeat is fed per-host via the
+coordination service; here the same logic runs single-process and is
+exercised by tests with a FailureInjector. ``resilient_loop`` is the
+production training-loop wrapper: checkpoint every N steps, restore and
+continue on failure, give up after max_restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class Heartbeat:
+    """Per-step wall-time tracker with quantile statistics."""
+
+    def __init__(self, window: int = 100):
+        self.window = window
+        self.durations: List[float] = []
+        self._last: Optional[float] = None
+
+    def beat(self) -> float:
+        now = time.monotonic()
+        dur = 0.0
+        if self._last is not None:
+            dur = now - self._last
+            self.durations.append(dur)
+            if len(self.durations) > self.window:
+                self.durations.pop(0)
+        self._last = now
+        return dur
+
+    def median(self) -> float:
+        return float(np.median(self.durations)) if self.durations else 0.0
+
+
+class StragglerDetector:
+    """Flags steps slower than ``factor`` x rolling median — the signal a
+    pod-level scheduler uses to evict/replace a slow host. Mitigation hook is
+    pluggable (default: record; production: trigger elastic re-mesh)."""
+
+    def __init__(self, factor: float = 3.0, min_samples: int = 8):
+        self.factor = factor
+        self.min_samples = min_samples
+        self.events: List[Dict] = []
+
+    def observe(self, step: int, duration: float, median: float) -> bool:
+        if median <= 0 or len(self.events) < 0:
+            pass
+        is_straggler = (median > 0 and duration > self.factor * median)
+        if is_straggler:
+            self.events.append(
+                {"step": step, "duration": duration, "median": median})
+        return is_straggler
+
+
+class FailureInjector:
+    """Deterministic failure injection for restart tests."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.failed = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.failed:
+            self.failed.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class LoopReport:
+    final_step: int
+    restarts: int
+    straggler_events: int
+    checkpointed_steps: List[int]
+
+
+def resilient_loop(
+    step_fn: Callable,  # (state, step) -> state
+    state,
+    num_steps: int,
+    checkpoint_manager,
+    checkpoint_every: int = 50,
+    max_restarts: int = 3,
+    failure_injector: Optional[FailureInjector] = None,
+    straggler_detector: Optional[StragglerDetector] = None,
+    state_like: Optional[object] = None,
+) -> tuple:
+    """Preemption-safe training loop: on failure, restore the last complete
+    checkpoint and continue. Returns (state, LoopReport)."""
+    hb = Heartbeat()
+    sd = straggler_detector or StragglerDetector()
+    restarts = 0
+    saved_steps: List[int] = []
+    step = 0
+    # Resume if a checkpoint exists.
+    latest = checkpoint_manager.latest_step()
+    if latest is not None:
+        state, manifest = checkpoint_manager.restore(
+            latest, state_like if state_like is not None else state)
+        step = int(manifest["step"])
+
+    while step < num_steps:
+        try:
+            if failure_injector is not None:
+                failure_injector.maybe_fail(step)
+            state = step_fn(state, step)
+            dur = hb.beat()
+            sd.observe(step, dur, hb.median())
+            step += 1
+            if step % checkpoint_every == 0:
+                checkpoint_manager.save(step, state, blocking=True)
+                saved_steps.append(step)
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            latest = checkpoint_manager.latest_step()
+            if latest is not None:
+                state, manifest = checkpoint_manager.restore(
+                    latest, state_like if state_like is not None else state)
+                step = int(manifest["step"])
+            else:
+                step = 0
+    return state, LoopReport(step, restarts, len(sd.events), saved_steps)

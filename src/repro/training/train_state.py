@@ -1,0 +1,41 @@
+"""Train state container + sharding-spec derivation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import param_specs
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params, opt_cfg: OptimizerConfig) -> "TrainState":
+        return cls(params=params,
+                   opt_state=init_opt_state(params, opt_cfg),
+                   step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(param_defs) -> TrainState:
+    """PartitionSpec tree mirroring TrainState (moments shard like params)."""
+    p_specs = param_specs(param_defs)
+    return TrainState(
+        params=p_specs,
+        opt_state={"mu": p_specs, "nu": p_specs},
+        step=P(),
+    )
+
+
+def train_state_specs_sgd(param_defs) -> TrainState:
+    p_specs = param_specs(param_defs)
+    return TrainState(params=p_specs, opt_state={"mu": p_specs}, step=P())

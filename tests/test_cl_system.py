@@ -1,0 +1,90 @@
+"""End-to-end continuous-learning integration (small budget)."""
+import numpy as np
+import pytest
+
+from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.cl_system import ContinuousLearningSystem, pretrain_model
+from repro.core.scheduler import CLHyperParams
+from repro.data.stream import DriftStream, Segment, scenario
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    stream = DriftStream(scenario("S1", 4), seed=0, img=24)
+    hp = CLHyperParams(n_t=64, n_l=32, c_b=256, epochs=1)
+    sys_ = ContinuousLearningSystem(
+        RESNET18, WIDERESNET50, hp=hp, apply_mx_numerics=False,
+        eval_fps=0.5)
+    rng = np.random.default_rng(0)
+    t_params = pretrain_model(sys_.teacher, stream, steps=40, batch=32,
+                              rng=rng)
+    s_params = pretrain_model(sys_.student, stream, steps=25, batch=32,
+                              rng=rng, segments=stream.segments[:1], seed=8)
+    return stream, hp, t_params, s_params
+
+
+def _make(stream, hp, t_params, s_params, allocator):
+    sys_ = ContinuousLearningSystem(
+        RESNET18, WIDERESNET50, hp=hp, allocator=allocator,
+        apply_mx_numerics=False, eval_fps=0.5)
+    sys_.set_pretrained(t_params, s_params)
+    return sys_
+
+
+def test_cl_system_runs_and_improves(small_setup):
+    stream, hp, tp, sp = small_setup
+    sys_ = _make(stream, hp, tp, sp, "dacapo-spatiotemporal")
+    res = sys_.run(stream, duration=120.0)
+    assert res.avg_accuracy > 0.3  # far above random (1/8)
+    assert len(res.phase_log) >= 2
+    assert res.retrain_time > 0 and res.label_time > 0
+    # timeline is monotone in t
+    ts = [t for t, _ in res.accuracy_timeline]
+    assert ts == sorted(ts)
+
+
+def test_spatial_allocation_sized_for_fps(small_setup):
+    stream, hp, tp, sp = small_setup
+    sys_ = _make(stream, hp, tp, sp, "dacapo-spatial")
+    assert 1 <= sys_.r_bsa < sys_.estimator.total_rows
+    assert sys_.r_tsa + sys_.r_bsa == sys_.estimator.total_rows
+
+
+def test_drift_detection_fires_on_hard_drift(small_setup):
+    stream, hp, tp, sp = small_setup
+    sys_ = _make(stream, hp, tp, sp, "dacapo-spatiotemporal")
+    res = sys_.run(stream, duration=150.0)
+    # S1 flips label distribution every 60 s; at least one drift should fire.
+    assert res.drift_events >= 1
+
+
+def test_spatiotemporal_labels_more_than_spatial_on_drift(small_setup):
+    stream, hp, tp, sp = small_setup
+    st_res = _make(stream, hp, tp, sp, "dacapo-spatiotemporal").run(
+        stream, duration=150.0)
+    s_res = _make(stream, hp, tp, sp, "dacapo-spatial").run(
+        stream, duration=150.0)
+    if st_res.drift_events:
+        # drift -> boosted labeling (N_ldd) shifts the time breakdown
+        st_frac = st_res.label_time / max(
+            st_res.label_time + st_res.retrain_time, 1e-9)
+        s_frac = s_res.label_time / max(
+            s_res.label_time + s_res.retrain_time, 1e-9)
+        assert st_frac >= s_frac - 0.05
+
+
+def test_all_schedulers_run(small_setup):
+    stream, hp, tp, sp = small_setup
+    for name in ("ekya", "eomu"):
+        res = _make(stream, hp, tp, sp, name).run(stream, duration=90.0)
+        assert res.avg_accuracy > 0.15, name
+
+
+def test_mx_numerics_path(small_setup):
+    """MX6 serving quantization runs end-to-end (short)."""
+    stream, hp, tp, sp = small_setup
+    sys_ = ContinuousLearningSystem(
+        RESNET18, WIDERESNET50, hp=hp, apply_mx_numerics=True, eval_fps=0.5)
+    sys_.set_pretrained(tp, sp)
+    res = sys_.run(stream, duration=45.0)
+    assert res.avg_accuracy > 0.15

@@ -1,0 +1,86 @@
+"""Drift stream: determinism, scenario structure, drift effects."""
+import numpy as np
+import pytest
+
+from repro.data.stream import DriftStream, SCENARIOS, Segment, scenario
+from repro.data.tokens import TokenPipeline
+
+
+def test_stream_deterministic():
+    s1 = DriftStream(scenario("S1", 4), seed=3)
+    s2 = DriftStream(scenario("S1", 4), seed=3)
+    x1, y1 = s1.frames(10.0, 12.0)
+    x2, y2 = s2.frames(10.0, 12.0)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_different_seeds_differ():
+    x1, _ = DriftStream(scenario("S1", 2), seed=0).frames(0, 1)
+    x2, _ = DriftStream(scenario("S1", 2), seed=1).frames(0, 1)
+    assert not np.allclose(x1, x2)
+
+
+def test_all_scenarios_build():
+    for name in SCENARIOS:
+        segs = scenario(name)
+        assert len(segs) == 20
+        stream = DriftStream(segs)
+        assert stream.duration == pytest.approx(1200.0)  # 20 min (§VII-A)
+
+
+def test_scenario_s1_flips_label_dist_only():
+    segs = scenario("S1", 4)
+    assert [s.label_dist for s in segs] == ["traffic", "all"] * 2
+    assert len({s.time_of_day for s in segs}) == 1
+    assert len({s.location for s in segs}) == 1
+
+
+def test_extreme_scenario_flips_all_axes():
+    segs = scenario("ES1", 16)
+    assert len({s.label_dist for s in segs}) == 2
+    assert len({s.time_of_day for s in segs}) == 2
+    assert len({s.location for s in segs}) == 2
+    assert len({s.weather for s in segs}) == 2
+
+
+def test_traffic_segments_restrict_classes():
+    stream = DriftStream([Segment(label_dist="traffic")], seed=0)
+    _, y = stream.frames(0, 30)
+    assert set(np.unique(y)) <= {0, 1, 2, 3, 4}
+    stream2 = DriftStream([Segment(label_dist="all")], seed=0)
+    _, y2 = stream2.frames(0, 30)
+    assert len(np.unique(y2)) > 5
+
+
+def test_night_darkens_frames():
+    day = DriftStream([Segment(time_of_day="day")], seed=5)
+    night = DriftStream([Segment(time_of_day="night")], seed=5)
+    xd, _ = day.frames(0, 5)
+    xn, _ = night.frames(0, 5)
+    assert np.mean(np.abs(xn[..., :2])) < np.mean(np.abs(xd[..., :2]))
+
+
+def test_max_frames_subsample():
+    stream = DriftStream(scenario("S2", 2))
+    x, y = stream.frames(0, 10, max_frames=7)
+    assert len(x) == 7 and len(y) == 7
+
+
+def test_token_pipeline_deterministic_and_learnable():
+    pipe = TokenPipeline(vocab_size=64, seq_len=32, global_batch=4, seed=1)
+    b1, b2 = pipe.batch(5), pipe.batch(5)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    assert b1["inputs"].shape == (4, 32)
+    # bigram structure: every (tok -> next) pair is one of 4 successors
+    succ = pipe._succ
+    ok = succ[b1["inputs"].reshape(-1)] == b1["labels"].reshape(-1)[:, None]
+    assert ok.any(axis=-1).all()
+
+
+def test_token_pipeline_host_sharding():
+    full = TokenPipeline(64, 16, 8, seed=2)
+    h0 = TokenPipeline(64, 16, 8, seed=2, num_hosts=2, host_index=0)
+    h1 = TokenPipeline(64, 16, 8, seed=2, num_hosts=2, host_index=1)
+    assert h0.local_batch == 4 and h1.local_batch == 4
+    assert not np.array_equal(h0.batch(0)["inputs"], h1.batch(0)["inputs"])

@@ -1,0 +1,112 @@
+"""Pallas flash-attention kernel: shape/dtype sweep vs the pure-jnp oracle,
+plus the chunked-jnp model attention vs the oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.models.attention import flash_attention as fa_chunked
+from repro.models.attention import flash_decode
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kv,d", [
+    (1, 128, 128, 4, 4, 64),   # MHA
+    (2, 128, 128, 8, 2, 64),   # GQA
+    (1, 256, 256, 4, 1, 32),   # MQA
+    (2, 64, 64, 4, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_sweep(b, sq, skv, h, kv, d, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(keys[1], (b, skv, kv, d), dtype)
+    v = jax.random.normal(keys[2], (b, skv, kv, d), dtype)
+    out = fa_kernel(q, k, v, causal=True, interpret=True, qb=64, kvb=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_flash_kernel_window_softcap(window, softcap):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (1, 256, 4, 32))
+    k = jax.random.normal(keys[1], (1, 256, 2, 32))
+    v = jax.random.normal(keys[2], (1, 256, 2, 32))
+    out = fa_kernel(q, k, v, causal=True, window=window, softcap=softcap,
+                    interpret=True, qb=64, kvb=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                     softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 16, 48])
+def test_chunked_jnp_attention_matches_oracle(window):
+    """The model's scan-based flash (dry-run path) == the naive oracle."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (2, 96, 8, 32))
+    k = jax.random.normal(keys[1], (2, 96, 2, 32))
+    v = jax.random.normal(keys[2], (2, 96, 2, 32))
+    out = fa_chunked(q, k, v, causal=True, window=window, q_block=32)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_decode_matches_full_attention():
+    """Single-token flash-decode == last row of full attention."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, h, kv, d = 2, 64, 8, 4, 32
+    q_all = jax.random.normal(keys[0], (b, s, h, d))
+    k = jax.random.normal(keys[1], (b, s, kv, d))
+    v = jax.random.normal(keys[2], (b, s, kv, d))
+    expect = ref.flash_attention_ref(q_all, k, v, causal=True)[:, -1]
+    kv_pos = jnp.arange(s)
+    out = flash_decode(q_all[:, -1], k.transpose(0, 2, 1, 3),
+                       v.transpose(0, 2, 1, 3), kv_pos, jnp.asarray(s - 1),
+                       window=None, logit_softcap=None, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_decode_ring_buffer_semantics():
+    """Slots with pos outside the window are masked out."""
+    b, L, kv, d, h = 1, 8, 1, 16, 2
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(keys[0], (b, h, d))
+    k = jax.random.normal(keys[1], (b, kv, L, d))  # head-major cache
+    v = jax.random.normal(keys[2], (b, kv, L, d))
+    kv_pos = jnp.array([16, 9, 10, 11, 12, 13, 14, 15])  # ring at t=16
+    out_w4 = flash_decode(q, k, v, kv_pos, jnp.asarray(16), window=4,
+                          logit_softcap=None, scale=d ** -0.5)
+    # manual: only pos in (12, 16] valid -> slots 0 (16), 5..7 (13,14,15)
+    s = jnp.einsum("bhd,bld->bhl", q, k[:, 0]) * d ** -0.5
+    valid = (kv_pos > 12) & (kv_pos <= 16)
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    expect = jnp.einsum("bhl,bld->bhd", p, v[:, 0])
+    np.testing.assert_allclose(np.asarray(out_w4), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_kernel_flop_scaling_window():
+    """Windowed flash does O(S*W) work: HLO flops must shrink with W."""
+    from repro.launch.hlo_analysis import analyze_hlo_text
+
+    def lower_flops(window):
+        q = jax.ShapeDtypeStruct((1, 1024, 4, 32), jnp.float32)
+        k = jax.ShapeDtypeStruct((1, 1024, 2, 32), jnp.float32)
+        fn = lambda q, k, v: fa_chunked(q, k, v, causal=True, window=window,
+                                        q_block=128)
+        text = jax.jit(fn).lower(q, k, k).compile().as_text()
+        return analyze_hlo_text(text).flops
+
+    full = lower_flops(None)
+    win = lower_flops(128)
+    assert win < full * 0.5, (win, full)

@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced configs): fwd/train-step shapes + no NaNs,
+prefill->decode consistency, and the Table III vision models."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.dacapo_pairs import TABLE_III, VISION_MODELS
+from repro.models.registry import make_vision_model
+from repro.models.transformer import make_model
+
+ARCH_NAMES = sorted(configs.ARCHS)
+
+
+def _batch(cfg, key, b=2, s=32):
+    if cfg.input_mode == "embeddings":
+        inputs = jax.random.normal(key, (b, s, cfg.d_model))
+    else:
+        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.num_output_heads > 1:
+        labels = jax.random.randint(key, (b, s, cfg.num_output_heads), 0,
+                                    cfg.vocab_size)
+    else:
+        labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_forward_and_train_step(name):
+    cfg = configs.ARCHS[name].reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), name
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), name
+    # Output head shapes.
+    x, _, _ = model.hidden(params, batch["inputs"], mode="prefill",
+                           positions=jnp.arange(32),
+                           caches=model.init_caches(2, 32), remat=False)
+    logits = model.logits(params, x)
+    if cfg.num_output_heads > 1:
+        assert logits.shape == (2, 32, cfg.num_output_heads, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 32, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_consistency(name):
+    cfg = configs.ARCHS[name].reduced()
+    over = {}
+    if cfg.sliding_window:
+        over["sliding_window"] = 8
+    if cfg.local_window:
+        over["local_window"] = 8
+    if cfg.num_experts:
+        over["capacity_factor"] = 16.0  # no token drops -> exact equality
+    cfg = dataclasses.replace(cfg, **over)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    key = jax.random.PRNGKey(1)
+    if cfg.input_mode == "embeddings":
+        full = jax.random.normal(key, (b, s + 1, cfg.d_model))
+    else:
+        full = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    x, _, _ = model.hidden(params, full, mode="prefill",
+                           positions=jnp.arange(s + 1),
+                           caches=model.init_caches(b, s + 1), remat=False)
+    ref = model.logits(params, x[:, -1:])[:, 0]
+    _, caches = model.prefill(params, full[:, :s], cache_capacity=s + 1)
+    out, _ = model.decode_step(params, full[:, s:s + 1], jnp.asarray(s),
+                               caches)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_multi_token_decode_matches_prefill():
+    """Decode 4 tokens sequentially == prefill of the longer sequence."""
+    cfg = configs.ARCHS["yi-6b"].reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, extra = 2, 12, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + extra), 0,
+                              cfg.vocab_size)
+    _, caches = model.prefill(params, toks[:, :s], cache_capacity=s + extra)
+    outs = []
+    for i in range(extra):
+        logits, caches = model.decode_step(
+            params, toks[:, s + i: s + i + 1], jnp.asarray(s + i), caches)
+        outs.append(logits)
+    x, _, _ = model.hidden(params, toks, mode="prefill",
+                           positions=jnp.arange(s + extra),
+                           caches=model.init_caches(b, s + extra),
+                           remat=False)
+    ref = model.logits(params, x)
+    for i, got in enumerate(outs):
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref[:, s + i]),
+                                   rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_vision_param_counts_match_table3(name):
+    cfg = VISION_MODELS[name]
+    m = make_vision_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    n = m.param_count(params)
+    ref_n, _ = TABLE_III[name]
+    assert abs(n - ref_n) / ref_n < 0.02, (name, n, ref_n)
+
+
+@pytest.mark.parametrize("name", ["resnet18", "vit-b32"])
+def test_vision_forward(name):
+    cfg = VISION_MODELS[name].reduced()
+    m = make_vision_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (2, cfg.img_size, cfg.img_size, 3))
+    out = m.apply(params, x)
+    assert out.shape == (2, cfg.num_classes)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_param_count_analytic_close_to_actual():
+    for name in ("yi-6b", "gemma2-2b", "mixtral-8x7b"):
+        cfg = configs.ARCHS[name].reduced()
+        model = make_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(p.size for p in jax.tree_util.tree_leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.06, (name, actual,
+                                                        analytic)

@@ -1,0 +1,136 @@
+"""MX format: kernel-vs-oracle equivalence sweeps + hypothesis invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.mx_matmul import mx_matmul as mx_matmul_kernel
+from repro.kernels.mx_quantize import mx_quantize as mx_quantize_kernel
+from repro.kernels.ref import BLOCK, MANTISSA_BITS, MXTensor
+
+PRECISIONS = ("mx4", "mx6", "mx9")
+
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+@pytest.mark.parametrize("shape", [(8, 16), (32, 64), (128, 512), (16, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_kernel_matches_ref(precision, shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 5.0).astype(dtype)
+    qk = mx_quantize_kernel(x.astype(jnp.float32), precision, interpret=True)
+    qr = ref.mx_quantize_ref(x.astype(jnp.float32), precision)
+    np.testing.assert_array_equal(qk.mantissa, qr.mantissa)
+    np.testing.assert_array_equal(qk.exponent, qr.exponent)
+    np.testing.assert_array_equal(qk.mx_bits, qr.mx_bits)
+
+
+@pytest.mark.parametrize("precision,max_rel", [("mx4", 0.35), ("mx6", 0.09),
+                                               ("mx9", 0.012)])
+def test_quantization_error_bounds(precision, max_rel):
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 256)) * 3.0
+    y = ref.mx_quant_dequant_ref(x, precision)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < max_rel, (precision, rel)
+
+
+@pytest.mark.parametrize("mnk", [(8, 128, 128), (128, 256, 128),
+                                 (64, 512, 384)])
+@pytest.mark.parametrize("pa,pb", [("mx9", "mx9"), ("mx6", "mx6"),
+                                   ("mx9", "mx6")])
+def test_matmul_kernel_matches_ref(mnk, pa, pb):
+    m, k, n = mnk
+    a = jax.random.normal(jax.random.PRNGKey(2), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(3), (k, n))
+    qa = ref.mx_quantize_ref(a, pa)
+    qbt = ref.mx_quantize_ref(b.T, pb)
+    qb = MXTensor(qbt.mantissa.T, qbt.exponent.T, qbt.mx_bits.T, pb)
+    out_k = mx_matmul_kernel(qa, qb, interpret=True, bk=128)
+    out_r = ref.mx_matmul_ref(qa, qbt)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_mx9_matmul_accuracy_vs_fp32():
+    a = jax.random.normal(jax.random.PRNGKey(4), (64, 256))
+    b = jax.random.normal(jax.random.PRNGKey(5), (256, 64))
+    out = ref.mx_matmul_fp_ref(a, b, "mx9", "mx9")
+    rel = float(jnp.linalg.norm(out - a @ b) / jnp.linalg.norm(a @ b))
+    assert rel < 0.02
+
+
+# ------------------------------------------------------------- properties --
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    data=st.lists(
+        st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                  width=32),
+        min_size=BLOCK, max_size=BLOCK),
+    precision=st.sampled_from(PRECISIONS))
+def test_dequant_error_bounded_per_block(data, precision):
+    """|x - dq(q(x))| <= 2^(E - mx) * 2^-(mb-1) / 2 per element (half ULP
+    of the block scale)."""
+    x = jnp.asarray(data, jnp.float32)[None, :]
+    q = ref.mx_quantize_ref(x, precision)
+    y = ref.mx_dequantize_ref(q)
+    mb = MANTISSA_BITS[precision]
+    scale = jnp.exp2(q.exponent.astype(jnp.float32))  # block scale
+    bound = float(scale[0, 0]) * 2.0 ** (-(mb - 1)) * 0.5 + 1e-6
+    err = np.max(np.abs(np.asarray(y - x)))
+    assert err <= bound * 1.001, (err, bound)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    seed=st.integers(0, 2**16),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    precision=st.sampled_from(PRECISIONS))
+def test_quantize_idempotent(seed, scale, precision):
+    """Quantizing an already-quantized tensor is exact (fixed point)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * scale
+    y1 = ref.mx_quant_dequant_ref(x, precision)
+    y2 = ref.mx_quant_dequant_ref(y1, precision)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**16),
+                  precision=st.sampled_from(PRECISIONS))
+def test_quantize_sign_and_zero(seed, precision):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 32))
+    x = x.at[:, :4].set(0.0)
+    q = ref.mx_quantize_ref(x, precision)
+    y = ref.mx_dequantize_ref(q)
+    assert np.all(np.asarray(y[:, :4]) == 0.0)
+    nz = np.asarray(x) != 0
+    assert np.all(np.sign(np.asarray(y))[nz] * np.sign(np.asarray(x))[nz]
+                  >= 0)
+
+
+def test_mx_dense_gradient_flows():
+    from repro.core.mx import mx_dense
+
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(7), (32, 16))
+
+    def loss(w):
+        return jnp.sum(mx_dense(x, w, "mx9", "mx9") ** 2)
+
+    g = jax.grad(loss)(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    # Gradient should be close to the fp32 gradient (mx9 ~ 0.5% error).
+    g_ref = jax.grad(lambda w: jnp.sum((x @ w) ** 2))(w)
+    rel = float(jnp.linalg.norm(g - g_ref) / jnp.linalg.norm(g_ref))
+    assert rel < 0.05, rel
+
+
+def test_quantize_tree_only_touches_matrices():
+    from repro.core.mx import quantize_tree
+
+    params = {"w": jnp.ones((64, 64)), "b": jnp.ones((64,)),
+              "step": jnp.zeros((), jnp.int32)}
+    q = quantize_tree(params, "mx6", min_size=16)
+    np.testing.assert_array_equal(q["b"], params["b"])
+    np.testing.assert_array_equal(q["step"], params["step"])
+    assert q["w"].shape == params["w"].shape

@@ -1,0 +1,88 @@
+"""Optimizer + grad machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.grad import compress_int8, microbatched_grads
+from repro.training.optimizer import (
+    OptimizerConfig,
+    apply_updates,
+    init_opt_state,
+    schedule,
+)
+
+
+@pytest.mark.parametrize("name", ["sgd", "adamw"])
+def test_optimizer_converges_quadratic(name):
+    cfg = OptimizerConfig(name=name, lr=0.1, warmup_steps=0,
+                          total_steps=200, grad_clip=0.0, min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params, cfg)
+    for step in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw w^2
+        params, state, _ = apply_updates(params, grads, state, step, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(schedule(0, cfg)) < 0.2
+    assert float(schedule(10, cfg)) == pytest.approx(1.0, abs=0.05)
+    assert float(schedule(99, cfg)) < 0.2
+
+
+def test_grad_clip():
+    cfg = OptimizerConfig(name="sgd", lr=1.0, grad_clip=1.0,
+                          warmup_steps=0, min_lr_ratio=1.0)
+    params = {"w": jnp.zeros((3,))}
+    state = init_opt_state(params, cfg)
+    grads = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+    new_params, _, metrics = apply_updates(params, grads, state, 0, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(100.0)
+    assert float(jnp.abs(new_params["w"]).max()) <= 1.0 + 1e-5
+
+
+def test_microbatched_grads_match_full_batch():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (8, 4))
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    y = jax.random.normal(jax.random.PRNGKey(2), (16, 4))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, {"loss": loss}
+
+    batch = {"x": x, "y": y}
+    l1, m1, g1 = microbatched_grads(loss_fn, w, batch, 1)
+    l4, m4, g4 = microbatched_grads(loss_fn, w, batch, 4)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g4), rtol=1e-5)
+
+
+def test_int8_compression_error_feedback():
+    g = jnp.asarray([1.0, -0.503, 0.2501, 0.001])
+    err = jnp.zeros_like(g)
+    q, scale, err1 = compress_int8(g, err)
+    deq = q.astype(jnp.float32) * scale
+    # bounded quantization error
+    assert float(jnp.abs(deq - g).max()) <= float(scale) * 0.5 + 1e-9
+    # error feedback: next round re-injects the residual
+    q2, scale2, err2 = compress_int8(g, err1)
+    deq2 = q2.astype(jnp.float32) * scale2
+    total = deq + deq2
+    np.testing.assert_allclose(np.asarray(total), np.asarray(2 * g - err2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bf16_params_fp32_master_updates():
+    cfg = OptimizerConfig(name="adamw", lr=0.01, warmup_steps=0,
+                          min_lr_ratio=1.0)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = init_opt_state(params, cfg)
+    assert state["mu"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((4,), 0.1, jnp.bfloat16)}
+    new_params, state, _ = apply_updates(params, grads, state, 0, cfg)
+    assert new_params["w"].dtype == jnp.bfloat16

@@ -1,0 +1,150 @@
+"""Sharding rules, logical->spec translation, HLO analyzer units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.distributed import (
+    ParamDef,
+    ShardingRules,
+    init_params,
+    param_shapes,
+    param_specs,
+    stack_defs,
+    use_rules,
+)
+from repro.launch.hlo_analysis import analyze_hlo_text, parse_hlo
+from repro.launch.sharding import heads_divisible, make_rules
+
+
+def _fake_mesh(shape, axes):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+def test_spec_dedups_reused_axes():
+    rules = ShardingRules({"a": "model", "b": "model", "c": ("pod", "data")})
+    assert rules.spec_for(("a", "b")) == P("model", None)
+    assert rules.spec_for(("c", "a")) == P(("pod", "data"), "model")
+
+
+def test_rules_train_vs_serve():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    arch = configs.get_arch("yi-6b")
+    train = make_rules(arch, configs.get_shape("train_4k"), mesh)
+    serve = make_rules(arch, configs.get_shape("decode_32k"), mesh)
+    assert train["embed"] == "data"  # FSDP in training
+    assert serve["embed"] is None  # replicated weights when serving
+    assert serve["kv_seq"] == "model"  # sequence-sharded KV
+
+
+def test_long_context_rules_shard_seq_everywhere():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    arch = configs.get_arch("jamba-v0.1-52b")
+    rules = make_rules(arch, configs.get_shape("long_500k"), mesh)
+    assert rules["kv_seq"] == ("data", "model")
+    assert rules["kv_batch"] is None
+
+
+def test_seq_parallel_attention_for_non_divisible_heads():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    gemma = configs.get_arch("gemma2-2b")  # 8 heads % 16 != 0
+    yi6 = configs.get_arch("yi-6b")  # 32 heads % 16 == 0
+    assert not heads_divisible(gemma, mesh)
+    assert heads_divisible(yi6, mesh)
+    rules_g = make_rules(gemma, configs.get_shape("train_4k"), mesh)
+    rules_y = make_rules(yi6, configs.get_shape("train_4k"), mesh)
+    assert rules_g.get("attn_seq") == "model"
+    assert rules_y.get("attn_seq") is None
+
+
+def test_param_defs_roundtrip():
+    defs = {"w": ParamDef((8, 16), ("embed", "ff")),
+            "b": ParamDef((16,), ("ff",), init="zeros")}
+    params = init_params(defs, jax.random.PRNGKey(0))
+    assert params["w"].shape == (8, 16)
+    assert float(jnp.abs(params["b"]).max()) == 0.0
+    shapes = param_shapes(defs)
+    assert shapes["w"].shape == (8, 16)
+    with use_rules(ShardingRules({"ff": "model"})):
+        specs = param_specs(defs)
+    assert specs["w"] == P(None, "model")
+    stacked = stack_defs([defs, defs])
+    assert stacked["w"].shape == (2, 8, 16)
+    assert stacked["w"].logical == ("layers", "embed", "ff")
+
+
+def test_expert_fission_divisibility():
+    from repro.models.moe import expert_split_factor
+
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    mixtral = configs.get_arch("mixtral-8x7b")  # 8 experts
+    jamba = configs.get_arch("jamba-v0.1-52b")  # 16 experts
+    rules = make_rules(mixtral, configs.get_shape("train_4k"), mesh)
+    with use_rules(rules, mesh):
+        assert expert_split_factor(mixtral) == 2  # 8 -> 16 virtual
+        assert expert_split_factor(jamba) == 1
+    assert expert_split_factor(mixtral) == 1  # no mesh -> no fission
+
+
+def test_moe_fission_numerically_exact():
+    """r-way virtual experts == unsplit experts (same routing)."""
+    import dataclasses
+
+    from repro.models import moe
+
+    cfg = dataclasses.replace(configs.get_arch("mixtral-8x7b").reduced(),
+                              capacity_factor=16.0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, cfg.d_model))
+    params = init_params(moe.moe_defs(cfg), jax.random.PRNGKey(1))
+    y_ref, aux_ref = moe.moe_forward(params, x, cfg)
+    # manually split each expert into 2 virtual experts
+    r = 2
+    e, d, f = params["w_gate"].shape
+
+    def split(w, axis_f):
+        if axis_f == 2:  # [e, d, f] -> [e*r, d, f/r]
+            return w.reshape(e, d, r, f // r).transpose(0, 2, 1, 3) \
+                .reshape(e * r, d, f // r)
+        return w.reshape(e, r, f // r, d).reshape(e * r, f // r, d)
+
+    params_v = {
+        "router": params["router"],
+        "w_gate": split(params["w_gate"], 2),
+        "w_up": split(params["w_up"], 2),
+        "w_down": params["w_down"].reshape(e, r, f // r, d)
+        .reshape(e * r, f // r, d),
+    }
+    y_v, aux_v = moe.moe_forward(params_v, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_v),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    def f(x, ws):
+        def body(x, w):
+            return jax.nn.relu(x @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    text = jax.jit(f).lower(xs, ws).compile().as_text()
+    cost = analyze_hlo_text(text)
+    expected = 6 * 2 * 32 * 64 * 64
+    assert abs(cost.flops - expected) / expected < 0.01
+
+
+def test_hlo_analyzer_parses_tuple_types():
+    text = """
+ENTRY %main (p: (f32[4,4], s32[])) -> f32[4,4] {
+  %p = (f32[4,4]{1,0}, s32[]) parameter(0)
+  %a = f32[4,4]{1,0} get-tuple-element(%p), index=0
+  ROOT %d = f32[4,4]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps = parse_hlo(text)
+    assert "main" in comps
+    cost = analyze_hlo_text(text)
+    assert cost.flops == 2 * 4 * 4 * 4
