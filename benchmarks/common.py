@@ -1,19 +1,19 @@
-"""Shared benchmark machinery: system variants (paper §VII-A baselines),
-cached pretraining, CSV emission."""
+"""Shared benchmark machinery: system variants (paper §VII-A baselines) as
+declarative ``CLSystemSpec`` entries, cached pretraining, CSV emission."""
 from __future__ import annotations
 
 import dataclasses
 import os
-import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.dacapo_pairs import PAIRS, VisionConfig
-from repro.core.cl_system import ContinuousLearningSystem, pretrain_model
+from repro.core.allocation import CLHyperParams
 from repro.core.estimator import DaCapoEstimator, TPUEstimator
-from repro.core.scheduler import CLHyperParams
+from repro.core.session import CLSystemSpec, PhaseObserver, pretrain_model
 from repro.data.stream import DriftStream, scenario
+from repro.models.registry import make_vision_model
 
 FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
 
@@ -22,23 +22,14 @@ FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
 class OrinEstimator(TPUEstimator):
     """NVIDIA Jetson Orin model (paper Table IV): FP32 only — no MX
     bandwidth/compute benefit; high (60 W, default clocks) or low (30 W,
-    624.8 MHz) power envelope."""
+    624.8 MHz) power envelope. Reuses the TPU roofline in fractional-rows
+    mode: rows are shares of one device, not whole chips."""
 
     total_rows: int = 16  # normalized resource units, same split API
     peak_flops: float = 5.3e12 * 0.45  # sustained fp32
     hbm_bw: float = 204.8e9
+    fractional_rows: bool = True
     mx_speedup = {"mx4": 1.0, "mx6": 1.0, "mx9": 1.0}  # FP32 everywhere
-
-    def forward_time(self, cfg, rows, precision, batch=1):
-        from repro.core.estimator import vision_gemms
-
-        flops = sum(2 * m * n * k for m, n, k in vision_gemms(cfg, batch))
-        bytes_moved = sum((m * k + k * n + m * n) * 4
-                          for m, n, k in vision_gemms(cfg, batch))
-        frac = rows / self.total_rows
-        t_c = flops / (self.peak_flops * frac)
-        t_m = bytes_moved / (self.hbm_bw * frac)
-        return max(t_c, t_m)
 
 
 def orin_estimator(power: str) -> OrinEstimator:
@@ -47,14 +38,25 @@ def orin_estimator(power: str) -> OrinEstimator:
                          hbm_bw=204.8e9 * (1.0 if power == "high" else 0.7))
 
 
-# (name, estimator factory, allocator, apply_mx)
-SYSTEMS = {
-    "OrinLow-Ekya": (lambda: orin_estimator("low"), "ekya", False),
-    "OrinHigh-Ekya": (lambda: orin_estimator("high"), "ekya", False),
-    "OrinHigh-EOMU": (lambda: orin_estimator("high"), "eomu", False),
-    "DaCapo-Ekya": (DaCapoEstimator, "ekya", True),
-    "DaCapo-Spatial": (DaCapoEstimator, "dacapo-spatial", True),
-    "DaCapo-Spatiotemporal": (DaCapoEstimator, "dacapo-spatiotemporal", True),
+# Each system variant is a declarative spec; run_system fills in the model
+# pair, hyper-parameters and scenario-specific bits via dataclasses.replace.
+SYSTEMS: Dict[str, CLSystemSpec] = {
+    "OrinLow-Ekya": CLSystemSpec(
+        estimator=lambda: orin_estimator("low"), allocator="ekya",
+        apply_mx=False),
+    "OrinHigh-Ekya": CLSystemSpec(
+        estimator=lambda: orin_estimator("high"), allocator="ekya",
+        apply_mx=False),
+    "OrinHigh-EOMU": CLSystemSpec(
+        estimator=lambda: orin_estimator("high"), allocator="eomu",
+        apply_mx=False),
+    "DaCapo-Ekya": CLSystemSpec(
+        estimator=DaCapoEstimator, allocator="ekya", apply_mx=True),
+    "DaCapo-Spatial": CLSystemSpec(
+        estimator=DaCapoEstimator, allocator="dacapo-spatial", apply_mx=True),
+    "DaCapo-Spatiotemporal": CLSystemSpec(
+        estimator=DaCapoEstimator, allocator="dacapo-spatiotemporal",
+        apply_mx=True),
 }
 
 POWER_W = {"OrinLow-Ekya": 30.0, "OrinHigh-Ekya": 60.0,
@@ -80,11 +82,11 @@ def pretrained(student: VisionConfig, teacher: VisionConfig,
     key = (student.name, teacher.name, stream_key)
     if key not in _PRETRAIN_CACHE:
         rng = np.random.default_rng(0)
-        probe = ContinuousLearningSystem(student, teacher,
-                                         apply_mx_numerics=False)
+        teacher_model = make_vision_model(teacher.reduced())
+        student_model = make_vision_model(student.reduced())
         t_steps, s_steps = (30, 20) if FAST else (120, 45)
-        tp = pretrain_model(probe.teacher, stream, t_steps, 48, rng)
-        sp = pretrain_model(probe.student, stream, s_steps, 48, rng,
+        tp = pretrain_model(teacher_model, stream, t_steps, 48, rng)
+        sp = pretrain_model(student_model, stream, s_steps, 48, rng,
                             segments=stream.segments[:1], seed=8)
         _PRETRAIN_CACHE[key] = (tp, sp)
     return _PRETRAIN_CACHE[key]
@@ -92,17 +94,17 @@ def pretrained(student: VisionConfig, teacher: VisionConfig,
 
 def run_system(name: str, student: VisionConfig, teacher: VisionConfig,
                scen: str, duration: Optional[float] = None,
-               hp: Optional[CLHyperParams] = None):
-    est_fn, allocator, apply_mx = SYSTEMS[name]
+               hp: Optional[CLHyperParams] = None,
+               observers: Sequence[PhaseObserver] = ()):
+    spec = dataclasses.replace(SYSTEMS[name], student=student,
+                               teacher=teacher, hp=hp or default_hp(),
+                               eval_fps=0.5)
     stream = make_stream(scen)
-    hp = hp or default_hp()
-    sys_ = ContinuousLearningSystem(
-        student, teacher, hp=hp, estimator=est_fn(), allocator=allocator,
-        apply_mx_numerics=apply_mx, eval_fps=0.5)
+    session = spec.build()
     tp, sp = pretrained(student, teacher, scen, stream)
-    sys_.set_pretrained(tp, sp)
+    session.set_pretrained(tp, sp)
     dur = duration or (90.0 if FAST else 180.0)
-    return sys_.run(stream, duration=dur)
+    return session.run(stream, duration=dur, observers=observers)
 
 
 def emit(rows):

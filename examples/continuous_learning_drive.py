@@ -21,9 +21,9 @@ def main():
     args = ap.parse_args()
 
     from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
-    from repro.core.cl_system import ContinuousLearningSystem, pretrain_model
-    from repro.core.scheduler import CLHyperParams
+    from repro.core import CLHyperParams, CLSystemSpec, pretrain_model
     from repro.data.stream import DriftStream, scenario
+    from repro.models.registry import make_vision_model
 
     n_seg = 3 if args.fast else 5
     duration = 90.0 if args.fast else 240.0
@@ -34,20 +34,25 @@ def main():
 
     # One shared pretraining for fairness.
     rng = np.random.default_rng(0)
-    probe = ContinuousLearningSystem(RESNET18, WIDERESNET50, hp=hp,
-                                     apply_mx_numerics=False)
     steps = (30, 20) if args.fast else (100, 40)
-    tp = pretrain_model(probe.teacher, stream, steps[0], 48, rng)
-    sp = pretrain_model(probe.student, stream, steps[1], 48, rng,
-                        segments=stream.segments[:1], seed=8)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        steps[0], 48, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream,
+                        steps[1], 48, rng, segments=stream.segments[:1],
+                        seed=8)
 
     results = {}
     for allocator in ("dacapo-spatiotemporal", "ekya"):
-        system = ContinuousLearningSystem(
-            RESNET18, WIDERESNET50, hp=hp, allocator=allocator,
-            apply_mx_numerics=False, eval_fps=0.5)
-        system.set_pretrained(tp, sp)
-        results[allocator] = system.run(stream, duration=duration)
+        session = CLSystemSpec(
+            student=RESNET18, teacher=WIDERESNET50, hp=hp,
+            allocator=allocator, apply_mx=False, eval_fps=0.5).build()
+        session.set_pretrained(tp, sp)
+        # Observer hook: structured per-phase metrics as they happen.
+        session.add_observer(lambda rec, name=allocator: print(
+            f"  [{name}] phase {rec.index:2d} t={rec.t:6.1f}s "
+            f"acc_v={rec.acc_valid:.2f} acc_l={rec.acc_label:.2f}"
+            f"{' DRIFT' if rec.drift else ''}"))
+        results[allocator] = session.run(stream, duration=duration)
 
     print(f"\nscenario {args.scenario}, {duration:.0f} virtual seconds")
     print(f"{'time':>6} | {'DaCapo-ST':>10} | {'Ekya':>10}")

@@ -29,18 +29,19 @@ def demo_mx():
 
 def demo_continuous_learning():
     from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
-    from repro.core.cl_system import ContinuousLearningSystem
-    from repro.core.scheduler import CLHyperParams
+    from repro.core import CLHyperParams, CLSystemSpec
     from repro.data.stream import DriftStream, scenario
 
     stream = DriftStream(scenario("S1", 3), seed=0, img=24)
     hp = CLHyperParams(n_t=48, n_l=24, c_b=192)
-    system = ContinuousLearningSystem(RESNET18, WIDERESNET50, hp=hp,
-                                      apply_mx_numerics=False, eval_fps=0.5)
-    print(f"  spatial allocation: T-SA={system.r_tsa} rows, "
-          f"B-SA={system.r_bsa} rows (30 FPS inference)")
-    system.pretrain(stream, teacher_steps=30, student_steps=20, batch=32)
-    result = system.run(stream, duration=60.0)
+    # Declarative front door: describe the system, then build the session.
+    session = CLSystemSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                           allocator="dacapo-spatiotemporal",
+                           apply_mx=False, eval_fps=0.5).build()
+    print(f"  spatial allocation: T-SA={session.r_tsa} rows, "
+          f"B-SA={session.r_bsa} rows (30 FPS inference)")
+    session.pretrain(stream, teacher_steps=30, student_steps=20, batch=32)
+    result = session.run(stream, duration=60.0)
     print(f"  60s of S1: avg accuracy {result.avg_accuracy*100:.1f}%, "
           f"{result.drift_events} drift events, "
           f"retrain/label = {result.retrain_time:.1f}s/"

@@ -1,12 +1,38 @@
-"""The paper's primary contribution: MX precision, Algorithm 1 scheduling,
-mesh spatial partitioning, the performance estimator and the CL system."""
-from repro.core.cl_system import CLResult, ContinuousLearningSystem  # noqa: F401
+"""The paper's primary contribution: MX precision, Algorithm 1 allocation
+policies, pluggable CL kernels, mesh spatial partitioning, the performance
+estimator and the CLSession engine behind the CLSystemSpec front door."""
+from repro.core.allocation import (  # noqa: F401
+    ALLOCATORS,
+    AllocationDecision,
+    AllocationPolicy,
+    CLHyperParams,
+    EkyaAllocator,
+    EOMUAllocator,
+    PhaseFeedback,
+    SpatialAllocator,
+    SpatiotemporalAllocator,
+    make_allocator,
+)
+from repro.core.cl_system import ContinuousLearningSystem  # noqa: F401
 from repro.core.estimator import (  # noqa: F401
     DaCapoEstimator,
     TPUEstimator,
     spatial_allocation,
 )
+from repro.core.kernel import (  # noqa: F401
+    InferenceKernel,
+    Kernel,
+    LabelingKernel,
+    RetrainKernel,
+)
 from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy, mx_dense  # noqa: F401
 from repro.core.partition import SpatialPartition, partition_mesh  # noqa: F401
 from repro.core.sample_buffer import SampleBuffer  # noqa: F401
-from repro.core.scheduler import CLHyperParams, SCHEDULERS  # noqa: F401
+from repro.core.scheduler import SCHEDULERS  # noqa: F401
+from repro.core.session import (  # noqa: F401
+    CLResult,
+    CLSession,
+    CLSystemSpec,
+    PhaseRecord,
+    pretrain_model,
+)

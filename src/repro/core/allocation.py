@@ -1,0 +1,239 @@
+"""Resource-allocation policies — Algorithm 1 and the §III baselines as data.
+
+This module is the *decision* layer of the continuous-learning stack: an
+``AllocationPolicy`` looks at per-phase feedback (validation vs. fresh-label
+accuracy, the virtual clock) and emits an ``AllocationDecision`` describing
+everything the engine (core/session.py) should do next — temporal sample
+budgets, spatial T-SA/B-SA row split, per-kernel MX precision, and optional
+fixed-window pacing. The engine executes decisions mechanically; every
+behavioural difference between DaCapo-Spatiotemporal, DaCapo-Spatial, Ekya
+and EOMU lives here, not in the engine loop.
+
+Policies are constructed from hyper-parameters only and later ``bind``-ed to
+a performance estimator + student config, at which point they compute their
+offline spatial split (GetSpatialAllocation, Alg. 1 line 1). Because every
+decision carries its own row split, a policy is free to re-allocate
+spatially *online* — the paper's DC-ST does so temporally; the API makes the
+spatial axis available to future variants too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Type
+
+from repro.configs.dacapo_pairs import VisionConfig
+from repro.core.drift import DriftDetector
+from repro.core.estimator import spatial_allocation
+from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy
+
+
+@dataclasses.dataclass
+class CLHyperParams:
+    """Table I notation."""
+
+    n_t: int = 256  # samples per retraining phase
+    n_l: int = 128  # samples labeled at usual
+    n_ldd_mult: int = 4  # N_ldd = 4 * N_l (paper §VI-B)
+    c_b: int = 1024  # sample buffer capacity
+    v_thr: float = -0.10  # drift threshold on acc_l - acc_v (tuned offline
+    # per paper §VI-D; -0.05 false-positives on n_l=32..48 estimates)
+    fps: float = 30.0
+    epochs: int = 1
+    sgd_batch: int = 16  # paper §VII-A
+    lr: float = 1e-3  # paper §VII-A
+
+    @property
+    def n_v(self) -> int:  # N_v = N_t / 4 (paper §VI-B)
+        return max(1, self.n_t // 4)
+
+    @property
+    def n_ldd(self) -> int:
+        return self.n_ldd_mult * self.n_l
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationDecision:
+    """One phase of work, fully described.
+
+    The leading five fields match the legacy ``PhasePlan`` layout so old
+    positional constructions keep working; the trailing fields are the richer
+    spatial/precision/pacing surface this API adds.
+    """
+
+    retrain_samples: int
+    valid_samples: int
+    label_samples: int
+    reset_buffer: bool = False
+    extra_label_samples: int = 0  # N_ldd - N_l on drift (Alg. 1 line 13)
+    rows_tsa: Optional[int] = None  # None -> engine's offline split
+    rows_bsa: Optional[int] = None
+    precisions: PrecisionPolicy = DEFAULT_POLICY
+    pace_window_s: Optional[float] = None  # fixed-window grid period
+
+    @property
+    def total_label_samples(self) -> int:
+        return self.label_samples + self.extra_label_samples
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseFeedback:
+    """What the engine reports back to the policy after each phase."""
+
+    acc_valid: float
+    acc_label: float
+    t: float  # virtual clock at phase end
+    phase_start: float = 0.0
+    retrain_time: float = 0.0
+    label_time: float = 0.0
+
+
+class AllocationPolicy:
+    """Base policy: fixed Table-I temporal budgets, offline spatial split.
+
+    Subclasses override :meth:`next_decision` (and optionally
+    ``pace_window_s``). ``initial_plan``/``next_phase`` are deprecated
+    aliases kept for the legacy scheduler API.
+    """
+
+    name = "base"
+    pace_window_s: Optional[float] = None
+
+    def __init__(self, hp: CLHyperParams,
+                 precision: PrecisionPolicy = DEFAULT_POLICY):
+        self.hp = hp
+        self.precision = precision
+        self.detector = DriftDetector(v_thr=hp.v_thr)
+        self._rows: Tuple[Optional[int], Optional[int]] = (None, None)
+
+    # -------------------------------------------------------------- binding
+    def bind(self, estimator, student_cfg: VisionConfig) -> "AllocationPolicy":
+        """GetSpatialAllocation (Alg. 1 line 1): compute the offline
+        T-SA/B-SA split this policy's decisions will carry."""
+        self._rows = spatial_allocation(estimator, student_cfg, self.hp.fps,
+                                        self.precision.inference)
+        return self
+
+    @property
+    def rows(self) -> Tuple[Optional[int], Optional[int]]:
+        return self._rows
+
+    # ------------------------------------------------------------ decisions
+    def _decision(self, retrain_samples: int, *, reset: bool = False,
+                  extra_label: int = 0) -> AllocationDecision:
+        r_tsa, r_bsa = self._rows
+        return AllocationDecision(
+            retrain_samples=retrain_samples,
+            valid_samples=self.hp.n_v,
+            label_samples=self.hp.n_l,
+            reset_buffer=reset,
+            extra_label_samples=extra_label,
+            rows_tsa=r_tsa,
+            rows_bsa=r_bsa,
+            precisions=self.precision,
+            pace_window_s=self.pace_window_s,
+        )
+
+    def initial_decision(self) -> AllocationDecision:
+        return self._decision(self.hp.n_t)
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        raise NotImplementedError
+
+    # ------------------------------------------------- legacy scheduler API
+    def initial_plan(self) -> AllocationDecision:
+        return self.initial_decision()
+
+    def next_phase(self, acc_valid: float, acc_label: float,
+                   t: float) -> AllocationDecision:
+        return self.next_decision(
+            PhaseFeedback(acc_valid=acc_valid, acc_label=acc_label, t=t))
+
+
+class SpatiotemporalAllocator(AllocationPolicy):
+    """DaCapo-Spatiotemporal (DC-ST): drift-adaptive temporal allocation.
+
+    Alg. 1 lines 11-13: on drift, reset the buffer and extend the labeling
+    phase to N_ldd samples."""
+
+    name = "dacapo-spatiotemporal"
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        drift = self.detector.check(feedback.acc_label, feedback.acc_valid,
+                                    feedback.t)
+        if drift:
+            return self._decision(self.hp.n_t, reset=True,
+                                  extra_label=self.hp.n_ldd - self.hp.n_l)
+        return self._decision(self.hp.n_t)
+
+
+class SpatialAllocator(SpatiotemporalAllocator):
+    """DaCapo-Spatial (DC-S): static spatial split, fixed temporal
+    alternation — never resets the buffer nor boosts labeling."""
+
+    name = "dacapo-spatial"
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        self.detector.check(feedback.acc_label, feedback.acc_valid,
+                            feedback.t)  # logged, unused
+        return self._decision(self.hp.n_t)
+
+
+class EkyaAllocator(SpatiotemporalAllocator):
+    """Idealized Ekya: fixed 120 s retraining window; per-window label quota
+    then retraining for the rest of the window (profiling cost idealized
+    away, as in the paper's baseline §III-A). Window pacing is declared on
+    every decision via ``pace_window_s`` — the engine pads the virtual clock
+    to the next window-grid boundary, with no Ekya-specific branch."""
+
+    name = "ekya"
+    pace_window_s = 120.0
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        return self._decision(self.hp.n_t)
+
+
+class EOMUAllocator(SpatiotemporalAllocator):
+    """EOMU-like: short (10 s) windows; retraining triggered by a logged
+    accuracy drop, otherwise the window only labels."""
+
+    name = "eomu"
+    pace_window_s = 10.0
+    drop_eps = 0.02
+
+    def __init__(self, hp: CLHyperParams,
+                 precision: PrecisionPolicy = DEFAULT_POLICY):
+        super().__init__(hp, precision)
+        self._last_acc: Optional[float] = None
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        self.detector.check(feedback.acc_label, feedback.acc_valid,
+                            feedback.t)
+        trigger = (self._last_acc is None
+                   or feedback.acc_label < self._last_acc - self.drop_eps)
+        self._last_acc = feedback.acc_label
+        return self._decision(self.hp.n_t if trigger else 0)
+
+
+ALLOCATORS: Dict[str, Type[AllocationPolicy]] = {
+    "dacapo-spatiotemporal": SpatiotemporalAllocator,
+    "dacapo-spatial": SpatialAllocator,
+    "ekya": EkyaAllocator,
+    "eomu": EOMUAllocator,
+}
+
+
+def make_allocator(allocator, hp: CLHyperParams,
+                   precision: PrecisionPolicy = DEFAULT_POLICY
+                   ) -> AllocationPolicy:
+    """Resolve a policy from a registry name, class, or ready instance."""
+    if isinstance(allocator, AllocationPolicy):
+        return allocator
+    if isinstance(allocator, str):
+        try:
+            cls = ALLOCATORS[allocator]
+        except KeyError:
+            raise KeyError(
+                f"unknown allocator {allocator!r}; "
+                f"known: {sorted(ALLOCATORS)}") from None
+        return cls(hp, precision)
+    return allocator(hp, precision)

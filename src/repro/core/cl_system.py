@@ -1,54 +1,38 @@
-"""DaCapo continuous-learning system (paper Fig. 4 + Algorithm 1).
+"""Legacy front door — thin compatibility wrapper over the Kernel/Session API.
 
-Methodology mirrors the paper's evaluation split (§VII-A): the *virtual
-clock* advances by phase durations computed from the performance estimator on
-the FULL model configs (Table III / Table IV hardware), while the *learning
-dynamics* (inference, labeling, retraining, accuracy) execute on reduced
-same-family twins over the synthetic drift stream — "integrating hardware
-simulation and GPU kernel execution" exactly as the paper's system simulator
-does, with JAX/CPU in the GPU role.
+The monolithic ``ContinuousLearningSystem`` was decomposed into three layers
+(see ROADMAP.md "Architecture"):
 
-Three concurrent kernels:
-  inference  — student, every frame, B-SA, MX6;
-  labeling   — teacher pseudo-labels on sampled frames, T-SA, MX6;
-  retraining — student SGD on the sample buffer, T-SA, MX9.
+* kernels (core/kernel.py)      — inference / labeling / retraining, each
+  owning its jitted apply, MX precision and virtual-clock cost;
+* policies (core/allocation.py) — Algorithm 1 and the §III baselines as
+  ``AllocationDecision`` emitters;
+* engine (core/session.py)      — ``CLSession`` executes decisions
+  phase-by-phase; ``CLSystemSpec`` is the declarative builder.
+
+New code should use ``CLSystemSpec(...).build()``. This wrapper keeps the
+seed-era constructor and attribute surface and is verified numerically
+equivalent to the pre-refactor implementation by the fixed-seed golden test
+in tests/test_session.py.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Optional
 
 from repro.configs.dacapo_pairs import VisionConfig
 from repro.core import mx as mx_lib
-from repro.core.estimator import DaCapoEstimator, spatial_allocation
-from repro.core.sample_buffer import SampleBuffer
-from repro.core.scheduler import (
-    CLHyperParams,
-    EkyaScheduler,
-    EOMUScheduler,
-    PhasePlan,
-    SCHEDULERS,
+from repro.core.allocation import CLHyperParams
+from repro.core.session import (  # noqa: F401  (re-exports)
+    CLResult,
+    CLSession,
+    CLSystemSpec,
+    pretrain_model,
 )
-from repro.data.stream import DriftStream
-from repro.models.registry import make_vision_model
-
-
-@dataclasses.dataclass
-class CLResult:
-    name: str
-    accuracy_timeline: List[Tuple[float, float]]  # (t, acc on [t-dt, t))
-    phase_log: List[dict]
-    avg_accuracy: float
-    retrain_time: float
-    label_time: float
-    drift_events: int
 
 
 class ContinuousLearningSystem:
+    """Seed-compatible facade delegating to a :class:`CLSession`."""
+
     def __init__(
         self,
         student_cfg: VisionConfig,
@@ -61,213 +45,44 @@ class ContinuousLearningSystem:
         seed: int = 0,
         eval_fps: float = 2.0,
     ):
-        self.hp = hp or CLHyperParams()
-        self.estimator = estimator or DaCapoEstimator()
-        self.scheduler = SCHEDULERS[allocator](self.hp)
-        self.policy = precision_policy
-        self.apply_mx = apply_mx_numerics
-        self.eval_fps = eval_fps  # accuracy-scoring subsample rate
-        self.full_student, self.full_teacher = student_cfg, teacher_cfg
-        self.student_cfg = student_cfg.reduced()
-        self.teacher_cfg = teacher_cfg.reduced()
-        self.student = make_vision_model(self.student_cfg)
-        self.teacher = make_vision_model(self.teacher_cfg)
-        self.key = jax.random.PRNGKey(seed)
-        self.rng = np.random.default_rng(seed)
+        self._session = CLSystemSpec(
+            student=student_cfg,
+            teacher=teacher_cfg,
+            allocator=allocator,
+            estimator=estimator,
+            policy=precision_policy,
+            hp=hp,
+            apply_mx=apply_mx_numerics,
+            seed=seed,
+            eval_fps=eval_fps,
+        ).build()
 
-        # Offline spatial allocation (Alg. 1 lines 1-2).
-        self.r_tsa, self.r_bsa = spatial_allocation(
-            self.estimator, self.full_student, self.hp.fps,
-            precision_policy.inference)
+    @property
+    def session(self) -> CLSession:
+        return self._session
 
-        # Jitted kernels.
-        self._infer = jax.jit(self.student.apply)
-        self._teach = jax.jit(self.teacher.apply)
-        self._train_step = jax.jit(self._sgd_step)
+    @property
+    def scheduler(self):  # legacy name for the allocation policy
+        return self._session.allocator
 
-    # ----------------------------------------------------------- pretraining
-    def pretrain(self, stream: DriftStream, teacher_steps: int = 300,
+    @property
+    def apply_mx(self) -> bool:
+        return self._session.apply_mx
+
+    def pretrain(self, stream, teacher_steps: int = 300,
                  student_steps: int = 80, batch: int = 64):
-        """Teacher: pretrained across the whole attribute space (general).
-        Student: narrow slice only (first segment's context) -> must adapt."""
-        t_params = pretrain_model(self.teacher, stream, teacher_steps, batch,
-                                  rng=self.rng)
-        s_params = pretrain_model(self.student, stream, student_steps, batch,
-                                  rng=self.rng, segments=stream.segments[:1],
-                                  seed=8)
-        self.set_pretrained(t_params, s_params)
+        return self._session.pretrain(stream, teacher_steps, student_steps,
+                                      batch)
 
     def set_pretrained(self, teacher_params, student_params):
-        """Install (shared) pretrained weights; benches pretrain once per
-        (pair, scenario) and clone into every allocator variant."""
-        self.teacher_params = teacher_params
-        self.student_params = jax.tree_util.tree_map(
-            lambda x: x.copy(), student_params)
-        self._opt = _sgd_state(self.student_params)
+        return self._session.set_pretrained(teacher_params, student_params)
 
-    # ---------------------------------------------------------------- kernels
-    def _sgd_step(self, params, opt, x, y):
-        def loss_fn(p):
-            logits = self.student.apply(p, x)
-            logp = jax.nn.log_softmax(logits)
-            return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    def run(self, stream, duration: Optional[float] = None) -> CLResult:
+        return self._session.run(stream, duration=duration)
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        new_opt = jax.tree_util.tree_map(
-            lambda m, g: 0.9 * m + g, opt, grads)
-        new_params = jax.tree_util.tree_map(
-            lambda p, m: p - self.hp.lr * m, params, new_opt)
-        return new_params, new_opt, loss
-
-    def _serving_params(self):
-        if self.apply_mx:
-            return mx_lib.quantize_tree(self.student_params,
-                                        self.policy.inference)
-        return self.student_params
-
-    def _label(self, x: np.ndarray) -> np.ndarray:
-        params = self.teacher_params
-        if self.apply_mx:
-            params = mx_lib.quantize_tree(params, self.policy.labeling)
-        return np.asarray(jnp.argmax(self._teach(params, x), -1))
-
-    # -------------------------------------------------------------- main loop
-    def run(self, stream: DriftStream,
-            duration: Optional[float] = None) -> CLResult:
-        hp = self.hp
-        duration = duration or stream.duration
-        buffer = SampleBuffer(hp.c_b, seed=3)
-        est = self.estimator
-        pol = self.policy
-
-        # Per-sample costs on the FULL configs (virtual clock).
-        t_label = est.forward_time(self.full_teacher, self.r_tsa,
-                                   pol.labeling, batch=1)
-        t_train_batch = est.train_step_time(
-            self.full_student, self.r_tsa, pol.retraining, hp.sgd_batch)
-        t_valid = est.forward_time(self.full_student, self.r_tsa,
-                                   pol.inference, batch=1)
-        # B-SA inference rate -> frame-drop fraction (paper Fig. 2 metric).
-        bsa_fps = est.inference_fps(self.full_student, self.r_bsa,
-                                    pol.inference)
-        keep_frac = min(1.0, bsa_fps / hp.fps)
-
-        serving = self._serving_params()
-        clock = 0.0
-        eval_cursor = 0.0
-        acc_timeline: List[Tuple[float, float]] = []
-        phase_log: List[dict] = []
-        retrain_time = label_time = 0.0
-        drift_events = 0
-        plan: PhasePlan = self.scheduler.initial_plan()
-        window = getattr(self.scheduler, "window_s", None)
-
-        def score_until(t_end: float, serving_params):
-            """Student inference accuracy on [eval_cursor, t_end)."""
-            nonlocal eval_cursor
-            if t_end <= eval_cursor + 1e-9:
-                return
-            n_eval = max(1, int((t_end - eval_cursor) * self.eval_fps))
-            x, y = stream.frames(eval_cursor, t_end, max_frames=n_eval)
-            pred = np.asarray(jnp.argmax(self._infer(serving_params, x), -1))
-            acc = float((pred == y).mean()) * keep_frac
-            acc_timeline.append((t_end, acc))
-            eval_cursor = t_end
-
-        while clock < duration:
-            phase_start = clock
-            # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
-            acc_v = 1.0
-            if len(buffer) >= hp.sgd_batch and plan.retrain_samples > 0:
-                xt, yt, xv, yv = buffer.get_data(plan.retrain_samples,
-                                                 plan.valid_samples)
-                n_batches = max(1, len(xt) // hp.sgd_batch) * hp.epochs
-                for e in range(hp.epochs):
-                    perm = self.rng.permutation(len(xt))
-                    for i in range(0, len(xt) - hp.sgd_batch + 1,
-                                   hp.sgd_batch):
-                        idx = perm[i: i + hp.sgd_batch]
-                        self.student_params, self._opt, _ = self._train_step(
-                            self.student_params, self._opt, xt[idx], yt[idx])
-                t_phase = n_batches * t_train_batch
-                clock += t_phase
-                retrain_time += t_phase
-                # UpdateWeight + Valid (lines 6-7).
-                serving = self._serving_params()
-                pv = np.asarray(jnp.argmax(self._infer(serving, xv), -1))
-                acc_v = float((pv == yv).mean())
-                clock += len(xv) * t_valid
-            score_until(min(clock, duration), serving)
-            if clock >= duration:
-                break
-
-            # ---------------- Labeling (lines 8-10) ------------------------
-            n_label = plan.label_samples + plan.extra_label_samples
-            if plan.reset_buffer:
-                buffer.reset()  # line 12
-                drift_events += 1
-            t_lab0 = clock
-            x_l, y_true = stream.frames(clock, clock + n_label / hp.fps,
-                                        max_frames=n_label)
-            y_l = self._label(x_l)
-            clock += n_label * t_label
-            label_time += clock - t_lab0
-            pred_l = np.asarray(jnp.argmax(self._infer(serving, x_l), -1))
-            acc_l = float((pred_l == y_l).mean())
-            buffer.update(x_l, y_l)  # line 14
-            score_until(min(clock, duration), serving)
-
-            # Window pacing for fixed-window baselines (Ekya/EOMU).
-            if window is not None:
-                next_boundary = (int(phase_start / window) + 1) * window
-                if clock < next_boundary:
-                    score_until(min(next_boundary, duration), serving)
-                    clock = next_boundary
-
-            # ---------------- Next plan (lines 11-13) ----------------------
-            plan = self.scheduler.next_phase(acc_v, acc_l, clock)
-            phase_log.append({
-                "t": clock, "acc_valid": acc_v, "acc_label": acc_l,
-                "drift": plan.reset_buffer, "retrain_time": retrain_time,
-                "label_time": label_time})
-
-        score_until(duration, serving)
-        accs = [a for _, a in acc_timeline]
-        return CLResult(
-            name=self.scheduler.name,
-            accuracy_timeline=acc_timeline,
-            phase_log=phase_log,
-            avg_accuracy=float(np.mean(accs)) if accs else 0.0,
-            retrain_time=retrain_time,
-            label_time=label_time,
-            drift_events=drift_events,
-        )
-
-
-# ------------------------------------------------------------------ helpers
-def _sgd_state(params):
-    return jax.tree_util.tree_map(jnp.zeros_like, params)
-
-
-def pretrain_model(model, stream: DriftStream, steps: int, batch: int,
-                   rng: np.random.Generator, segments=None, seed: int = 7,
-                   lr: float = 3e-3):
-    """Jitted SGD-momentum pretraining over IID stream samples."""
-    params = model.init(jax.random.PRNGKey(seed))
-    opt = _sgd_state(params)
-
-    @jax.jit
-    def update(params, opt, x, y):
-        def loss_fn(p):
-            logp = jax.nn.log_softmax(model.apply(p, x))
-            return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
-
-        grads = jax.grad(loss_fn)(params)
-        opt = jax.tree_util.tree_map(lambda m, g: 0.9 * m + g, opt, grads)
-        params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, opt)
-        return params, opt
-
-    for _ in range(steps):
-        x, y = stream.sample_dataset(batch, rng, segments=segments)
-        params, opt = update(params, opt, x, y)
-    return params
+    def __getattr__(self, item):
+        # hp, estimator, policy, student/teacher (+cfgs), r_tsa/r_bsa,
+        # kernels, params, rng ... all live on the session.
+        if item == "_session":  # not yet set (e.g. during unpickling)
+            raise AttributeError(item)
+        return getattr(self._session, item)

@@ -105,12 +105,22 @@ class DaCapoEstimator:
 
 @dataclasses.dataclass(frozen=True)
 class TPUEstimator:
-    """Roofline model per TPU v5e chip; ``rows``==chips for the allocator."""
+    """Roofline model per TPU v5e chip; ``rows``==chips for the allocator.
+
+    ``fractional_rows`` switches the meaning of ``rows`` from whole chips
+    (peak scales linearly with row count) to fractions of a single fixed
+    device (peak scales with rows/total_rows) — the mode device-sharing
+    estimators like the Jetson Orin model in benchmarks/common.py use.
+    """
 
     total_rows: int = 1  # chips available to the CL system
     peak_flops: float = TPU_PEAK_FLOPS
     hbm_bw: float = TPU_HBM_BW
+    fractional_rows: bool = False
     mx_speedup = {"mx4": 4.0, "mx6": 2.0, "mx9": 1.0}  # bandwidth-side gain
+
+    def _units(self, rows: int) -> float:
+        return rows / self.total_rows if self.fractional_rows else rows
 
     def forward_time(self, cfg: VisionConfig, rows: int, precision: str,
                      batch: int = 1) -> float:
@@ -118,8 +128,9 @@ class TPUEstimator:
         bytes_moved = sum(m * k + k * n + m * n
                           for m, n, k in vision_gemms(cfg, batch)) * 4
         bytes_moved /= self.mx_speedup[precision]
-        t_c = flops / (rows * self.peak_flops)
-        t_m = bytes_moved / (rows * self.hbm_bw)
+        units = self._units(rows)
+        t_c = flops / (units * self.peak_flops)
+        t_m = bytes_moved / (units * self.hbm_bw)
         return max(t_c, t_m)
 
     def train_step_time(self, cfg, rows, precision, batch):
@@ -132,9 +143,20 @@ class TPUEstimator:
 def spatial_allocation(estimator, student: VisionConfig, fps: float,
                        precision: str) -> Tuple[int, int]:
     """GetSpatialAllocation (Alg. 1 line 1): minimum B-SA rows sustaining the
-    input frame rate for student inference; the rest go to T-SA."""
+    input frame rate for student inference; the rest go to T-SA.
+
+    Always returns (R_tsa, R_bsa) with R_tsa + R_bsa == total_rows. When no
+    proper split sustains the frame rate, rows == total is considered before
+    falling back: if the whole array is needed (or it is a single-row array),
+    B-SA takes every row and T-SA time-shares (R_tsa = 0, the paper's R=0
+    fallback); only when even the full array misses the frame rate does one
+    row stay with T-SA so retraining is never starved entirely.
+    """
     total = estimator.total_rows
     for rows in range(1, total):
         if estimator.inference_fps(student, rows, precision) >= fps:
             return total - rows, rows  # (R_tsa, R_bsa)
-    return 1, max(1, total - 1)
+    if total == 1 or estimator.inference_fps(student, total,
+                                             precision) >= fps:
+        return 0, total  # whole array to inference; T-SA time-shares
+    return 1, total - 1  # overloaded even at full width

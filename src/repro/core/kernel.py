@@ -1,0 +1,179 @@
+"""The three concurrent CL kernels as first-class objects (paper Fig. 4).
+
+Each kernel owns its model apply (jitted once per kernel), its MX precision
+handling, its virtual-clock cost on the performance estimator, and — when a
+multi-device mesh is available — its sub-accelerator placement from a
+``SpatialPartition``:
+
+* ``InferenceKernel``  — student, every frame, B-SA;
+* ``LabelingKernel``   — teacher pseudo-labels on sampled frames, T-SA;
+* ``RetrainKernel``    — student SGD on the sample buffer, T-SA.
+
+The engine (core/session.py) never touches models or estimators directly; it
+executes ``AllocationDecision``s by calling kernel methods with the rows and
+precisions the decision carries. On a single device the partition binding is
+a no-op and the three kernels time-share — the paper's own fallback.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dacapo_pairs import VisionConfig
+from repro.core import mx as mx_lib
+from repro.core.partition import SpatialPartition
+
+
+@runtime_checkable
+class Kernel(Protocol):
+    """What the engine requires of a kernel."""
+
+    name: str
+    role: str  # "t_sa" | "b_sa" — which sub-accelerator it runs on
+
+    def bind_partition(self, partition: SpatialPartition) -> None:
+        """Adopt a sub-mesh placement (no-op when time-shared)."""
+
+    def time_per_sample(self, rows: int, precision: str) -> float:
+        """Virtual-clock seconds per sample at the given row count."""
+
+
+class _PlacedKernel:
+    """Shared placement logic: hold this kernel's sub-mesh and stage inputs
+    onto its first device when a real (non-time-shared) partition is bound."""
+
+    role = "t_sa"
+
+    def __init__(self):
+        self.submesh = None
+        self._device = None
+
+    def bind_partition(self, partition: SpatialPartition) -> None:
+        if partition.time_shared:
+            self.submesh, self._device = None, None
+            return
+        self.submesh = partition.b_sa if self.role == "b_sa" else partition.t_sa
+        self._device = (None if self.submesh is None
+                        else self.submesh.devices.flat[0])
+
+    def _put(self, x):
+        return x if self._device is None else jax.device_put(x, self._device)
+
+
+class InferenceKernel(_PlacedKernel):
+    """Student inference on the B-SA: serves every frame, scores accuracy."""
+
+    name = "inference"
+    role = "b_sa"
+
+    def __init__(self, model, full_cfg: VisionConfig, estimator,
+                 apply_mx: bool):
+        super().__init__()
+        self.model = model
+        self.full_cfg = full_cfg
+        self.estimator = estimator
+        self.apply_mx = apply_mx
+        self._apply = jax.jit(model.apply)
+
+    def serving_params(self, params, precision: str):
+        """UpdateWeight (Alg. 1 line 6): fake-quant the serving copy to the
+        inference precision; the retraining master stays fp32."""
+        if self.apply_mx:
+            return mx_lib.quantize_tree(params, precision)
+        return params
+
+    def predict(self, params, x) -> np.ndarray:
+        return np.asarray(jnp.argmax(self._apply(params, self._put(x)), -1))
+
+    def time_per_sample(self, rows: int, precision: str) -> float:
+        return self.estimator.forward_time(self.full_cfg, rows, precision,
+                                           batch=1)
+
+    def fps(self, rows: int, precision: str) -> float:
+        return self.estimator.inference_fps(self.full_cfg, rows, precision)
+
+    def keep_frac(self, rows: int, precision: str,
+                  target_fps: float) -> float:
+        """Fraction of stream frames the B-SA sustains (paper Fig. 2)."""
+        return min(1.0, self.fps(rows, precision) / target_fps)
+
+
+class LabelingKernel(_PlacedKernel):
+    """Teacher pseudo-labeling on the T-SA (time-shared with retraining)."""
+
+    name = "labeling"
+    role = "t_sa"
+
+    def __init__(self, model, full_cfg: VisionConfig, estimator,
+                 apply_mx: bool):
+        super().__init__()
+        self.model = model
+        self.full_cfg = full_cfg
+        self.estimator = estimator
+        self.apply_mx = apply_mx
+        self._apply = jax.jit(model.apply)
+
+    def label(self, params, x, precision: str) -> np.ndarray:
+        if self.apply_mx:
+            params = mx_lib.quantize_tree(params, precision)
+        return np.asarray(jnp.argmax(self._apply(params, self._put(x)), -1))
+
+    def time_per_sample(self, rows: int, precision: str) -> float:
+        return self.estimator.forward_time(self.full_cfg, rows, precision,
+                                           batch=1)
+
+
+class RetrainKernel(_PlacedKernel):
+    """Student SGD-with-momentum retraining on the T-SA."""
+
+    name = "retraining"
+    role = "t_sa"
+
+    def __init__(self, model, full_cfg: VisionConfig, estimator, hp):
+        super().__init__()
+        self.model = model
+        self.full_cfg = full_cfg
+        self.estimator = estimator
+        self.hp = hp
+        self._step = jax.jit(self._sgd_step)
+
+    def _sgd_step(self, params, opt, x, y):
+        def loss_fn(p):
+            logits = self.model.apply(p, x)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_opt = jax.tree_util.tree_map(
+            lambda m, g: 0.9 * m + g, opt, grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - self.hp.lr * m, params, new_opt)
+        return new_params, new_opt, loss
+
+    def init_state(self, params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def fit(self, params, opt, xt: np.ndarray, yt: np.ndarray,
+            rng: np.random.Generator) -> Tuple[object, object, int]:
+        """Retrain (Alg. 1 line 5): epochs x minibatch SGD over D_t.
+        Returns (params, opt, n_batches) — the engine charges
+        n_batches * time_per_batch to the virtual clock."""
+        hp = self.hp
+        n_batches = max(1, len(xt) // hp.sgd_batch) * hp.epochs
+        for _ in range(hp.epochs):
+            perm = rng.permutation(len(xt))
+            for i in range(0, len(xt) - hp.sgd_batch + 1, hp.sgd_batch):
+                idx = perm[i: i + hp.sgd_batch]
+                params, opt, _ = self._step(params, opt, self._put(xt[idx]),
+                                            self._put(yt[idx]))
+        return params, opt, n_batches
+
+    def time_per_batch(self, rows: int, precision: str) -> float:
+        return self.estimator.train_step_time(self.full_cfg, rows, precision,
+                                              self.hp.sgd_batch)
+
+    def time_per_sample(self, rows: int, precision: str) -> float:
+        return self.time_per_batch(rows, precision) / self.hp.sgd_batch

@@ -1,125 +1,28 @@
-"""Spatiotemporal resource allocation — Algorithm 1, faithfully.
+"""Deprecated shim — the scheduler API moved to ``repro.core.allocation``.
 
-``SpatiotemporalScheduler.next_phase`` is the paper's while-loop body as a
-pure decision function; the CL system (core/cl_system.py) executes its
-decisions against models and the virtual clock. Baseline allocators (Ekya-
-like fixed-window, EOMU-like short-window triggers, DaCapo-Spatial) share the
-interface so every system variant runs on the identical substrate.
+``PhasePlan`` grew into ``AllocationDecision`` (same leading fields plus
+spatial rows, per-kernel precision and window pacing), and the scheduler
+classes became ``AllocationPolicy`` implementations whose decisions the
+``CLSession`` engine executes. The legacy names below keep old imports and
+positional constructions working; new code should import from
+``repro.core.allocation``.
 """
-from __future__ import annotations
+from repro.core.allocation import (  # noqa: F401
+    ALLOCATORS as SCHEDULERS,
+    AllocationDecision as PhasePlan,
+    CLHyperParams,
+    EkyaAllocator as EkyaScheduler,
+    EOMUAllocator as EOMUScheduler,
+    SpatialAllocator as SpatialScheduler,
+    SpatiotemporalAllocator as SpatiotemporalScheduler,
+)
 
-import dataclasses
-from typing import Optional
-
-from repro.core.drift import DriftDetector
-
-
-@dataclasses.dataclass
-class CLHyperParams:
-    """Table I notation."""
-
-    n_t: int = 256  # samples per retraining phase
-    n_l: int = 128  # samples labeled at usual
-    n_ldd_mult: int = 4  # N_ldd = 4 * N_l (paper §VI-B)
-    c_b: int = 1024  # sample buffer capacity
-    v_thr: float = -0.10  # drift threshold on acc_l - acc_v (tuned offline
-    # per paper §VI-D; -0.05 false-positives on n_l=32..48 estimates)
-    fps: float = 30.0
-    epochs: int = 1
-    sgd_batch: int = 16  # paper §VII-A
-    lr: float = 1e-3  # paper §VII-A
-
-    @property
-    def n_v(self) -> int:  # N_v = N_t / 4 (paper §VI-B)
-        return max(1, self.n_t // 4)
-
-    @property
-    def n_ldd(self) -> int:
-        return self.n_ldd_mult * self.n_l
-
-
-@dataclasses.dataclass
-class PhasePlan:
-    """What the system should do next."""
-
-    retrain_samples: int
-    valid_samples: int
-    label_samples: int
-    reset_buffer: bool = False
-    extra_label_samples: int = 0  # N_ldd - N_l on drift (Alg. 1 line 13)
-
-
-class SpatiotemporalScheduler:
-    """DaCapo-Spatiotemporal (DC-ST): drift-adaptive temporal allocation."""
-
-    name = "dacapo-spatiotemporal"
-
-    def __init__(self, hp: CLHyperParams):
-        self.hp = hp
-        self.detector = DriftDetector(v_thr=hp.v_thr)
-
-    def initial_plan(self) -> PhasePlan:
-        return PhasePlan(self.hp.n_t, self.hp.n_v, self.hp.n_l)
-
-    def next_phase(self, acc_valid: float, acc_label: float,
-                   t: float) -> PhasePlan:
-        """Alg. 1 lines 11-13: on drift, reset the buffer and extend the
-        labeling phase to N_ldd samples."""
-        drift = self.detector.check(acc_label, acc_valid, t)
-        if drift:
-            return PhasePlan(
-                self.hp.n_t, self.hp.n_v, self.hp.n_l, reset_buffer=True,
-                extra_label_samples=self.hp.n_ldd - self.hp.n_l)
-        return PhasePlan(self.hp.n_t, self.hp.n_v, self.hp.n_l)
-
-
-class SpatialScheduler(SpatiotemporalScheduler):
-    """DaCapo-Spatial (DC-S): static spatial split, fixed temporal
-    alternation — never resets the buffer nor boosts labeling."""
-
-    name = "dacapo-spatial"
-
-    def next_phase(self, acc_valid, acc_label, t) -> PhasePlan:
-        self.detector.check(acc_label, acc_valid, t)  # logged, unused
-        return PhasePlan(self.hp.n_t, self.hp.n_v, self.hp.n_l)
-
-
-class EkyaScheduler(SpatiotemporalScheduler):
-    """Idealized Ekya: fixed retraining window; per-window label quota then
-    retraining for the rest of the window (profiling cost idealized away, as
-    in the paper's baseline §III-A)."""
-
-    name = "ekya"
-    window_s = 120.0
-
-    def next_phase(self, acc_valid, acc_label, t) -> PhasePlan:
-        return PhasePlan(self.hp.n_t, self.hp.n_v, self.hp.n_l)
-
-
-class EOMUScheduler(SpatiotemporalScheduler):
-    """EOMU-like: short (10 s) windows; retraining triggered by a logged
-    accuracy drop, otherwise the window only labels."""
-
-    name = "eomu"
-    window_s = 10.0
-    drop_eps = 0.02
-
-    def __init__(self, hp: CLHyperParams):
-        super().__init__(hp)
-        self._last_acc: Optional[float] = None
-
-    def next_phase(self, acc_valid, acc_label, t) -> PhasePlan:
-        self.detector.check(acc_label, acc_valid, t)
-        trigger = (self._last_acc is None
-                   or acc_label < self._last_acc - self.drop_eps)
-        self._last_acc = acc_label
-        n_t = self.hp.n_t if trigger else 0
-        return PhasePlan(n_t, self.hp.n_v, self.hp.n_l)
-
-
-SCHEDULERS = {
-    "dacapo-spatiotemporal": SpatiotemporalScheduler,
-    "dacapo-spatial": SpatialScheduler,
-    "ekya": EkyaScheduler,
-    "eomu": EOMUScheduler,
-}
+__all__ = [
+    "CLHyperParams",
+    "PhasePlan",
+    "SCHEDULERS",
+    "SpatiotemporalScheduler",
+    "SpatialScheduler",
+    "EkyaScheduler",
+    "EOMUScheduler",
+]

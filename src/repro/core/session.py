@@ -1,0 +1,400 @@
+"""CLSession — the continuous-learning engine (paper Fig. 4 + Algorithm 1).
+
+Methodology mirrors the paper's evaluation split (§VII-A): the *virtual
+clock* advances by phase durations computed from the performance estimator on
+the FULL model configs (Table III / Table IV hardware), while the *learning
+dynamics* (inference, labeling, retraining, accuracy) execute on reduced
+same-family twins over the synthetic drift stream — "integrating hardware
+simulation and GPU kernel execution" exactly as the paper's system simulator
+does, with JAX/CPU in the GPU role.
+
+Layering (see ROADMAP.md "Architecture"):
+
+    CLSystemSpec ──build()──▶ CLSession ──executes──▶ AllocationDecision
+                               │    ▲                        │
+                     kernels ◀─┘    └── PhaseFeedback ◀── AllocationPolicy
+             (core/kernel.py)                        (core/allocation.py)
+
+The engine is policy-free: it executes whatever ``AllocationDecision`` the
+bound :class:`~repro.core.allocation.AllocationPolicy` emits — temporal
+sample budgets, T-SA/B-SA row split, per-kernel MX precision, and optional
+fixed-window pacing — and reports ``PhaseFeedback`` back. When constructed
+with a multi-device ``mesh``, the engine calls
+:func:`~repro.core.partition.partition_mesh` to fission the mesh into T-SA /
+B-SA sub-meshes and binds each kernel to its sub-accelerator (re-partitioning
+online if a decision changes the split); on a single device the partition
+degenerates to time-sharing, the paper's own fallback.
+
+Per-phase structured metrics flow to observers — callables receiving a
+:class:`PhaseRecord` — instead of being scraped out of ad-hoc dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dacapo_pairs import VisionConfig
+from repro.core import mx as mx_lib
+from repro.core.allocation import (
+    AllocationDecision,
+    AllocationPolicy,
+    CLHyperParams,
+    PhaseFeedback,
+    make_allocator,
+)
+from repro.core.estimator import DaCapoEstimator
+from repro.core.kernel import InferenceKernel, LabelingKernel, RetrainKernel
+from repro.core.partition import (
+    SpatialPartition,
+    partition_mesh,
+    single_device_partition,
+)
+from repro.core.sample_buffer import SampleBuffer
+from repro.data.stream import DriftStream
+from repro.models.registry import make_vision_model
+
+
+@dataclasses.dataclass
+class CLResult:
+    name: str
+    accuracy_timeline: List[Tuple[float, float]]  # (t, acc on [t-dt, t))
+    phase_log: List[dict]
+    avg_accuracy: float
+    retrain_time: float
+    label_time: float
+    drift_events: int
+    records: List["PhaseRecord"] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseRecord:
+    """Structured per-phase metrics delivered to observers."""
+
+    index: int
+    t: float  # virtual clock at phase end
+    acc_valid: float
+    acc_label: float
+    drift: bool  # drift detected at this phase boundary
+    retrain_time: float  # cumulative
+    label_time: float  # cumulative
+    decision: AllocationDecision  # the decision this phase executed
+    next_decision: AllocationDecision  # what the policy chose for the next
+
+    def as_log_entry(self) -> dict:
+        """Legacy ``phase_log`` dict layout."""
+        return {"t": self.t, "acc_valid": self.acc_valid,
+                "acc_label": self.acc_label, "drift": self.drift,
+                "retrain_time": self.retrain_time,
+                "label_time": self.label_time}
+
+
+PhaseObserver = Callable[[PhaseRecord], None]
+
+
+class CLSession:
+    """Executes allocation decisions phase-by-phase against the kernels."""
+
+    def __init__(
+        self,
+        student_cfg: VisionConfig,
+        teacher_cfg: VisionConfig,
+        hp: Optional[CLHyperParams] = None,
+        estimator=None,
+        allocator: Union[str, AllocationPolicy] = "dacapo-spatiotemporal",
+        precision_policy: mx_lib.PrecisionPolicy = mx_lib.DEFAULT_POLICY,
+        apply_mx_numerics: bool = True,
+        seed: int = 0,
+        eval_fps: float = 2.0,
+        mesh=None,
+        observers: Sequence[PhaseObserver] = (),
+    ):
+        self.hp = hp or CLHyperParams()
+        self.estimator = estimator or DaCapoEstimator()
+        self.policy = precision_policy
+        self.apply_mx = apply_mx_numerics
+        self.eval_fps = eval_fps  # accuracy-scoring subsample rate
+        self.full_student, self.full_teacher = student_cfg, teacher_cfg
+        self.student_cfg = student_cfg.reduced()
+        self.teacher_cfg = teacher_cfg.reduced()
+        self.student = make_vision_model(self.student_cfg)
+        self.teacher = make_vision_model(self.teacher_cfg)
+        self.key = jax.random.PRNGKey(seed)
+        self.rng = np.random.default_rng(seed)
+        self._observers: List[PhaseObserver] = list(observers)
+
+        self.allocator = make_allocator(allocator, self.hp, precision_policy)
+        # The session's precision policy is authoritative — also for ready
+        # policy instances handed in via the spec — so decisions, kernel
+        # costs and the spatial split all agree on one PrecisionPolicy.
+        self.allocator.precision = precision_policy
+        self.allocator.bind(self.estimator, self.full_student)
+
+        # Offline spatial allocation (Alg. 1 lines 1-2) — single source of
+        # truth: the split the bound policy computed.
+        self.r_tsa, self.r_bsa = self.allocator.rows
+
+        # The three kernels (Fig. 4), each owning its jitted apply and cost.
+        self.inference = InferenceKernel(
+            self.student, self.full_student, self.estimator, self.apply_mx)
+        self.labeling = LabelingKernel(
+            self.teacher, self.full_teacher, self.estimator, self.apply_mx)
+        self.retrain = RetrainKernel(
+            self.student, self.full_student, self.estimator, self.hp)
+        self.kernels = (self.inference, self.labeling, self.retrain)
+
+        # Spatial partition: fission the mesh if one is given.
+        self.mesh = mesh
+        self._mesh_rows_bsa: Optional[int] = None
+        self.partition: SpatialPartition = single_device_partition()
+        self._repartition(self.r_bsa)
+
+    # --------------------------------------------------------------- mesh
+    def _mesh_split(self, rows_bsa: int) -> int:
+        """Map the estimator's row split onto the mesh's leading axis."""
+        n_rows = self.mesh.devices.shape[0]
+        frac = rows_bsa / max(1, self.estimator.total_rows)
+        return max(1, min(n_rows - 1, round(n_rows * frac)))
+
+    def _repartition(self, rows_bsa: int) -> None:
+        """(Re)fission the mesh for a row split; bind kernels to sub-meshes.
+        Single-device sessions keep the degenerate time-shared partition."""
+        if self.mesh is None:
+            for k in self.kernels:
+                k.bind_partition(self.partition)
+            return
+        want = self._mesh_split(rows_bsa)
+        if want == self._mesh_rows_bsa:
+            return
+        self._mesh_rows_bsa = want
+        self.partition = partition_mesh(self.mesh, want)
+        for k in self.kernels:
+            k.bind_partition(self.partition)
+
+    # ---------------------------------------------------------- observers
+    def add_observer(self, observer: PhaseObserver) -> None:
+        self._observers.append(observer)
+
+    # --------------------------------------------------------- pretraining
+    def pretrain(self, stream: DriftStream, teacher_steps: int = 300,
+                 student_steps: int = 80, batch: int = 64):
+        """Teacher: pretrained across the whole attribute space (general).
+        Student: narrow slice only (first segment's context) -> must adapt."""
+        t_params = pretrain_model(self.teacher, stream, teacher_steps, batch,
+                                  rng=self.rng)
+        s_params = pretrain_model(self.student, stream, student_steps, batch,
+                                  rng=self.rng, segments=stream.segments[:1],
+                                  seed=8)
+        self.set_pretrained(t_params, s_params)
+
+    def set_pretrained(self, teacher_params, student_params):
+        """Install (shared) pretrained weights; benches pretrain once per
+        (pair, scenario) and clone into every allocator variant."""
+        self.teacher_params = teacher_params
+        self.student_params = jax.tree_util.tree_map(
+            lambda x: x.copy(), student_params)
+        self._opt = self.retrain.init_state(self.student_params)
+
+    # ------------------------------------------------------------ main loop
+    def _effective_rows(self, decision: AllocationDecision
+                        ) -> Tuple[int, int]:
+        """Decision rows, falling back to the offline split; a 0-row side
+        time-shares the whole array (the paper's R=0 fallback)."""
+        total = self.estimator.total_rows
+        r_tsa = decision.rows_tsa if decision.rows_tsa is not None else self.r_tsa
+        r_bsa = decision.rows_bsa if decision.rows_bsa is not None else self.r_bsa
+        return (r_tsa or total), (r_bsa or total)
+
+    def run(self, stream: DriftStream, duration: Optional[float] = None,
+            observers: Sequence[PhaseObserver] = ()) -> CLResult:
+        hp = self.hp
+        duration = duration or stream.duration
+        buffer = SampleBuffer(hp.c_b, seed=3)
+        observers = self._observers + list(observers)
+        decision = self.allocator.initial_decision()
+
+        r_tsa, r_bsa = self._effective_rows(decision)
+        keep_frac = self.inference.keep_frac(
+            r_bsa, decision.precisions.inference, hp.fps)
+        serving = self.inference.serving_params(
+            self.student_params, decision.precisions.inference)
+        clock = 0.0
+        eval_cursor = 0.0
+        acc_timeline: List[Tuple[float, float]] = []
+        records: List[PhaseRecord] = []
+        retrain_time = label_time = 0.0
+        drift_events = 0
+
+        def score_until(t_end: float, serving_params):
+            """Student inference accuracy on [eval_cursor, t_end)."""
+            nonlocal eval_cursor
+            if t_end <= eval_cursor + 1e-9:
+                return
+            n_eval = max(1, int((t_end - eval_cursor) * self.eval_fps))
+            x, y = stream.frames(eval_cursor, t_end, max_frames=n_eval)
+            pred = self.inference.predict(serving_params, x)
+            acc = float((pred == y).mean()) * keep_frac
+            acc_timeline.append((t_end, acc))
+            eval_cursor = t_end
+
+        while clock < duration:
+            phase_start = clock
+            prec = decision.precisions
+            r_tsa, r_bsa = self._effective_rows(decision)
+            self._repartition(r_bsa)
+            keep_frac = self.inference.keep_frac(r_bsa, prec.inference,
+                                                 hp.fps)
+            # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
+            acc_v = 1.0
+            if len(buffer) >= hp.sgd_batch and decision.retrain_samples > 0:
+                xt, yt, xv, yv = buffer.get_data(decision.retrain_samples,
+                                                 decision.valid_samples)
+                self.student_params, self._opt, n_batches = self.retrain.fit(
+                    self.student_params, self._opt, xt, yt, self.rng)
+                t_phase = n_batches * self.retrain.time_per_batch(
+                    r_tsa, prec.retraining)
+                clock += t_phase
+                retrain_time += t_phase
+                # UpdateWeight + Valid (lines 6-7).
+                serving = self.inference.serving_params(self.student_params,
+                                                        prec.inference)
+                pv = self.inference.predict(serving, xv)
+                acc_v = float((pv == yv).mean())
+                clock += len(xv) * self.inference.time_per_sample(
+                    r_tsa, prec.inference)
+            score_until(min(clock, duration), serving)
+            if clock >= duration:
+                break
+
+            # ---------------- Labeling (lines 8-10) ------------------------
+            n_label = decision.total_label_samples
+            if decision.reset_buffer:
+                buffer.reset()  # line 12
+                drift_events += 1
+            t_lab0 = clock
+            x_l, _y_true = stream.frames(clock, clock + n_label / hp.fps,
+                                         max_frames=n_label)
+            y_l = self.labeling.label(self.teacher_params, x_l, prec.labeling)
+            clock += n_label * self.labeling.time_per_sample(
+                r_tsa, prec.labeling)
+            label_time += clock - t_lab0
+            pred_l = self.inference.predict(serving, x_l)
+            acc_l = float((pred_l == y_l).mean())
+            buffer.update(x_l, y_l)  # line 14
+            score_until(min(clock, duration), serving)
+
+            # Fixed-window pacing, declared by the decision (no baseline-
+            # specific branch: any policy may put phases on a window grid).
+            if decision.pace_window_s:
+                w = decision.pace_window_s
+                next_boundary = (int(phase_start / w) + 1) * w
+                if clock < next_boundary:
+                    score_until(min(next_boundary, duration), serving)
+                    clock = next_boundary
+
+            # ---------------- Next decision (lines 11-13) ------------------
+            feedback = PhaseFeedback(
+                acc_valid=acc_v, acc_label=acc_l, t=clock,
+                phase_start=phase_start, retrain_time=retrain_time,
+                label_time=label_time)
+            next_decision = self.allocator.next_decision(feedback)
+            record = PhaseRecord(
+                index=len(records), t=clock, acc_valid=acc_v,
+                acc_label=acc_l, drift=next_decision.reset_buffer,
+                retrain_time=retrain_time, label_time=label_time,
+                decision=decision, next_decision=next_decision)
+            records.append(record)
+            for obs in observers:
+                obs(record)
+            decision = next_decision
+
+        score_until(duration, serving)
+        accs = [a for _, a in acc_timeline]
+        return CLResult(
+            name=self.allocator.name,
+            accuracy_timeline=acc_timeline,
+            phase_log=[r.as_log_entry() for r in records],
+            avg_accuracy=float(np.mean(accs)) if accs else 0.0,
+            retrain_time=retrain_time,
+            label_time=label_time,
+            drift_events=drift_events,
+            records=records,
+        )
+
+
+@dataclasses.dataclass
+class CLSystemSpec:
+    """Declarative front door: describe a CL system, then ``build()`` it.
+
+    ``estimator`` accepts an instance or a zero-arg factory (class/lambda);
+    ``allocator`` accepts a registry name, an ``AllocationPolicy`` class, or
+    a ready instance. ``student``/``teacher`` are the FULL paper configs
+    (Table III); the session derives the reduced twins itself.
+
+        spec = CLSystemSpec(student=RESNET18, teacher=WIDERESNET50,
+                            allocator="ekya", apply_mx=False)
+        session = spec.build()
+    """
+
+    student: Optional[VisionConfig] = None
+    teacher: Optional[VisionConfig] = None
+    allocator: Union[str, AllocationPolicy] = "dacapo-spatiotemporal"
+    estimator: object = None  # instance or zero-arg factory
+    policy: mx_lib.PrecisionPolicy = mx_lib.DEFAULT_POLICY
+    hp: Optional[CLHyperParams] = None
+    apply_mx: bool = True
+    seed: int = 0
+    eval_fps: float = 2.0
+    mesh: object = None
+
+    def build(self) -> CLSession:
+        if self.student is None or self.teacher is None:
+            raise ValueError("CLSystemSpec needs student and teacher configs")
+        est = self.estimator
+        if est is not None and (isinstance(est, type)
+                                or not hasattr(est, "total_rows")):
+            est = est()  # class or zero-arg factory -> instance
+        return CLSession(
+            student_cfg=self.student,
+            teacher_cfg=self.teacher,
+            hp=self.hp,
+            estimator=est,
+            allocator=self.allocator,
+            precision_policy=self.policy,
+            apply_mx_numerics=self.apply_mx,
+            seed=self.seed,
+            eval_fps=self.eval_fps,
+            mesh=self.mesh,
+        )
+
+
+# ------------------------------------------------------------------ helpers
+def _sgd_state(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def pretrain_model(model, stream: DriftStream, steps: int, batch: int,
+                   rng: np.random.Generator, segments=None, seed: int = 7,
+                   lr: float = 3e-3):
+    """Jitted SGD-momentum pretraining over IID stream samples."""
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = _sgd_state(params)
+
+    @jax.jit
+    def update(params, opt, x, y):
+        def loss_fn(p):
+            logp = jax.nn.log_softmax(model.apply(p, x))
+            return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+        grads = jax.grad(loss_fn)(params)
+        opt = jax.tree_util.tree_map(lambda m, g: 0.9 * m + g, opt, grads)
+        params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, opt)
+        return params, opt
+
+    for _ in range(steps):
+        x, y = stream.sample_dataset(batch, rng, segments=segments)
+        params, opt = update(params, opt, x, y)
+    return params

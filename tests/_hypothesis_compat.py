@@ -1,0 +1,93 @@
+"""Property-test shim: real hypothesis when installed, deterministic fallback
+otherwise.
+
+The tier-1 suite must collect and run in environments without ``hypothesis``
+(the container image does not bake it in). When the real library is present
+we re-export its ``given``/``settings``/``strategies``; otherwise a minimal
+deterministic stand-in draws ``max_examples`` pseudo-random examples from a
+fixed-seed generator, so the property tests still execute (reproducibly)
+instead of erroring at collection.
+
+Only the strategy combinators the suite uses are implemented: ``floats``,
+``integers``, ``sampled_from``, ``lists``, ``tuples``.
+"""
+from __future__ import annotations
+
+
+try:
+    import hypothesis as _hypothesis
+    import hypothesis.strategies as st
+
+    given = _hypothesis.given
+    settings = _hypothesis.settings
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_SEED = 0xDACA90
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements))
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(_FALLBACK_SEED)
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Copy identity but NOT the signature: pytest must not mistake
+            # the strategy parameters for fixtures (so no functools.wraps,
+            # whose __wrapped__ would expose the original signature).
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

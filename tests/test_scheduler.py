@@ -1,17 +1,22 @@
-"""Algorithm 1 unit tests + hypothesis properties on scheduler invariants."""
-import hypothesis
-import hypothesis.strategies as st
+"""Algorithm 1 policy unit tests + property invariants on allocator
+decisions (hypothesis when installed, deterministic fallback otherwise)."""
 import numpy as np
-import pytest
 
-from repro.core.sample_buffer import SampleBuffer
-from repro.core.scheduler import (
+from _hypothesis_compat import given, settings, st
+from repro.core.allocation import (
+    ALLOCATORS,
+    AllocationDecision,
     CLHyperParams,
-    EOMUScheduler,
-    SCHEDULERS,
-    SpatialScheduler,
-    SpatiotemporalScheduler,
+    EOMUAllocator,
+    PhaseFeedback,
+    SpatialAllocator,
+    SpatiotemporalAllocator,
 )
+from repro.core.sample_buffer import SampleBuffer
+
+
+def _fb(acc_valid, acc_label, t):
+    return PhaseFeedback(acc_valid=acc_valid, acc_label=acc_label, t=t)
 
 
 def test_hyperparams_paper_relations():
@@ -22,55 +27,83 @@ def test_hyperparams_paper_relations():
 
 def test_drift_triggers_reset_and_boost():
     hp = CLHyperParams(v_thr=-0.05)
-    sch = SpatiotemporalScheduler(hp)
+    pol = SpatiotemporalAllocator(hp)
     # acc_label far below acc_valid -> drift (Alg. 1 line 11).
-    plan = sch.next_phase(acc_valid=0.9, acc_label=0.5, t=10.0)
-    assert plan.reset_buffer
-    assert plan.extra_label_samples == hp.n_ldd - hp.n_l
+    d = pol.next_decision(_fb(acc_valid=0.9, acc_label=0.5, t=10.0))
+    assert d.reset_buffer
+    assert d.extra_label_samples == hp.n_ldd - hp.n_l
     # healthy -> no drift.
-    plan = sch.next_phase(acc_valid=0.8, acc_label=0.82, t=20.0)
-    assert not plan.reset_buffer
-    assert plan.extra_label_samples == 0
+    d = pol.next_decision(_fb(acc_valid=0.8, acc_label=0.82, t=20.0))
+    assert not d.reset_buffer
+    assert d.extra_label_samples == 0
 
 
 def test_spatial_never_resets():
-    sch = SpatialScheduler(CLHyperParams())
-    plan = sch.next_phase(acc_valid=0.99, acc_label=0.01, t=1.0)
-    assert not plan.reset_buffer
-    assert plan.extra_label_samples == 0
+    pol = SpatialAllocator(CLHyperParams())
+    d = pol.next_decision(_fb(acc_valid=0.99, acc_label=0.01, t=1.0))
+    assert not d.reset_buffer
+    assert d.extra_label_samples == 0
 
 
 def test_eomu_triggers_on_drop_only():
-    sch = EOMUScheduler(CLHyperParams(n_t=100))
-    p1 = sch.next_phase(0.8, 0.8, 1.0)
-    assert p1.retrain_samples == 100  # first window trains
-    p2 = sch.next_phase(0.8, 0.81, 2.0)  # no drop
-    assert p2.retrain_samples == 0
-    p3 = sch.next_phase(0.8, 0.5, 3.0)  # drop -> retrain
-    assert p3.retrain_samples == 100
+    pol = EOMUAllocator(CLHyperParams(n_t=100))
+    d1 = pol.next_decision(_fb(0.8, 0.8, 1.0))
+    assert d1.retrain_samples == 100  # first window trains
+    d2 = pol.next_decision(_fb(0.8, 0.81, 2.0))  # no drop
+    assert d2.retrain_samples == 0
+    d3 = pol.next_decision(_fb(0.8, 0.5, 3.0))  # drop -> retrain
+    assert d3.retrain_samples == 100
 
 
-@hypothesis.settings(max_examples=50, deadline=None)
-@hypothesis.given(
+def test_window_pacing_is_declared_on_decisions():
+    """Window pacing is decision data, not an engine branch."""
+    hp = CLHyperParams()
+    windows = {"dacapo-spatiotemporal": None, "dacapo-spatial": None,
+               "ekya": 120.0, "eomu": 10.0}
+    for name, cls in ALLOCATORS.items():
+        pol = cls(hp)
+        assert pol.initial_decision().pace_window_s == windows[name], name
+
+
+def test_legacy_scheduler_shim():
+    """Old imports and the legacy next_phase API keep working."""
+    from repro.core.scheduler import (
+        PhasePlan,
+        SCHEDULERS,
+        SpatiotemporalScheduler,
+    )
+
+    assert SCHEDULERS is ALLOCATORS
+    assert PhasePlan is AllocationDecision
+    # Positional PhasePlan construction (legacy field order).
+    plan = PhasePlan(10, 4, 8, True, 2)
+    assert plan.retrain_samples == 10 and plan.reset_buffer
+    sch = SpatiotemporalScheduler(CLHyperParams(v_thr=-0.05))
+    plan = sch.next_phase(acc_valid=0.9, acc_label=0.5, t=1.0)
+    assert plan.reset_buffer
+
+
+@settings(max_examples=50, deadline=None)
+@given(
     accs=st.lists(st.tuples(st.floats(0, 1), st.floats(0, 1)), min_size=1,
                   max_size=30),
     v_thr=st.floats(-0.5, 0.0),
-    name=st.sampled_from(sorted(SCHEDULERS)))
-def test_plans_always_valid(accs, v_thr, name):
-    """Whatever the accuracy sequence, plans stay within Table I bounds."""
+    name=st.sampled_from(sorted(ALLOCATORS)))
+def test_decisions_always_valid(accs, v_thr, name):
+    """Whatever the accuracy sequence, decisions stay within Table I
+    bounds."""
     hp = CLHyperParams(v_thr=v_thr)
-    sch = SCHEDULERS[name](hp)
-    plan = sch.initial_plan()
+    pol = ALLOCATORS[name](hp)
+    d = pol.initial_decision()
     for i, (av, al) in enumerate(accs):
-        assert 0 <= plan.retrain_samples <= hp.n_t
-        assert plan.valid_samples == hp.n_v
-        total_label = plan.label_samples + plan.extra_label_samples
-        assert hp.n_l <= total_label <= hp.n_ldd
-        plan = sch.next_phase(av, al, float(i))
+        assert 0 <= d.retrain_samples <= hp.n_t
+        assert d.valid_samples == hp.n_v
+        assert hp.n_l <= d.total_label_samples <= hp.n_ldd
+        d = pol.next_decision(_fb(av, al, float(i)))
 
 
-@hypothesis.settings(max_examples=50, deadline=None)
-@hypothesis.given(
+@settings(max_examples=50, deadline=None)
+@given(
     capacity=st.integers(4, 64),
     batches=st.lists(st.integers(1, 40), min_size=1, max_size=12))
 def test_buffer_capacity_invariant(capacity, batches):
@@ -89,8 +122,8 @@ def test_buffer_capacity_invariant(capacity, batches):
     assert len(buf) == 0
 
 
-@hypothesis.settings(max_examples=30, deadline=None)
-@hypothesis.given(
+@settings(max_examples=30, deadline=None)
+@given(
     n=st.integers(8, 200), n_t=st.integers(1, 300), n_v=st.integers(1, 80))
 def test_buffer_draws_disjoint(n, n_t, n_v):
     buf = SampleBuffer(capacity=512)
@@ -117,6 +150,44 @@ def test_spatial_allocation_meets_fps():
         # Minimality: one fewer row would miss the frame rate.
         if r_bsa > 1:
             assert est.inference_fps(RESNET18, r_bsa - 1, "mx6") < 30.0
+
+
+def test_spatial_allocation_degenerate_cases():
+    """Regression: the fallback must never allocate more rows than exist."""
+    import dataclasses
+
+    from repro.configs.dacapo_pairs import RESNET18
+    from repro.core.estimator import spatial_allocation
+
+    @dataclasses.dataclass(frozen=True)
+    class FakeEstimator:
+        total_rows: int
+        fps_per_row: float
+
+        def inference_fps(self, cfg, rows, precision):
+            return rows * self.fps_per_row
+
+    # Single-row array: seed code returned (1, 1) — two rows from one.
+    r_tsa, r_bsa = spatial_allocation(FakeEstimator(1, 100.0), RESNET18,
+                                      fps=30.0, precision="mx6")
+    assert (r_tsa, r_bsa) == (0, 1)
+    # rows == total sustains fps but no proper split does: whole array to
+    # B-SA instead of the old under-provisioned (1, total-1) fallback.
+    r_tsa, r_bsa = spatial_allocation(FakeEstimator(2, 20.0), RESNET18,
+                                      fps=30.0, precision="mx6")
+    assert (r_tsa, r_bsa) == (0, 2)
+    # Overloaded even at full width: keep one training row.
+    r_tsa, r_bsa = spatial_allocation(FakeEstimator(4, 1.0), RESNET18,
+                                      fps=30.0, precision="mx6")
+    assert (r_tsa, r_bsa) == (1, 3)
+    # Invariant across regimes: rows always sum to the array size.
+    for total in (1, 2, 3, 8):
+        for fps_per_row in (0.1, 10.0, 100.0):
+            r_tsa, r_bsa = spatial_allocation(
+                FakeEstimator(total, fps_per_row), RESNET18, fps=30.0,
+                precision="mx6")
+            assert r_tsa + r_bsa == total, (total, fps_per_row)
+            assert r_bsa >= 1
 
 
 def test_mx_precision_cycle_ordering():
