@@ -1,0 +1,176 @@
+"""Dispatch-layer benchmark: sequential vs. concurrent execution + fused
+score-window inference.
+
+Two measurements, written machine-readable to ``BENCH_dispatch.json`` (the
+first entry of the bench trajectory):
+
+* **session** — one `CLSession` per dispatch mode on a forced 2-row mesh,
+  identical pretrained weights and stream: host wall-clock, executed phases,
+  mean per-phase virtual time (sequential charges the T-SA sum, concurrent
+  charges ``max(t_TSA, t_BSA)`` — see core/dispatch.py), and the number of
+  jitted apply dispatches issued by the inference+labeling kernels.
+* **scoring_fusion** — the eval/labeling inference path: scoring W frame
+  windows one-jitted-call-per-window (the seed pattern) vs. ONE fused
+  ``predict_batched`` call, with frames produced through the prefetching
+  window iterator (`DriftStream.windows`) so host-side frame synthesis
+  overlaps device work. Acceptance: fused issues fewer jitted calls.
+
+Run:  PYTHONPATH=src python benchmarks/bench_dispatch.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+
+
+def _session_stats(res, session, wall_s: float) -> dict:
+    recs = res.records
+    dts = [r.t - r.phase_start for r in recs]
+    return {
+        "wall_s": round(wall_s, 3),
+        "phases": len(recs),
+        "virtual_end_s": round(recs[-1].t, 4) if recs else 0.0,
+        "mean_phase_dt_s": round(float(np.mean(dts)), 6) if dts else 0.0,
+        "mean_t_tsa_s": round(float(np.mean([r.t_tsa for r in recs])), 6)
+        if recs else 0.0,
+        "mean_t_bsa_s": round(float(np.mean([r.t_bsa for r in recs])), 6)
+        if recs else 0.0,
+        "avg_accuracy": round(res.avg_accuracy, 6),
+        "jit_calls": (session.inference.n_apply_calls
+                      + session.labeling.n_apply_calls),
+    }
+
+
+def bench_session(smoke: bool) -> dict:
+    from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+    from repro.core.allocation import CLHyperParams
+    from repro.core.partition import forced_row_mesh
+    from repro.core.session import CLSystemSpec, pretrain_model
+    from repro.data.stream import DriftStream, scenario
+    from repro.models.registry import make_vision_model
+
+    duration = 20.0 if smoke else 60.0
+    hp = CLHyperParams(n_t=32 if smoke else 48, n_l=16 if smoke else 24,
+                       c_b=128 if smoke else 192, epochs=1)
+    stream = DriftStream(scenario("S1", 2 if smoke else 3), seed=5, img=24)
+    rng = np.random.default_rng(0)
+    steps = (10, 8) if smoke else (25, 15)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        steps[0], 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream,
+                        steps[1], 32, rng, segments=stream.segments[:1],
+                        seed=8)
+
+    # Forced 2-row mesh: T-SA and B-SA become disjoint sub-meshes so the
+    # concurrent mode's overlap model matches the bound placement.
+    mesh = forced_row_mesh(2)
+    base = CLSystemSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                        allocator="dacapo-spatiotemporal", apply_mx=False,
+                        seed=0, eval_fps=0.5, mesh=mesh)
+
+    out = {"duration_s": duration}
+    for mode in ("sequential", "concurrent"):
+        session = dataclasses.replace(base, dispatch=mode).build()
+        session.set_pretrained(tp, sp)
+        t0 = time.perf_counter()
+        res = session.run(stream, duration=duration)
+        wall = time.perf_counter() - t0
+        out[mode] = _session_stats(res, session, wall)
+    seq_dt, con_dt = (out["sequential"]["mean_phase_dt_s"],
+                      out["concurrent"]["mean_phase_dt_s"])
+    out["virtual_phase_speedup"] = round(seq_dt / con_dt, 4) if con_dt else 0
+    return out
+
+
+def bench_scoring_fusion(smoke: bool) -> dict:
+    from repro.configs.dacapo_pairs import RESNET18
+    from repro.core.estimator import DaCapoEstimator
+    from repro.core.kernel import InferenceKernel
+    from repro.data.stream import DriftStream, scenario
+    from repro.models.registry import make_vision_model
+
+    n_windows = 6 if smoke else 16
+    frames_per_window = 8 if smoke else 24
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    model = make_vision_model(RESNET18.reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    kernel = InferenceKernel(model, RESNET18, DaCapoEstimator(),
+                             apply_mx=False)
+
+    window_s = frames_per_window / stream.fps
+    spans_end = n_windows * window_s
+
+    def gather():
+        it = stream.windows(0.0, spans_end, window_s,
+                            max_frames=frames_per_window, prefetch=3)
+        return [(x, y) for _, _, x, y in it]
+
+    windows = gather()
+    total = sum(len(x) for x, _ in windows)
+
+    # Warm both jit paths (per-window shape and fused shape).
+    np.asarray(kernel.predict_async(params, windows[0][0]))
+    [np.asarray(p) for p in
+     kernel.predict_batched(params, [x for x, _ in windows])]
+
+    kernel.n_apply_calls = 0
+    t0 = time.perf_counter()
+    preds_pw = [kernel.predict_async(params, x) for x, _ in windows]
+    preds_pw = [np.asarray(p) for p in preds_pw]
+    wall_pw = time.perf_counter() - t0
+    calls_pw = kernel.n_apply_calls
+
+    kernel.n_apply_calls = 0
+    t0 = time.perf_counter()
+    preds_f = kernel.predict_batched(params, [x for x, _ in windows])
+    preds_f = [np.asarray(p) for p in preds_f]
+    wall_f = time.perf_counter() - t0
+    calls_f = kernel.n_apply_calls
+
+    assert all(np.array_equal(a, b) for a, b in zip(preds_pw, preds_f)), \
+        "fused predictions diverge from per-window predictions"
+    assert calls_f < calls_pw, \
+        f"fusion must issue fewer jitted calls ({calls_f} !< {calls_pw})"
+
+    return {
+        "n_windows": n_windows,
+        "frames_per_window": frames_per_window,
+        "per_window": {"jit_calls": calls_pw, "wall_s": round(wall_pw, 4),
+                       "frames_per_s": round(total / wall_pw, 1)},
+        "fused": {"jit_calls": calls_f, "wall_s": round(wall_f, 4),
+                  "frames_per_s": round(total / wall_f, 1)},
+        "call_reduction": round(calls_pw / calls_f, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    args = ap.parse_args()
+
+    result = {
+        "bench": "dispatch",
+        "mode": "smoke" if args.smoke else "full",
+        "backend": jax.default_backend(),
+        "scoring_fusion": bench_scoring_fusion(args.smoke),
+        "session": bench_session(args.smoke),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

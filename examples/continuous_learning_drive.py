@@ -4,7 +4,14 @@ Runs the full Algorithm 1 system against an extreme scenario (ES1 — all four
 drift axes) and compares against the Ekya-like fixed-window baseline on
 identical pretrained weights, printing the accuracy timeline.
 
+``--dispatch concurrent`` executes through the async dispatch layer
+(core/dispatch.py): a forced 2-row mesh is fissioned into T-SA/B-SA
+sub-meshes, score windows are fused into batched inference, and each phase
+charges max(t_TSA, t_BSA) — the paper's Fig. 4 overlap — instead of the
+serial chain.
+
 Run:  PYTHONPATH=src python examples/continuous_learning_drive.py [--fast]
+          [--dispatch sequential|concurrent]
 """
 import argparse
 import os
@@ -18,12 +25,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--scenario", default="ES1")
+    ap.add_argument("--dispatch", default="sequential",
+                    choices=("sequential", "concurrent"))
     args = ap.parse_args()
 
     from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
     from repro.core import CLHyperParams, CLSystemSpec, pretrain_model
+    from repro.core.partition import forced_row_mesh
     from repro.data.stream import DriftStream, scenario
     from repro.models.registry import make_vision_model
+
+    mesh = None
+    if args.dispatch == "concurrent":
+        # Force a 2-row mesh so T-SA and B-SA are disjoint sub-meshes.
+        mesh = forced_row_mesh(2)
 
     n_seg = 3 if args.fast else 5
     duration = 90.0 if args.fast else 240.0
@@ -45,12 +60,14 @@ def main():
     for allocator in ("dacapo-spatiotemporal", "ekya"):
         session = CLSystemSpec(
             student=RESNET18, teacher=WIDERESNET50, hp=hp,
-            allocator=allocator, apply_mx=False, eval_fps=0.5).build()
+            allocator=allocator, apply_mx=False, eval_fps=0.5,
+            mesh=mesh, dispatch=args.dispatch).build()
         session.set_pretrained(tp, sp)
         # Observer hook: structured per-phase metrics as they happen.
         session.add_observer(lambda rec, name=allocator: print(
             f"  [{name}] phase {rec.index:2d} t={rec.t:6.1f}s "
             f"acc_v={rec.acc_valid:.2f} acc_l={rec.acc_label:.2f}"
+            f" tsa/bsa={rec.t_tsa:.2f}/{rec.t_bsa:.2f}s"
             f"{' DRIFT' if rec.drift else ''}"))
         results[allocator] = session.run(stream, duration=duration)
 

@@ -14,6 +14,13 @@ from repro.core.allocation import (  # noqa: F401
     make_allocator,
 )
 from repro.core.cl_system import ContinuousLearningSystem  # noqa: F401
+from repro.core.dispatch import (  # noqa: F401
+    DISPATCH_MODES,
+    DeviceProgram,
+    KernelDispatcher,
+    PhasePlan,
+    ProgramHandle,
+)
 from repro.core.estimator import (  # noqa: F401
     DaCapoEstimator,
     TPUEstimator,

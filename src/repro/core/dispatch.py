@@ -1,0 +1,202 @@
+"""Async kernel dispatch: the plan → dispatch → collect execution layer.
+
+The paper's core system claim (Fig. 4) is that inference on the B-SA runs
+*concurrently* with labeling/retraining on the T-SA once the array is
+spatially partitioned. This module is the execution layer that realizes that
+overlap for the engine (core/session.py): instead of calling kernels inline
+and forcing a host sync (``np.asarray``) after every call, the session builds
+a per-phase :class:`PhasePlan`, *dispatches* device programs through it — JAX
+async dispatch returns device arrays immediately, so programs enqueued on the
+disjoint T-SA / B-SA sub-meshes overlap on device — and *collects* host
+values only at the phase-end barrier where :class:`~repro.core.allocation.\
+PhaseFeedback` genuinely needs them.
+
+Virtual-clock semantics (``dispatch=`` on ``CLSystemSpec`` / ``CLSession``):
+
+``"sequential"`` (default)
+    The seed accounting, preserved bit-for-bit: everything time-shares one
+    serial chain, so the phase clock advances by the **sum** of the charged
+    program costs in issue order — retraining batches, validation inference
+    (charged at the T-SA rows, as the seed did), labeling. The B-SA-side
+    measurement programs (accuracy scoring of the serving stream,
+    labeled-frame predictions) are tracked in the phase ledger but never
+    gate the serial chain — exactly the seed numbers the golden test in
+    ``tests/test_session.py`` pins.
+
+``"concurrent"``
+    The paper's spatial-concurrency model: T-SA and B-SA programs execute in
+    parallel on their disjoint sub-accelerators, so the phase advances by
+    ``max(t_TSA, t_BSA)`` — the **max** of the per-role cost totals — instead
+    of the sum. Programs follow their kernel's placement: the T-SA chain is
+    retraining + teacher labeling; the inference kernel's programs
+    (post-update validation, labeled-frame serving predictions, accuracy
+    scoring) are B-SA work charged at the B-SA's own throughput
+    (``rows_bsa`` rows, the decision's inference precision). Fixed-window
+    pacing (``pace_window_s``) still floors the phase end on the window grid.
+
+Host-side, both modes issue every program eagerly (``dispatch`` calls the
+program's thunk immediately); the difference is purely in clock accounting.
+Because JAX dispatch is asynchronous, eager issue + deferred ``collect()`` is
+what lets XLA overlap the B-SA scoring stream with T-SA work — the session
+never blocks between programs of one phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+SEQUENTIAL = "sequential"
+CONCURRENT = "concurrent"
+DISPATCH_MODES = (SEQUENTIAL, CONCURRENT)
+
+ROLES = ("t_sa", "b_sa")
+
+
+class ProgramHandle:
+    """Deferred result of an issued device program.
+
+    Holds the device value returned by the program's thunk; ``collect()`` is
+    the only point that blocks (materializes to host numpy). Collect is
+    idempotent — repeated calls return the cached host value.
+    """
+
+    __slots__ = ("_value", "_host", "_collected")
+
+    def __init__(self, value: Any):
+        self._value = value
+        self._host: Any = None
+        self._collected = False
+
+    @property
+    def issued(self) -> Any:
+        """The raw (device-side) value, without forcing a sync."""
+        return self._value
+
+    def collect(self) -> np.ndarray:
+        if not self._collected:
+            self._host = np.asarray(self._value)
+            self._value = None  # drop the device reference
+            self._collected = True
+        return self._host
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProgram:
+    """One dispatched unit of device work, with its virtual-clock cost."""
+
+    role: str  # "t_sa" | "b_sa"
+    label: str  # e.g. "valid", "label", "score", "acc_label"
+    cost_s: float
+    handle: Optional[ProgramHandle]
+
+
+class PhasePlan:
+    """Clock + program ledger for one phase, built as the session executes.
+
+    The running T-SA clock (``now()``) reproduces the seed's float-add
+    sequence exactly: each T-SA charge is a single ``+=`` on the same
+    accumulator the seed used, so sequential-mode boundaries (score windows,
+    pacing, loop exits) see bit-identical times.
+    """
+
+    def __init__(self, mode: str, start: float):
+        self.mode = mode
+        self.start = start
+        self.programs: List[DeviceProgram] = []
+        self.totals: Dict[str, float] = {role: 0.0 for role in ROLES}
+        self._now = start  # T-SA running clock (seed accumulator)
+        self._floor = start  # pacing floor on the phase end
+
+    # ----------------------------------------------------------- dispatch
+    def dispatch(self, role: str, label: str, issue: Callable[[], Any],
+                 cost_s: float = 0.0) -> ProgramHandle:
+        """Issue a device program *now* (async — the thunk must not block)
+        and charge its cost; returns a handle to ``collect()`` later."""
+        handle = ProgramHandle(issue())
+        self.programs.append(DeviceProgram(role, label, cost_s, handle))
+        self.charge(role, cost_s)
+        return handle
+
+    def charge(self, role: str, seconds: float) -> None:
+        """Charge virtual time without an attached program (e.g. retraining
+        SGD, whose cost is known only after the batch count is)."""
+        self.totals[role] += seconds
+        if role == "t_sa":
+            self._now += seconds
+
+    def pad_to(self, t: float) -> None:
+        """Floor the phase end on a pacing-grid boundary (pace_window_s)."""
+        if t > self._floor:
+            self._floor = t
+
+    # -------------------------------------------------------------- clock
+    def now(self) -> float:
+        """Running clock while the phase is being built: the T-SA chain
+        drives phase structure in both modes (the B-SA overlaps it)."""
+        return self._now
+
+    @property
+    def t_tsa(self) -> float:
+        return self._now - self.start
+
+    @property
+    def t_bsa(self) -> float:
+        return self.totals["b_sa"]
+
+    def finish(self) -> float:
+        """Phase-end clock. Sequential: the T-SA sum (seed semantics);
+        concurrent: start + max(t_TSA, t_BSA). Both respect the pacing
+        floor, matching the seed's ``clock = next_boundary`` assignment."""
+        end = self._now
+        if self.mode == CONCURRENT:
+            end = max(end, self.start + self.totals["b_sa"])
+        return max(end, self._floor)
+
+    # ------------------------------------------------------------ collect
+    def collect_all(self) -> None:
+        """Barrier: materialize every outstanding program of this phase."""
+        for prog in self.programs:
+            if prog.handle is not None:
+                prog.handle.collect()
+
+
+class KernelDispatcher:
+    """Factory + bookkeeping for per-phase plans.
+
+    One dispatcher lives on a :class:`~repro.core.session.CLSession`; its
+    mode decides the clock semantics of every :class:`PhasePlan` it opens
+    (see module docstring). ``phases_dispatched`` / ``programs_dispatched``
+    are cumulative counters for benchmarks and tests.
+    """
+
+    def __init__(self, mode: str = SEQUENTIAL):
+        if mode not in DISPATCH_MODES:
+            raise ValueError(
+                f"unknown dispatch mode {mode!r}; known: {DISPATCH_MODES}")
+        self.mode = mode
+        self.phases_dispatched = 0
+        self.programs_dispatched = 0
+
+    @property
+    def concurrent(self) -> bool:
+        return self.mode == CONCURRENT
+
+    def begin_phase(self, start: float) -> PhasePlan:
+        plan = _TrackedPlan(self, self.mode, start)
+        self.phases_dispatched += 1
+        return plan
+
+
+class _TrackedPlan(PhasePlan):
+    """PhasePlan that feeds the dispatcher's cumulative program counter."""
+
+    def __init__(self, dispatcher: KernelDispatcher, mode: str, start: float):
+        super().__init__(mode, start)
+        self._dispatcher = dispatcher
+
+    def dispatch(self, role: str, label: str, issue: Callable[[], Any],
+                 cost_s: float = 0.0) -> ProgramHandle:
+        self._dispatcher.programs_dispatched += 1
+        return super().dispatch(role, label, issue, cost_s)

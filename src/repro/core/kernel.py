@@ -13,10 +13,19 @@ The engine (core/session.py) never touches models or estimators directly; it
 executes ``AllocationDecision``s by calling kernel methods with the rows and
 precisions the decision carries. On a single device the partition binding is
 a no-op and the three kernels time-share — the paper's own fallback.
+
+Entry points come in two flavors so the dispatch layer (core/dispatch.py)
+can overlap T-SA and B-SA work: the ``*_async`` methods return **device
+arrays** without forcing a host sync (JAX async dispatch keeps running), and
+the classic host-returning methods are thin ``np.asarray`` wrappers kept for
+callers outside the hot path. ``predict_batched`` fuses several frame
+windows into one jitted apply; ``label_async`` optionally microbatches large
+labeling bursts so each chunk starts executing while the next is staged.
+Every jitted apply invocation bumps ``n_apply_calls`` (bench/test counter).
 """
 from __future__ import annotations
 
-from typing import Protocol, Tuple, runtime_checkable
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +59,7 @@ class _PlacedKernel:
     def __init__(self):
         self.submesh = None
         self._device = None
+        self.n_apply_calls = 0  # jitted-dispatch counter (bench/tests)
 
     def bind_partition(self, partition: SpatialPartition) -> None:
         if partition.time_shared:
@@ -61,6 +71,10 @@ class _PlacedKernel:
 
     def _put(self, x):
         return x if self._device is None else jax.device_put(x, self._device)
+
+    def _run_apply(self, params, x):
+        self.n_apply_calls += 1
+        return self._apply(params, self._put(x))
 
 
 class InferenceKernel(_PlacedKernel):
@@ -85,8 +99,35 @@ class InferenceKernel(_PlacedKernel):
             return mx_lib.quantize_tree(params, precision)
         return params
 
+    def predict_async(self, params, x) -> jax.Array:
+        """Class ids as a device array — no host sync; the dispatch layer
+        collects when (and if) feedback needs the values."""
+        return jnp.argmax(self._run_apply(params, x), -1)
+
     def predict(self, params, x) -> np.ndarray:
-        return np.asarray(jnp.argmax(self._apply(params, self._put(x)), -1))
+        return np.asarray(self.predict_async(params, x))
+
+    def predict_batched(self, params,
+                        windows: Sequence[np.ndarray]) -> List[jax.Array]:
+        """Fuse several frame windows into ONE jitted apply.
+
+        The seed path issued one jitted call per score window; fusing
+        concatenates the windows on the batch axis, applies once, and splits
+        the predictions back per window (device-side slices, still async).
+        Per-sample models (GroupNorm, no cross-batch stats) make the fused
+        predictions equal to the per-window ones.
+        """
+        if not windows:
+            return []
+        if len(windows) == 1:
+            return [self.predict_async(params, windows[0])]
+        sizes = [len(w) for w in windows]
+        fused = self.predict_async(params, np.concatenate(windows, axis=0))
+        out, off = [], 0
+        for size in sizes:
+            out.append(fused[off: off + size])
+            off += size
+        return out
 
     def time_per_sample(self, rows: int, precision: str) -> float:
         return self.estimator.forward_time(self.full_cfg, rows, precision,
@@ -116,10 +157,24 @@ class LabelingKernel(_PlacedKernel):
         self.apply_mx = apply_mx
         self._apply = jax.jit(model.apply)
 
-    def label(self, params, x, precision: str) -> np.ndarray:
+    def label_async(self, params, x, precision: str,
+                    microbatch: Optional[int] = None) -> jax.Array:
+        """Pseudo-labels as a device array (no host sync). With
+        ``microbatch``, large labeling bursts (N_ldd on drift) are split into
+        chunks so each starts executing on the T-SA while the next is staged
+        — per-sample models make the result equal to one full-batch call."""
         if self.apply_mx:
             params = mx_lib.quantize_tree(params, precision)
-        return np.asarray(jnp.argmax(self._apply(params, self._put(x)), -1))
+        if microbatch and len(x) > microbatch:
+            parts = [jnp.argmax(self._run_apply(params, x[i: i + microbatch]),
+                                -1)
+                     for i in range(0, len(x), microbatch)]
+            return jnp.concatenate(parts)
+        return jnp.argmax(self._run_apply(params, x), -1)
+
+    def label(self, params, x, precision: str,
+              microbatch: Optional[int] = None) -> np.ndarray:
+        return np.asarray(self.label_async(params, x, precision, microbatch))
 
     def time_per_sample(self, rows: int, precision: str) -> float:
         return self.estimator.forward_time(self.full_cfg, rows, precision,
@@ -160,15 +215,18 @@ class RetrainKernel(_PlacedKernel):
             rng: np.random.Generator) -> Tuple[object, object, int]:
         """Retrain (Alg. 1 line 5): epochs x minibatch SGD over D_t.
         Returns (params, opt, n_batches) — the engine charges
-        n_batches * time_per_batch to the virtual clock."""
+        n_batches * time_per_batch to the virtual clock, and n_batches is
+        exactly the number of SGD steps executed (a D_t smaller than one
+        SGD batch runs — and charges — zero steps)."""
         hp = self.hp
-        n_batches = max(1, len(xt) // hp.sgd_batch) * hp.epochs
+        n_batches = 0
         for _ in range(hp.epochs):
             perm = rng.permutation(len(xt))
             for i in range(0, len(xt) - hp.sgd_batch + 1, hp.sgd_batch):
                 idx = perm[i: i + hp.sgd_batch]
                 params, opt, _ = self._step(params, opt, self._put(xt[idx]),
                                             self._put(yt[idx]))
+                n_batches += 1
         return params, opt, n_batches
 
     def time_per_batch(self, rows: int, precision: str) -> float:

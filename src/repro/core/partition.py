@@ -55,3 +55,13 @@ def partition_mesh(mesh: Mesh, rows_bsa: int,
 
 def single_device_partition() -> SpatialPartition:
     return SpatialPartition(t_sa=None, b_sa=None, time_shared=True)
+
+
+def forced_row_mesh(n_rows: int) -> Mesh:
+    """An ``n_rows x 1`` mesh for exercising mesh fission anywhere: real
+    devices when the host has enough, the first device repeated otherwise
+    (benchmarks, tests and examples on single-device containers)."""
+    devices = jax.devices()
+    rows = (devices[:n_rows] if len(devices) >= n_rows
+            else devices[:1] * n_rows)
+    return Mesh(np.array(rows).reshape(n_rows, 1), ("data", "model"))

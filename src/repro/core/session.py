@@ -25,6 +25,16 @@ B-SA sub-meshes and binds each kernel to its sub-accelerator (re-partitioning
 online if a decision changes the split); on a single device the partition
 degenerates to time-sharing, the paper's own fallback.
 
+Execution goes through the dispatch layer (core/dispatch.py): each phase is
+a :class:`~repro.core.dispatch.PhasePlan` the loop builds as it goes — kernel
+programs are *dispatched* (issued async, returning device arrays) and host
+values are *collected* only at the phase-end barrier where ``PhaseFeedback``
+needs them. ``dispatch="sequential"`` (default) preserves the seed's serial
+virtual-clock accounting bit-for-bit; ``dispatch="concurrent"`` charges
+``max(t_TSA, t_BSA)`` per phase — the paper's Fig. 4 overlap of B-SA serving
+with T-SA labeling/retraining — and fuses score windows into batched
+inference calls.
+
 Per-phase structured metrics flow to observers — callables receiving a
 :class:`PhaseRecord` — instead of being scraped out of ad-hoc dicts.
 """
@@ -46,6 +56,7 @@ from repro.core.allocation import (
     PhaseFeedback,
     make_allocator,
 )
+from repro.core.dispatch import KernelDispatcher, PhasePlan
 from repro.core.estimator import DaCapoEstimator
 from repro.core.kernel import InferenceKernel, LabelingKernel, RetrainKernel
 from repro.core.partition import (
@@ -83,6 +94,9 @@ class PhaseRecord:
     label_time: float  # cumulative
     decision: AllocationDecision  # the decision this phase executed
     next_decision: AllocationDecision  # what the policy chose for the next
+    phase_start: float = 0.0  # virtual clock at phase start
+    t_tsa: float = 0.0  # T-SA kernel time this phase (retrain+valid+label)
+    t_bsa: float = 0.0  # B-SA kernel time this phase (serving-side programs)
 
     def as_log_entry(self) -> dict:
         """Legacy ``phase_log`` dict layout."""
@@ -93,6 +107,51 @@ class PhaseRecord:
 
 
 PhaseObserver = Callable[[PhaseRecord], None]
+
+
+class _ScoreSink:
+    """Deferred accuracy timeline: the B-SA serving-side scoring stream.
+
+    ``add`` queues a score window; without fusion each window is dispatched
+    immediately as its own async predict (the seed's one-jitted-call-per-
+    window pattern, minus the per-call host sync). With ``fuse`` (concurrent
+    dispatch), windows accumulate and ``flush`` issues ONE batched predict
+    per phase via ``InferenceKernel.predict_batched``. ``timeline`` is the
+    only point that materializes predictions to host numpy.
+    """
+
+    def __init__(self, kernel: InferenceKernel, fuse: bool):
+        self.kernel = kernel
+        self.fuse = fuse
+        self._pending: List[tuple] = []  # (t_end, x, y, keep_frac)
+        self._params = None  # serving params of the pending windows
+        self._entries: List[tuple] = []  # (t_end, pred_dev, y, keep_frac)
+
+    def add(self, t_end: float, x, y, keep_frac: float, params) -> None:
+        if not self.fuse:
+            pred = self.kernel.predict_async(params, x)
+            self._entries.append((t_end, pred, y, keep_frac))
+            return
+        if self._pending and self._params is not params:
+            self.flush()  # serving params changed mid-queue
+        self._params = params
+        self._pending.append((t_end, x, y, keep_frac))
+
+    def flush(self) -> None:
+        """Dispatch queued windows (one fused jitted call) — still async."""
+        if not self._pending:
+            return
+        preds = self.kernel.predict_batched(
+            self._params, [x for _, x, _, _ in self._pending])
+        for (t_end, _x, y, kf), pred in zip(self._pending, preds):
+            self._entries.append((t_end, pred, y, kf))
+        self._pending.clear()
+
+    def timeline(self) -> List[Tuple[float, float]]:
+        """Collect: materialize every queued prediction into (t, acc)."""
+        self.flush()
+        return [(t_end, float((np.asarray(pred) == y).mean()) * kf)
+                for t_end, pred, y, kf in self._entries]
 
 
 class CLSession:
@@ -111,12 +170,23 @@ class CLSession:
         eval_fps: float = 2.0,
         mesh=None,
         observers: Sequence[PhaseObserver] = (),
+        dispatch: str = "sequential",
+        label_microbatch: Optional[int] = None,
     ):
         self.hp = hp or CLHyperParams()
         self.estimator = estimator or DaCapoEstimator()
         self.policy = precision_policy
         self.apply_mx = apply_mx_numerics
         self.eval_fps = eval_fps  # accuracy-scoring subsample rate
+        self.dispatcher = KernelDispatcher(dispatch)
+        # Microbatched labeling: seed call pattern (one jitted call) by
+        # default; concurrent mode chunks big label bursts unless overridden
+        # (0 explicitly disables microbatching in either mode).
+        if label_microbatch is None:
+            self._label_microbatch = (64 if self.dispatcher.concurrent
+                                      else None)
+        else:
+            self._label_microbatch = label_microbatch or None
         self.full_student, self.full_teacher = student_cfg, teacher_cfg
         self.student_cfg = student_cfg.reduced()
         self.teacher_cfg = teacher_cfg.reduced()
@@ -154,14 +224,20 @@ class CLSession:
 
     # --------------------------------------------------------------- mesh
     def _mesh_split(self, rows_bsa: int) -> int:
-        """Map the estimator's row split onto the mesh's leading axis."""
+        """Map the estimator's row split onto the mesh's leading axis.
+        A single-row mesh cannot be fissioned — return 0 so `_repartition`
+        degenerates to time-sharing (the paper's R=0 fallback) instead of
+        asking `partition_mesh` to split an unsplittable mesh."""
         n_rows = self.mesh.devices.shape[0]
+        if n_rows < 2:
+            return 0
         frac = rows_bsa / max(1, self.estimator.total_rows)
         return max(1, min(n_rows - 1, round(n_rows * frac)))
 
     def _repartition(self, rows_bsa: int) -> None:
         """(Re)fission the mesh for a row split; bind kernels to sub-meshes.
-        Single-device sessions keep the degenerate time-shared partition."""
+        Single-device sessions keep the degenerate time-shared partition;
+        an unchanged split leaves the current partition untouched."""
         if self.mesh is None:
             for k in self.kernels:
                 k.bind_partition(self.partition)
@@ -170,7 +246,8 @@ class CLSession:
         if want == self._mesh_rows_bsa:
             return
         self._mesh_rows_bsa = want
-        self.partition = partition_mesh(self.mesh, want)
+        self.partition = (single_device_partition() if want == 0
+                          else partition_mesh(self.mesh, want))
         for k in self.kernels:
             k.bind_partition(self.partition)
 
@@ -223,21 +300,27 @@ class CLSession:
             self.student_params, decision.precisions.inference)
         clock = 0.0
         eval_cursor = 0.0
-        acc_timeline: List[Tuple[float, float]] = []
+        sink = _ScoreSink(self.inference,
+                          fuse=self.dispatcher.concurrent)
         records: List[PhaseRecord] = []
         retrain_time = label_time = 0.0
         drift_events = 0
 
-        def score_until(t_end: float, serving_params):
-            """Student inference accuracy on [eval_cursor, t_end)."""
+        def score_until(t_end: float, serving_params,
+                        plan: Optional[PhasePlan]):
+            """Queue student-accuracy scoring on [eval_cursor, t_end): the
+            B-SA serving-side program of the phase. Predictions are
+            dispatched async (fused per phase in concurrent mode) and
+            materialized only when the timeline is assembled."""
             nonlocal eval_cursor
             if t_end <= eval_cursor + 1e-9:
                 return
             n_eval = max(1, int((t_end - eval_cursor) * self.eval_fps))
             x, y = stream.frames(eval_cursor, t_end, max_frames=n_eval)
-            pred = self.inference.predict(serving_params, x)
-            acc = float((pred == y).mean()) * keep_frac
-            acc_timeline.append((t_end, acc))
+            if plan is not None:
+                plan.charge("b_sa", len(x) * self.inference.time_per_sample(
+                    r_bsa, decision.precisions.inference))
+            sink.add(t_end, x, y, keep_frac, serving_params)
             eval_cursor = t_end
 
         while clock < duration:
@@ -247,6 +330,9 @@ class CLSession:
             self._repartition(r_bsa)
             keep_frac = self.inference.keep_frac(r_bsa, prec.inference,
                                                  hp.fps)
+            # ---- Plan: open the phase ledger on the dispatcher. ----------
+            plan = self.dispatcher.begin_phase(clock)
+            valid_h = xv = yv = None
             # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
             acc_v = 1.0
             if len(buffer) >= hp.sgd_batch and decision.retrain_samples > 0:
@@ -256,17 +342,27 @@ class CLSession:
                     self.student_params, self._opt, xt, yt, self.rng)
                 t_phase = n_batches * self.retrain.time_per_batch(
                     r_tsa, prec.retraining)
-                clock += t_phase
+                plan.charge("t_sa", t_phase)
                 retrain_time += t_phase
-                # UpdateWeight + Valid (lines 6-7).
+                # UpdateWeight + Valid (lines 6-7) — dispatched async; the
+                # accuracy is collected at the phase-end feedback barrier.
+                # Sequential keeps the seed's time-shared serial accounting
+                # (validation charged on the T-SA chain); concurrent places
+                # it where the inference kernel actually lives — the B-SA —
+                # so it overlaps the T-SA moving on to labeling.
                 serving = self.inference.serving_params(self.student_params,
                                                         prec.inference)
-                pv = self.inference.predict(serving, xv)
-                acc_v = float((pv == yv).mean())
-                clock += len(xv) * self.inference.time_per_sample(
-                    r_tsa, prec.inference)
-            score_until(min(clock, duration), serving)
-            if clock >= duration:
+                v_role, v_rows = (("b_sa", r_bsa)
+                                  if self.dispatcher.concurrent
+                                  else ("t_sa", r_tsa))
+                valid_h = plan.dispatch(
+                    v_role, "valid",
+                    lambda s=serving, v=xv: self.inference.predict_async(s, v),
+                    cost_s=len(xv) * self.inference.time_per_sample(
+                        v_rows, prec.inference))
+            score_until(min(plan.now(), duration), serving, plan)
+            if plan.now() >= duration:
+                clock = plan.finish()
                 break
 
             # ---------------- Labeling (lines 8-10) ------------------------
@@ -274,26 +370,47 @@ class CLSession:
             if decision.reset_buffer:
                 buffer.reset()  # line 12
                 drift_events += 1
-            t_lab0 = clock
-            x_l, _y_true = stream.frames(clock, clock + n_label / hp.fps,
+            t_lab0 = plan.now()
+            x_l, _y_true = stream.frames(t_lab0, t_lab0 + n_label / hp.fps,
                                          max_frames=n_label)
-            y_l = self.labeling.label(self.teacher_params, x_l, prec.labeling)
-            clock += n_label * self.labeling.time_per_sample(
-                r_tsa, prec.labeling)
-            label_time += clock - t_lab0
-            pred_l = self.inference.predict(serving, x_l)
-            acc_l = float((pred_l == y_l).mean())
-            buffer.update(x_l, y_l)  # line 14
-            score_until(min(clock, duration), serving)
+            label_h = plan.dispatch(
+                "t_sa", "label",
+                lambda: self.labeling.label_async(
+                    self.teacher_params, x_l, prec.labeling,
+                    microbatch=self._label_microbatch),
+                cost_s=n_label * self.labeling.time_per_sample(
+                    r_tsa, prec.labeling))
+            label_time += plan.now() - t_lab0
+            pred_l_h = plan.dispatch(
+                "b_sa", "acc_label",
+                lambda: self.inference.predict_async(serving, x_l),
+                cost_s=len(x_l) * self.inference.time_per_sample(
+                    r_bsa, prec.inference))
+            score_until(min(plan.now(), duration), serving, plan)
 
             # Fixed-window pacing, declared by the decision (no baseline-
             # specific branch: any policy may put phases on a window grid).
             if decision.pace_window_s:
                 w = decision.pace_window_s
                 next_boundary = (int(phase_start / w) + 1) * w
-                if clock < next_boundary:
-                    score_until(min(next_boundary, duration), serving)
-                    clock = next_boundary
+                if plan.now() < next_boundary:
+                    score_until(min(next_boundary, duration), serving, plan)
+                    plan.pad_to(next_boundary)
+
+            # ---- Collect: the phase-end barrier — the only host sync. ----
+            clock = plan.finish()
+            # Concurrent mode: when the B-SA dominates, the phase end runs
+            # past the T-SA clock the score windows tracked — score that
+            # tail now, under THIS phase's serving params (uncharged: the
+            # phase end already reflects the B-SA busy period). Sequential
+            # mode is a no-op (clock == the last scored boundary).
+            score_until(min(clock, duration), serving, None)
+            if valid_h is not None:
+                acc_v = float((valid_h.collect() == yv).mean())
+            y_l = label_h.collect()
+            acc_l = float((pred_l_h.collect() == y_l).mean())
+            buffer.update(x_l, y_l)  # line 14
+            sink.flush()  # issue fused scoring before serving params change
 
             # ---------------- Next decision (lines 11-13) ------------------
             feedback = PhaseFeedback(
@@ -305,13 +422,15 @@ class CLSession:
                 index=len(records), t=clock, acc_valid=acc_v,
                 acc_label=acc_l, drift=next_decision.reset_buffer,
                 retrain_time=retrain_time, label_time=label_time,
-                decision=decision, next_decision=next_decision)
+                decision=decision, next_decision=next_decision,
+                phase_start=phase_start, t_tsa=plan.t_tsa, t_bsa=plan.t_bsa)
             records.append(record)
             for obs in observers:
                 obs(record)
             decision = next_decision
 
-        score_until(duration, serving)
+        score_until(duration, serving, None)
+        acc_timeline = sink.timeline()
         accs = [a for _, a in acc_timeline]
         return CLResult(
             name=self.allocator.name,
@@ -349,6 +468,8 @@ class CLSystemSpec:
     seed: int = 0
     eval_fps: float = 2.0
     mesh: object = None
+    dispatch: str = "sequential"  # see core/dispatch.py for the semantics
+    label_microbatch: Optional[int] = None
 
     def build(self) -> CLSession:
         if self.student is None or self.teacher is None:
@@ -368,6 +489,8 @@ class CLSystemSpec:
             seed=self.seed,
             eval_fps=self.eval_fps,
             mesh=self.mesh,
+            dispatch=self.dispatch,
+            label_microbatch=self.label_microbatch,
         )
 
 

@@ -1,2 +1,8 @@
-from repro.data.stream import DriftStream, SCENARIOS, Segment, scenario  # noqa: F401
+from repro.data.stream import (  # noqa: F401
+    DriftStream,
+    PrefetchingWindowIterator,
+    SCENARIOS,
+    Segment,
+    scenario,
+)
 from repro.data.tokens import TokenPipeline  # noqa: F401

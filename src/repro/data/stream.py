@@ -17,7 +17,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import List, Sequence, Tuple
+import queue
+import threading
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 
@@ -164,6 +166,20 @@ class DriftStream:
             x = x * 0.9 + flakes
         return x.astype(np.float32), y
 
+    def windows(self, t0: float, t1: float, window_s: float,
+                max_frames: int = 0,
+                prefetch: int = 2) -> "PrefetchingWindowIterator":
+        """Iterate ``(t_start, t_end, x, y)`` frame windows of ``window_s``
+        seconds over [t0, t1), generated ``prefetch`` windows ahead on a
+        background thread — see :class:`PrefetchingWindowIterator`."""
+        spans = []
+        t = t0
+        while t < t1 - 1e-9:
+            spans.append((t, min(t + window_s, t1)))
+            t += window_s
+        return PrefetchingWindowIterator(self, spans, max_frames=max_frames,
+                                         depth=prefetch)
+
     def sample_dataset(self, n: int, rng: np.random.Generator,
                        segments: Sequence[Segment] = None):
         """IID samples across given segments (for pretraining).
@@ -181,3 +197,94 @@ class DriftStream:
             xs.append(x)
             ys.append(y)
         return np.stack(xs), np.asarray(ys, np.int32)
+
+
+class PrefetchingWindowIterator:
+    """Frame windows generated ahead of consumption on a background thread.
+
+    Host-side frame synthesis is a serial numpy loop; when the consumer
+    dispatches async device work per window (core/dispatch.py), generating
+    the *next* window on a worker thread overlaps CPU frame slicing with
+    device execution instead of serializing the dispatch stream. Windows are
+    yielded strictly in span order as ``(t_start, t_end, x, y)`` — the
+    deterministic per-frame RNG makes the output identical to calling
+    ``stream.frames`` per span inline.
+
+    ``depth`` bounds how many undelivered windows may be in flight, so a
+    slow consumer never accumulates unbounded frames in memory.
+    """
+
+    def __init__(self, stream: DriftStream,
+                 spans: Sequence[Tuple[float, float]],
+                 max_frames: int = 0, depth: int = 2):
+        self.spans = list(spans)
+        self._queue: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._error_box: list = []  # producer appends; consumer re-raises
+        self._stop = threading.Event()
+        self._closed = False
+
+        # The producer closes over locals only — never ``self`` — so an
+        # abandoned iterator can be garbage-collected, whose __del__ then
+        # stops the thread via the shared event.
+        spans_, q, stop, error_box = self.spans, self._queue, self._stop, \
+            self._error_box
+
+        def _put(item) -> bool:
+            """Bounded put that gives up when the consumer went away."""
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def _producer():
+            try:
+                for t0, t1 in spans_:
+                    if stop.is_set():
+                        return
+                    x, y = stream.frames(t0, t1, max_frames=max_frames)
+                    if not _put((t0, t1, x, y)):
+                        return
+            except BaseException as exc:  # surfaced on the consumer side
+                error_box.append(exc)
+            finally:
+                _put(None)  # sentinel: exhausted (or failed)
+
+        self._thread = threading.Thread(target=_producer, daemon=True)
+        self._thread.start()
+
+    def __iter__(self) -> Iterator[Tuple[float, float, np.ndarray,
+                                         np.ndarray]]:
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise StopIteration
+        item = self._queue.get()
+        if item is None:
+            self._closed = True
+            self._thread.join()
+            if self._error_box:
+                raise self._error_box[0]
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Stop the producer early; subsequent ``next()`` raises
+        StopIteration (the sentinel may be drained here, so ``__next__``
+        must never block on the queue again)."""
+        self._closed = True
+        self._stop.set()
+        while self._thread.is_alive():
+            try:
+                self._queue.get(timeout=0.05)  # unblock a full-queue put
+            except queue.Empty:
+                pass
+        self._thread.join()
+
+    def __del__(self):
+        # Safety net for abandoned iterators: the producer's timeout-put
+        # notices _stop and exits, so no thread or frame window leaks.
+        self._stop.set()

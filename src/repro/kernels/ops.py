@@ -68,6 +68,11 @@ def mx_matmul(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
     """a [M, K] @ b [K, N] with both operands MX-quantized along K."""
     mode = kernel_mode()
     if mode == "ref":
+        # Pad K to a block multiple exactly like the kernel path does
+        # (zero pads quantize to zero and add nothing to the dot product).
+        a, pad = _pad_last(a, BLOCK)
+        if pad:
+            b = jnp.pad(b, [(0, pad), (0, 0)])
         return _ref.mx_matmul_fp_ref(a, b, precision_a, precision_b)
     qa = mx_quantize(a, precision_a)
     qb_t = mx_quantize(b.T, precision_b)

@@ -1,0 +1,351 @@
+"""Dispatch-layer tests: PhasePlan clock semantics (sum vs. max), async
+handles, concurrent-mode session accounting, fused/microbatched kernel entry
+points, retrain cost accounting, single-row mesh degeneration, online
+re-partitioning, and the prefetching window iterator."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.allocation import AllocationPolicy, CLHyperParams
+from repro.core.dispatch import (
+    CONCURRENT,
+    SEQUENTIAL,
+    KernelDispatcher,
+    PhasePlan,
+    ProgramHandle,
+)
+from repro.core.estimator import DaCapoEstimator
+from repro.core.kernel import InferenceKernel, LabelingKernel, RetrainKernel
+from repro.core.partition import forced_row_mesh
+from repro.core.session import CLSystemSpec, pretrain_model
+from repro.core import session as session_mod
+from repro.data.stream import DriftStream, PrefetchingWindowIterator, scenario
+from repro.models.registry import make_vision_model
+
+
+# ------------------------------------------------------------- plan clock --
+def test_phaseplan_sequential_charges_sum():
+    plan = PhasePlan(SEQUENTIAL, start=10.0)
+    plan.charge("t_sa", 2.0)
+    plan.dispatch("t_sa", "valid", lambda: np.arange(3), cost_s=1.0)
+    plan.dispatch("b_sa", "score", lambda: np.arange(3), cost_s=100.0)
+    # B-SA measurement never gates the serial chain (seed semantics).
+    assert plan.now() == 13.0
+    assert plan.finish() == 13.0
+    assert plan.t_tsa == 3.0 and plan.t_bsa == 100.0
+
+
+def test_phaseplan_concurrent_charges_max():
+    plan = PhasePlan(CONCURRENT, start=10.0)
+    plan.charge("t_sa", 3.0)
+    plan.dispatch("b_sa", "score", lambda: np.arange(3), cost_s=1.0)
+    assert plan.finish() == pytest.approx(13.0)  # T-SA dominates
+    plan.dispatch("b_sa", "score", lambda: np.arange(3), cost_s=4.0)
+    assert plan.finish() == pytest.approx(15.0)  # B-SA now dominates
+    # now() remains the T-SA running clock in both modes.
+    assert plan.now() == 13.0
+
+
+@pytest.mark.parametrize("mode", [SEQUENTIAL, CONCURRENT])
+def test_phaseplan_pacing_floor(mode):
+    plan = PhasePlan(mode, start=0.0)
+    plan.charge("t_sa", 1.0)
+    plan.pad_to(10.0)
+    assert plan.finish() == 10.0
+    plan.charge("t_sa", 20.0)
+    assert plan.finish() == 21.0  # kernel time beyond the floor wins
+
+
+def test_program_handle_collects_once():
+    calls = []
+
+    class Tracker:
+        def __array__(self, dtype=None):
+            calls.append(1)
+            return np.arange(4, dtype=dtype)
+
+    h = ProgramHandle(Tracker())
+    a = h.collect()
+    b = h.collect()
+    assert a is b and len(calls) == 1
+    assert isinstance(a, np.ndarray)
+
+
+def test_dispatcher_rejects_unknown_mode_and_counts():
+    with pytest.raises(ValueError):
+        KernelDispatcher("warp-speed")
+    d = KernelDispatcher(CONCURRENT)
+    assert d.concurrent
+    plan = d.begin_phase(0.0)
+    plan.dispatch("t_sa", "x", lambda: np.zeros(1))
+    plan.dispatch("b_sa", "y", lambda: np.zeros(1))
+    assert d.phases_dispatched == 1 and d.programs_dispatched == 2
+    plan.collect_all()  # must not raise; all handles materialized
+    assert all(p.handle._collected for p in plan.programs)
+
+
+# --------------------------------------------------------------- kernels --
+@pytest.fixture(scope="module")
+def kernel_setup():
+    est = DaCapoEstimator()
+    model = make_vision_model(RESNET18.reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (20, 24, 24, 3)),
+        np.float32)
+    return est, model, params, x
+
+
+def test_predict_batched_fuses_windows(kernel_setup):
+    est, model, params, x = kernel_setup
+    k = InferenceKernel(model, RESNET18, est, apply_mx=False)
+    windows = [x[:6], x[6:13], x[13:]]
+    k.n_apply_calls = 0
+    per_window = [np.asarray(k.predict_async(params, w)) for w in windows]
+    calls_pw = k.n_apply_calls
+    k.n_apply_calls = 0
+    fused = [np.asarray(p) for p in k.predict_batched(params, windows)]
+    calls_f = k.n_apply_calls
+    assert calls_pw == 3 and calls_f == 1  # fewer jitted calls, same preds
+    for a, b in zip(per_window, fused):
+        assert np.array_equal(a, b)
+    assert k.predict_batched(params, []) == []
+
+
+def test_label_microbatch_equivalence(kernel_setup):
+    est, model, params, x = kernel_setup
+    k = LabelingKernel(model, WIDERESNET50, est, apply_mx=False)
+    k.n_apply_calls = 0
+    full = k.label(params, x, "mx9")
+    assert k.n_apply_calls == 1
+    micro = k.label(params, x, "mx9", microbatch=8)
+    assert k.n_apply_calls == 1 + 3  # ceil(20/8) chunks
+    assert np.array_equal(full, micro)
+
+
+def test_retrain_fit_charges_only_executed_batches(kernel_setup):
+    est, model, params, x = kernel_setup
+    hp = CLHyperParams(sgd_batch=16, epochs=2)
+    k = RetrainKernel(model, RESNET18, est, hp)
+    opt = k.init_state(params)
+    rng = np.random.default_rng(0)
+    # D_t smaller than one SGD batch: zero steps execute -> zero charged.
+    xt, yt = x[:8], np.zeros(8, np.int32)
+    new_params, _, n_batches = k.fit(params, opt, xt, yt, rng)
+    assert n_batches == 0
+    before = jax.tree_util.tree_leaves(params)
+    after = jax.tree_util.tree_leaves(new_params)
+    assert all(np.array_equal(a, b) for a, b in zip(before, after))
+    # A full batch executes (and charges) exactly epochs steps.
+    xt, yt = x[:16], np.zeros(16, np.int32)
+    _, _, n_batches = k.fit(params, opt, xt, yt, rng)
+    assert n_batches == 2
+
+
+# --------------------------------------------------------------- session --
+@pytest.fixture(scope="module")
+def small_setup():
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    hp = CLHyperParams(n_t=32, n_l=16, c_b=128, epochs=1)
+    rng = np.random.default_rng(0)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        10, 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream,
+                        8, 32, rng, segments=stream.segments[:1], seed=8)
+    return stream, hp, tp, sp
+
+
+def _fake_mesh(n_rows: int) -> Mesh:
+    return forced_row_mesh(n_rows)
+
+
+def _spec(hp, **kw) -> CLSystemSpec:
+    return CLSystemSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                        allocator="dacapo-spatiotemporal", apply_mx=False,
+                        seed=0, eval_fps=0.5, **kw)
+
+
+def test_concurrent_session_charges_max_per_phase(small_setup):
+    """Acceptance: on a forced multi-row mesh, every phase's virtual time is
+    exactly max(t_TSA, t_BSA), with both branches of the max exercised."""
+    stream, hp, tp, sp = small_setup
+    session = _spec(hp, mesh=_fake_mesh(2), dispatch="concurrent").build()
+    assert session.dispatcher.concurrent
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=20.0)
+    assert len(res.records) >= 3
+    for rec in res.records:
+        dt = rec.t - rec.phase_start
+        assert dt == pytest.approx(max(rec.t_tsa, rec.t_bsa), rel=1e-12)
+        assert rec.t_tsa > 0.0 and rec.t_bsa > 0.0
+    # Both sub-accelerators dominate at least once (labeling-only phases are
+    # B-SA-bound; retraining phases are T-SA-bound on this fixture).
+    assert any(r.t_bsa > r.t_tsa for r in res.records)
+    assert any(r.t_tsa > r.t_bsa for r in res.records)
+    # Phase 0 closed form: empty buffer -> no retraining, so t_TSA is the
+    # teacher labeling time alone.
+    rec0 = res.records[0]
+    d0 = rec0.decision
+    expect_tsa = (d0.total_label_samples
+                  * session.labeling.time_per_sample(
+                      d0.rows_tsa, d0.precisions.labeling))
+    assert rec0.t_tsa == pytest.approx(expect_tsa, rel=1e-12)
+    # Learning still happens and the timeline stays ordered.
+    assert res.avg_accuracy > 0.0
+    ts = [t for t, _ in res.accuracy_timeline]
+    assert ts == sorted(ts)
+
+
+def test_sequential_session_charges_tsa_chain(small_setup):
+    """Default mode: phase time is the T-SA serial chain (seed accounting);
+    the B-SA ledger is informational only."""
+    stream, hp, tp, sp = small_setup
+    session = _spec(hp).build()
+    assert not session.dispatcher.concurrent
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=20.0)
+    for rec in res.records:
+        assert rec.t - rec.phase_start == pytest.approx(rec.t_tsa, rel=1e-12)
+
+
+def test_concurrent_fuses_score_windows(small_setup):
+    """Concurrent dispatch batches each phase's score windows into one
+    jitted call — fewer inference dispatches than sequential on the same
+    run length."""
+    stream, hp, tp, sp = small_setup
+    counts = {}
+    for mode in ("sequential", "concurrent"):
+        session = _spec(hp, dispatch=mode).build()
+        session.set_pretrained(tp, sp)
+        session.run(stream, duration=20.0)
+        counts[mode] = session.inference.n_apply_calls
+    assert counts["concurrent"] < counts["sequential"]
+
+
+def test_single_row_mesh_degenerates_to_time_sharing(small_setup):
+    """Regression: a 1-row mesh cannot be fissioned; the engine must fall
+    back to time-sharing instead of calling partition_mesh on it."""
+    stream, hp, tp, sp = small_setup
+    session = _spec(hp, mesh=_fake_mesh(1)).build()
+    assert session._mesh_split(8) == 0
+    assert session.partition.time_shared
+    assert session.inference.submesh is None
+    assert session.labeling.submesh is None
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=10.0)
+    assert res.avg_accuracy > 0.0
+
+
+# ------------------------------------------------------- re-partitioning --
+class ScriptedRowsPolicy(AllocationPolicy):
+    """Test policy: replays a script of rows_bsa values (estimator rows)."""
+
+    name = "scripted-rows"
+
+    def __init__(self, hp, precision=None, script=()):
+        from repro.core.mx import DEFAULT_POLICY
+        super().__init__(hp, precision or DEFAULT_POLICY)
+        self._script = list(script)
+
+    def _scripted(self):
+        if len(self._script) > 1:
+            rows_bsa = self._script.pop(0)
+        else:
+            rows_bsa = self._script[0]  # hold the last split forever
+        d = self._decision(self.hp.n_t)
+        total = self._rows[0] + self._rows[1]
+        return dataclasses.replace(d, rows_tsa=total - rows_bsa,
+                                   rows_bsa=rows_bsa)
+
+    def initial_decision(self):
+        return self._scripted()
+
+    def next_decision(self, feedback):
+        return self._scripted()
+
+
+def test_online_repartition_rebinds_kernels(small_setup, monkeypatch):
+    """A policy that moves rows between T-SA and B-SA mid-run re-fissions
+    the mesh and re-binds every kernel; an unchanged split does not
+    re-partition."""
+    stream, hp, tp, sp = small_setup
+    calls = []
+    real = session_mod.partition_mesh
+    monkeypatch.setattr(session_mod, "partition_mesh",
+                        lambda mesh, want: calls.append(want) or
+                        real(mesh, want))
+    # 16 estimator rows onto a 4-row mesh: 8 -> 2 mesh rows, 12 -> 3.
+    policy = ScriptedRowsPolicy(hp, script=[8, 8, 12])
+    session = CLSystemSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                           allocator=policy, apply_mx=False, seed=0,
+                           eval_fps=0.5, mesh=_fake_mesh(4)).build()
+    session.set_pretrained(tp, sp)
+    seen = []
+    session.add_observer(lambda rec: seen.append(
+        (rec.decision.rows_bsa, session.partition,
+         session.inference.submesh, session.labeling.submesh)))
+    n_before = len(calls)
+    res = session.run(stream, duration=16.0)
+    assert len(res.records) >= 4
+    rows0, part0, inf0, lab0 = seen[0]
+    rows1, part1, inf1, lab1 = seen[1]
+    rows2, part2, inf2, lab2 = seen[2]
+    assert (rows0, rows1, rows2) == (8, 8, 12)
+    # Unchanged split: the exact same partition object, no new fission.
+    assert part1 is part0 and inf1 is inf0
+    # Changed split: new partition, kernels re-bound to the new sub-meshes.
+    assert part2 is not part1
+    assert inf2 is part2.b_sa and lab2 is part2.t_sa
+    assert part0.b_sa.devices.shape[0] == 2  # 8/16 of 4 rows
+    assert part2.b_sa.devices.shape[0] == 3  # 12/16 of 4 rows
+    assert part2.t_sa.devices.shape[0] == 1
+    # partition_mesh ran once per *distinct* split during the run: the
+    # offline->8 transition (if any) plus the scripted 8->12 move.
+    w_offline = session._mesh_split(session.r_bsa)
+    expected = (0 if w_offline == 2 else 1) + 1
+    assert len(calls) - n_before == expected
+
+
+# ------------------------------------------------------------- prefetch --
+def test_prefetching_window_iterator_matches_inline():
+    stream = DriftStream(scenario("S1", 2), seed=7, img=24)
+    it = stream.windows(0.0, 4.0, 1.0, max_frames=6, prefetch=2)
+    got = list(it)
+    assert [(t0, t1) for t0, t1, _, _ in got] == [
+        (0.0, 1.0), (1.0, 2.0), (2.0, 3.0), (3.0, 4.0)]
+    for t0, t1, x, y in got:
+        xi, yi = stream.frames(t0, t1, max_frames=6)
+        assert np.array_equal(x, xi) and np.array_equal(y, yi)
+
+
+def test_prefetching_window_iterator_close_early():
+    stream = DriftStream(scenario("S1", 2), seed=7, img=24)
+    it = PrefetchingWindowIterator(
+        stream, [(i * 1.0, i * 1.0 + 1.0) for i in range(50)],
+        max_frames=4, depth=2)
+    next(it)
+    it.close()
+    assert not it._thread.is_alive()
+    # A closed iterator is exhausted — next() must not block on the drained
+    # queue.
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_prefetching_iterator_abandoned_consumer_stops_producer():
+    """Dropping the iterator without close() must not leak a blocked
+    producer thread (the producer holds no reference to the iterator, so
+    __del__ runs and signals it to stop)."""
+    stream = DriftStream(scenario("S1", 2), seed=7, img=24)
+    it = PrefetchingWindowIterator(
+        stream, [(i * 1.0, i * 1.0 + 1.0) for i in range(100)],
+        max_frames=2, depth=1)
+    thread = it._thread
+    next(it)
+    del it
+    thread.join(timeout=5.0)
+    assert not thread.is_alive()

@@ -160,7 +160,9 @@ def test_retrain_kernel(kernel_setup):
     y = np.zeros((12,), np.int32)
     rng = np.random.default_rng(0)
     new_params, new_opt, n_batches = k.fit(params, opt, x, y, rng)
-    assert n_batches == max(1, len(x) // hp.sgd_batch) * hp.epochs
+    # Charged batches == executed batches (see test_dispatch for the
+    # sub-batch D_t case, which executes — and charges — zero steps).
+    assert n_batches == (len(x) // hp.sgd_batch) * hp.epochs
     # Parameters actually moved and stayed finite.
     leaves_before = jax.tree_util.tree_leaves(params)
     leaves_after = jax.tree_util.tree_leaves(new_params)
