@@ -6,12 +6,17 @@ identical pretrained weights, printing the accuracy timeline.
 
 ``--dispatch concurrent`` executes through the async dispatch layer
 (core/dispatch.py): a forced 2-row mesh is fissioned into T-SA/B-SA
-sub-meshes, score windows are fused into batched inference, and each phase
+sub-meshes, score windows are fused into batched inference, each phase
 charges max(t_TSA, t_BSA) — the paper's Fig. 4 overlap — instead of the
-serial chain.
+serial chain, and frame windows flow through the speculative FramePipeline
+(data/pipeline.py), whose reconcile hit rate is reported per system.
+
+``--online`` swaps DaCapo-ST for DaCapo-ST-Online, the drift-reactive
+spatial re-allocator: watch the tsa/bsa row split move in the phase log
+when a drift fires, then return as validation accuracy recovers.
 
 Run:  PYTHONPATH=src python examples/continuous_learning_drive.py [--fast]
-          [--dispatch sequential|concurrent]
+          [--dispatch sequential|concurrent] [--online]
 """
 import argparse
 import os
@@ -27,6 +32,9 @@ def main():
     ap.add_argument("--scenario", default="ES1")
     ap.add_argument("--dispatch", default="sequential",
                     choices=("sequential", "concurrent"))
+    ap.add_argument("--online", action="store_true",
+                    help="use the drift-reactive online spatial "
+                         "re-allocator (DC-ST-Online) instead of DC-ST")
     args = ap.parse_args()
 
     from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
@@ -56,8 +64,10 @@ def main():
                         steps[1], 48, rng, segments=stream.segments[:1],
                         seed=8)
 
+    dacapo = ("dacapo-spatiotemporal-online" if args.online
+              else "dacapo-spatiotemporal")
     results = {}
-    for allocator in ("dacapo-spatiotemporal", "ekya"):
+    for allocator in (dacapo, "ekya"):
         session = CLSystemSpec(
             student=RESNET18, teacher=WIDERESNET50, hp=hp,
             allocator=allocator, apply_mx=False, eval_fps=0.5,
@@ -68,21 +78,27 @@ def main():
             f"  [{name}] phase {rec.index:2d} t={rec.t:6.1f}s "
             f"acc_v={rec.acc_valid:.2f} acc_l={rec.acc_label:.2f}"
             f" tsa/bsa={rec.t_tsa:.2f}/{rec.t_bsa:.2f}s"
+            f" rows={rec.decision.rows_tsa}/{rec.decision.rows_bsa}"
             f"{' DRIFT' if rec.drift else ''}"))
         results[allocator] = session.run(stream, duration=duration)
 
     print(f"\nscenario {args.scenario}, {duration:.0f} virtual seconds")
-    print(f"{'time':>6} | {'DaCapo-ST':>10} | {'Ekya':>10}")
-    dc = dict(results["dacapo-spatiotemporal"].accuracy_timeline)
+    print(f"{'time':>6} | {'DaCapo':>10} | {'Ekya':>10}")
+    dc = dict(results[dacapo].accuracy_timeline)
     ek = dict(results["ekya"].accuracy_timeline)
     for t in sorted(set(list(dc) + list(ek))):
         a = f"{dc[t]*100:9.1f}%" if t in dc else "         -"
         b = f"{ek[t]*100:9.1f}%" if t in ek else "         -"
         print(f"{t:6.0f} | {a} | {b}")
     for name, res in results.items():
+        hits = sum(r.spec_hits for r in res.records)
+        misses = sum(r.spec_misses for r in res.records)
+        spec = (f" spec-hit-rate={hits / (hits + misses):.0%}"
+                if hits + misses else "")
         print(f"{name}: avg={res.avg_accuracy*100:.1f}% "
               f"drifts={res.drift_events} "
-              f"label/retrain={res.label_time:.0f}/{res.retrain_time:.0f}s")
+              f"label/retrain={res.label_time:.0f}/{res.retrain_time:.0f}s"
+              f"{spec}")
 
 
 if __name__ == "__main__":

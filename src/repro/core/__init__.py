@@ -8,6 +8,7 @@ from repro.core.allocation import (  # noqa: F401
     CLHyperParams,
     EkyaAllocator,
     EOMUAllocator,
+    OnlineSpatiotemporalAllocator,
     PhaseFeedback,
     SpatialAllocator,
     SpatiotemporalAllocator,

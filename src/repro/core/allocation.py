@@ -13,8 +13,10 @@ Policies are constructed from hyper-parameters only and later ``bind``-ed to
 a performance estimator + student config, at which point they compute their
 offline spatial split (GetSpatialAllocation, Alg. 1 line 1). Because every
 decision carries its own row split, a policy is free to re-allocate
-spatially *online* — the paper's DC-ST does so temporally; the API makes the
-spatial axis available to future variants too.
+spatially *online* — the paper's DC-ST does so temporally;
+``OnlineSpatiotemporalAllocator`` (DC-ST-Online) exercises the spatial axis
+too, shifting rows from B-SA to T-SA at drift time under a hysteresis
+window and returning them as validation accuracy recovers.
 """
 from __future__ import annotations
 
@@ -178,6 +180,95 @@ class SpatialAllocator(SpatiotemporalAllocator):
         return self._decision(self.hp.n_t)
 
 
+class OnlineSpatiotemporalAllocator(SpatiotemporalAllocator):
+    """DaCapo-Spatiotemporal-Online (DC-ST-Online): drift-reactive *online
+    spatial* re-allocation on top of DC-ST's temporal boost.
+
+    ECCO-style (PAPERS.md): when drift fires, ``boost_rows`` rows move from
+    the B-SA to the T-SA so labeling the N_ldd burst and retraining on the
+    fresh buffer run wider, at the cost of serving throughput (the engine's
+    ``keep_frac`` drops while boosted). The boost is bounded by a
+    *hysteresis window* — at least ``hysteresis_phases`` phases pass before
+    rows may return — and rows are handed back once ``acc_valid`` recovers
+    to its pre-drift running level (tracked as an EMA over un-boosted
+    phases) within ``recover_margin``. A fresh drift while boosted re-arms
+    the window.
+
+    ``boost_rows=0`` disables re-allocation entirely, making the policy
+    decision-for-decision identical to DC-ST (the golden guard in
+    tests/test_pipeline.py pins that). ``boost_rows=None`` picks a default
+    at ``bind`` time: a quarter of the offline B-SA rows, at least one, and
+    never draining the B-SA below one row.
+    """
+
+    name = "dacapo-spatiotemporal-online"
+
+    def __init__(self, hp: CLHyperParams,
+                 precision: PrecisionPolicy = DEFAULT_POLICY,
+                 boost_rows: Optional[int] = None,
+                 hysteresis_phases: int = 2,
+                 recover_margin: float = 0.05):
+        super().__init__(hp, precision)
+        self._boost_cfg = boost_rows
+        self.hysteresis_phases = hysteresis_phases
+        self.recover_margin = recover_margin
+        self.boost_rows = 0
+        self._boosted = False
+        self._hold = 0
+        self._acc_ema: Optional[float] = None
+
+    def bind(self, estimator, student_cfg: VisionConfig) -> "AllocationPolicy":
+        super().bind(estimator, student_cfg)
+        r_tsa, r_bsa = self._rows
+        if not r_tsa or not r_bsa:
+            # R=0 fallback regime: one side already time-shares the whole
+            # array (rows=0 means "all rows" to the engine), so shifting
+            # rows would *shrink* it to a tiny exclusive slice. Disable.
+            self.boost_rows = 0
+            return self
+        avail = max(0, r_bsa - 1)  # never drain the B-SA entirely
+        want = (max(1, r_bsa // 4) if self._boost_cfg is None
+                else self._boost_cfg)
+        self.boost_rows = min(want, avail)
+        return self
+
+    def _current_rows(self) -> Tuple[Optional[int], Optional[int]]:
+        r_tsa, r_bsa = self._rows
+        if self._boosted and r_tsa is not None:
+            return r_tsa + self.boost_rows, r_bsa - self.boost_rows
+        return r_tsa, r_bsa
+
+    def _decision(self, retrain_samples: int, *, reset: bool = False,
+                  extra_label: int = 0) -> AllocationDecision:
+        base = super()._decision(retrain_samples, reset=reset,
+                                 extra_label=extra_label)
+        r_tsa, r_bsa = self._current_rows()
+        return dataclasses.replace(base, rows_tsa=r_tsa, rows_bsa=r_bsa)
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        drift = self.detector.check(feedback.acc_label, feedback.acc_valid,
+                                    feedback.t)
+        if not self._boosted and not drift:
+            # Healthy-state acc_valid baseline the recovery check targets
+            # (drift-phase feedback is contaminated and never enters it).
+            self._acc_ema = (feedback.acc_valid if self._acc_ema is None
+                             else 0.5 * self._acc_ema
+                             + 0.5 * feedback.acc_valid)
+        if drift and self.boost_rows > 0:
+            self._boosted = True
+            self._hold = self.hysteresis_phases
+        elif self._boosted:
+            self._hold -= 1
+            recovered = (feedback.acc_valid
+                         >= (self._acc_ema or 0.0) - self.recover_margin)
+            if self._hold <= 0 and recovered:
+                self._boosted = False
+        if drift:
+            return self._decision(self.hp.n_t, reset=True,
+                                  extra_label=self.hp.n_ldd - self.hp.n_l)
+        return self._decision(self.hp.n_t)
+
+
 class EkyaAllocator(SpatiotemporalAllocator):
     """Idealized Ekya: fixed 120 s retraining window; per-window label quota
     then retraining for the rest of the window (profiling cost idealized
@@ -216,6 +307,7 @@ class EOMUAllocator(SpatiotemporalAllocator):
 
 ALLOCATORS: Dict[str, Type[AllocationPolicy]] = {
     "dacapo-spatiotemporal": SpatiotemporalAllocator,
+    "dacapo-spatiotemporal-online": OnlineSpatiotemporalAllocator,
     "dacapo-spatial": SpatialAllocator,
     "ekya": EkyaAllocator,
     "eomu": EOMUAllocator,

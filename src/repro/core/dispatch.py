@@ -101,9 +101,10 @@ class PhasePlan:
     pacing, loop exits) see bit-identical times.
     """
 
-    def __init__(self, mode: str, start: float):
+    def __init__(self, mode: str, start: float, pipeline=None):
         self.mode = mode
         self.start = start
+        self.pipeline = pipeline  # bound FramePipeline (data/pipeline.py)
         self.programs: List[DeviceProgram] = []
         self.totals: Dict[str, float] = {role: 0.0 for role in ROLES}
         self._now = start  # T-SA running clock (seed accumulator)
@@ -118,6 +119,19 @@ class PhasePlan:
         self.programs.append(DeviceProgram(role, label, cost_s, handle))
         self.charge(role, cost_s)
         return handle
+
+    def fetch(self, t0: float, t1: float, max_frames: int = 0):
+        """Pipeline-aware plan step: pull a frame window for this phase's
+        programs through the bound :class:`~repro.data.pipeline.\
+FramePipeline`, so dispatch issues device programs against prefetched,
+        host-ready windows (speculation hits) instead of stalling on inline
+        frame synthesis. Reconciliation keeps results bit-identical either
+        way."""
+        if self.pipeline is None:
+            raise ValueError(
+                "no FramePipeline bound to this plan; pass one to "
+                "KernelDispatcher.begin_phase")
+        return self.pipeline.frames(t0, t1, max_frames=max_frames)
 
     def charge(self, role: str, seconds: float) -> None:
         """Charge virtual time without an attached program (e.g. retraining
@@ -178,25 +192,38 @@ class KernelDispatcher:
         self.mode = mode
         self.phases_dispatched = 0
         self.programs_dispatched = 0
+        self.windows_fetched = 0
 
     @property
     def concurrent(self) -> bool:
         return self.mode == CONCURRENT
 
-    def begin_phase(self, start: float) -> PhasePlan:
-        plan = _TrackedPlan(self, self.mode, start)
+    def begin_phase(self, start: float, pipeline=None) -> PhasePlan:
+        """Open a phase plan. With a ``pipeline``
+        (:class:`~repro.data.pipeline.FramePipeline`), the plan becomes the
+        phase's data-plane handle too: opening the plan rotates the
+        pipeline's speculation onto this phase start, and ``plan.fetch``
+        serves the phase's frame windows from the speculative prefetcher."""
+        if pipeline is not None:
+            pipeline.begin_phase(start)
+        plan = _TrackedPlan(self, self.mode, start, pipeline)
         self.phases_dispatched += 1
         return plan
 
 
 class _TrackedPlan(PhasePlan):
-    """PhasePlan that feeds the dispatcher's cumulative program counter."""
+    """PhasePlan that feeds the dispatcher's cumulative counters."""
 
-    def __init__(self, dispatcher: KernelDispatcher, mode: str, start: float):
-        super().__init__(mode, start)
+    def __init__(self, dispatcher: KernelDispatcher, mode: str, start: float,
+                 pipeline=None):
+        super().__init__(mode, start, pipeline)
         self._dispatcher = dispatcher
 
     def dispatch(self, role: str, label: str, issue: Callable[[], Any],
                  cost_s: float = 0.0) -> ProgramHandle:
         self._dispatcher.programs_dispatched += 1
         return super().dispatch(role, label, issue, cost_s)
+
+    def fetch(self, t0: float, t1: float, max_frames: int = 0):
+        self._dispatcher.windows_fetched += 1
+        return super().fetch(t0, t1, max_frames)

@@ -35,6 +35,15 @@ virtual-clock accounting bit-for-bit; ``dispatch="concurrent"`` charges
 with T-SA labeling/retraining — and fuses score windows into batched
 inference calls.
 
+Frame access goes through the data plane (data/pipeline.py): ``run`` wraps
+the stream in a :class:`~repro.data.pipeline.FramePipeline` (or consumes a
+ready pipeline handle) and every window — scoring, labeling — is fetched
+through the phase plan, never by indexing the stream directly. In
+concurrent mode the pipeline speculates the next phase's windows from the
+last phase's layout and prefetches them on a background thread, so host
+frame synthesis overlaps device dispatch; reconcile hits/misses are
+threaded into each :class:`PhaseRecord` (``spec_hits``/``spec_misses``).
+
 Per-phase structured metrics flow to observers — callables receiving a
 :class:`PhaseRecord` — instead of being scraped out of ad-hoc dicts.
 """
@@ -65,6 +74,7 @@ from repro.core.partition import (
     single_device_partition,
 )
 from repro.core.sample_buffer import SampleBuffer
+from repro.data.pipeline import FramePipeline
 from repro.data.stream import DriftStream
 from repro.models.registry import make_vision_model
 
@@ -97,13 +107,20 @@ class PhaseRecord:
     phase_start: float = 0.0  # virtual clock at phase start
     t_tsa: float = 0.0  # T-SA kernel time this phase (retrain+valid+label)
     t_bsa: float = 0.0  # B-SA kernel time this phase (serving-side programs)
+    spec_hits: int = 0  # frame windows served from speculative prefetch
+    spec_misses: int = 0  # frame windows synthesized inline (reconcile miss)
 
     def as_log_entry(self) -> dict:
-        """Legacy ``phase_log`` dict layout."""
+        """``phase_log`` dict layout — every PhaseRecord field the legacy
+        consumers scrape, including the per-phase timing split."""
         return {"t": self.t, "acc_valid": self.acc_valid,
                 "acc_label": self.acc_label, "drift": self.drift,
                 "retrain_time": self.retrain_time,
-                "label_time": self.label_time}
+                "label_time": self.label_time,
+                "phase_start": self.phase_start,
+                "t_tsa": self.t_tsa, "t_bsa": self.t_bsa,
+                "spec_hits": self.spec_hits,
+                "spec_misses": self.spec_misses}
 
 
 PhaseObserver = Callable[[PhaseRecord], None]
@@ -172,6 +189,7 @@ class CLSession:
         observers: Sequence[PhaseObserver] = (),
         dispatch: str = "sequential",
         label_microbatch: Optional[int] = None,
+        speculative_frames: Optional[bool] = None,
     ):
         self.hp = hp or CLHyperParams()
         self.estimator = estimator or DaCapoEstimator()
@@ -179,6 +197,13 @@ class CLSession:
         self.apply_mx = apply_mx_numerics
         self.eval_fps = eval_fps  # accuracy-scoring subsample rate
         self.dispatcher = KernelDispatcher(dispatch)
+        # Speculative frame prefetch (data/pipeline.py): defaults to the
+        # dispatch mode's appetite — concurrent dispatch overlaps host frame
+        # synthesis with device programs; sequential keeps the transparent
+        # inline path the goldens pin.
+        if speculative_frames is None:
+            speculative_frames = self.dispatcher.concurrent
+        self.speculative_frames = speculative_frames
         # Microbatched labeling: seed call pattern (one jitted call) by
         # default; concurrent mode chunks big label bursts unless overridden
         # (0 explicitly disables microbatching in either mode).
@@ -285,10 +310,27 @@ class CLSession:
         r_bsa = decision.rows_bsa if decision.rows_bsa is not None else self.r_bsa
         return (r_tsa or total), (r_bsa or total)
 
-    def run(self, stream: DriftStream, duration: Optional[float] = None,
+    def run(self, stream: Union[DriftStream, FramePipeline],
+            duration: Optional[float] = None,
             observers: Sequence[PhaseObserver] = ()) -> CLResult:
+        """Execute the continuous-learning loop over ``stream`` — a raw
+        :class:`DriftStream` (the session wraps it in its own
+        :class:`FramePipeline` data plane) or a ready pipeline handle."""
+        if isinstance(stream, FramePipeline):
+            pipe, own_pipe = stream, False
+        else:
+            pipe = FramePipeline(stream, speculative=self.speculative_frames)
+            own_pipe = True
+        try:
+            return self._run(pipe, duration, observers)
+        finally:
+            if own_pipe:
+                pipe.close()
+
+    def _run(self, pipe: FramePipeline, duration: Optional[float],
+             observers: Sequence[PhaseObserver]) -> CLResult:
         hp = self.hp
-        duration = duration or stream.duration
+        duration = duration or pipe.duration
         buffer = SampleBuffer(hp.c_b, seed=3)
         observers = self._observers + list(observers)
         decision = self.allocator.initial_decision()
@@ -316,7 +358,9 @@ class CLSession:
             if t_end <= eval_cursor + 1e-9:
                 return
             n_eval = max(1, int((t_end - eval_cursor) * self.eval_fps))
-            x, y = stream.frames(eval_cursor, t_end, max_frames=n_eval)
+            x, y = (plan.fetch(eval_cursor, t_end, max_frames=n_eval)
+                    if plan is not None
+                    else pipe.frames(eval_cursor, t_end, max_frames=n_eval))
             if plan is not None:
                 plan.charge("b_sa", len(x) * self.inference.time_per_sample(
                     r_bsa, decision.precisions.inference))
@@ -330,8 +374,10 @@ class CLSession:
             self._repartition(r_bsa)
             keep_frac = self.inference.keep_frac(r_bsa, prec.inference,
                                                  hp.fps)
-            # ---- Plan: open the phase ledger on the dispatcher. ----------
-            plan = self.dispatcher.begin_phase(clock)
+            # ---- Plan: open the phase ledger on the dispatcher; this also
+            # rotates the pipeline's speculation onto this phase start. ----
+            plan = self.dispatcher.begin_phase(clock, pipe)
+            spec_seen = (pipe.hits, pipe.misses)
             valid_h = xv = yv = None
             # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
             acc_v = 1.0
@@ -371,8 +417,8 @@ class CLSession:
                 buffer.reset()  # line 12
                 drift_events += 1
             t_lab0 = plan.now()
-            x_l, _y_true = stream.frames(t_lab0, t_lab0 + n_label / hp.fps,
-                                         max_frames=n_label)
+            x_l, _y_true = plan.fetch(t_lab0, t_lab0 + n_label / hp.fps,
+                                      max_frames=n_label)
             label_h = plan.dispatch(
                 "t_sa", "label",
                 lambda: self.labeling.label_async(
@@ -423,7 +469,9 @@ class CLSession:
                 acc_label=acc_l, drift=next_decision.reset_buffer,
                 retrain_time=retrain_time, label_time=label_time,
                 decision=decision, next_decision=next_decision,
-                phase_start=phase_start, t_tsa=plan.t_tsa, t_bsa=plan.t_bsa)
+                phase_start=phase_start, t_tsa=plan.t_tsa, t_bsa=plan.t_bsa,
+                spec_hits=pipe.hits - spec_seen[0],
+                spec_misses=pipe.misses - spec_seen[1])
             records.append(record)
             for obs in observers:
                 obs(record)
@@ -470,6 +518,9 @@ class CLSystemSpec:
     mesh: object = None
     dispatch: str = "sequential"  # see core/dispatch.py for the semantics
     label_microbatch: Optional[int] = None
+    # Speculative frame prefetch (data/pipeline.py); None = follow dispatch
+    # mode (on for concurrent, off for sequential).
+    speculative_frames: Optional[bool] = None
 
     def build(self) -> CLSession:
         if self.student is None or self.teacher is None:
@@ -491,6 +542,7 @@ class CLSystemSpec:
             mesh=self.mesh,
             dispatch=self.dispatch,
             label_microbatch=self.label_microbatch,
+            speculative_frames=self.speculative_frames,
         )
 
 

@@ -1,3 +1,4 @@
+from repro.data.pipeline import FramePipeline, SpeculationStats  # noqa: F401
 from repro.data.stream import (  # noqa: F401
     DriftStream,
     PrefetchingWindowIterator,

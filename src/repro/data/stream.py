@@ -112,9 +112,26 @@ class DriftStream:
     def duration(self) -> float:
         return float(self._bounds[-1])
 
-    def segment_at(self, t: float) -> Segment:
+    def segment_index(self, t: float) -> int:
         idx = int(np.searchsorted(self._bounds, t, side="right"))
-        return self.segments[min(idx, len(self.segments) - 1)]
+        return min(idx, len(self.segments) - 1)
+
+    def segment_at(self, t: float) -> Segment:
+        return self.segments[self.segment_index(t)]
+
+    def frame_times(self, t0: float, t1: float,
+                    max_frames: int = 0) -> np.ndarray:
+        """The exact frame timestamps ``frames(t0, t1, max_frames)`` renders.
+
+        Split out so consumers (data/pipeline.py) can decide whether two
+        requests produce identical frames without synthesizing either: a
+        frame depends on its time only through ``round(t, 4)`` (the hash
+        input) and its segment index, so matching those per timestamp is a
+        bit-identity guarantee."""
+        n = max(1, int(round((t1 - t0) * self.fps)))
+        if max_frames and n > max_frames:
+            return np.linspace(t0, t1, max_frames, endpoint=False)
+        return t0 + np.arange(n) / self.fps
 
     def _label_probs(self, seg: Segment) -> np.ndarray:
         p = np.zeros(self.n_classes)
@@ -127,11 +144,7 @@ class DriftStream:
     def frames(self, t0: float, t1: float,
                max_frames: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """Frames in [t0, t1); optionally uniformly subsampled."""
-        n = max(1, int(round((t1 - t0) * self.fps)))
-        if max_frames and n > max_frames:
-            times = np.linspace(t0, t1, max_frames, endpoint=False)
-        else:
-            times = t0 + np.arange(n) / self.fps
+        times = self.frame_times(t0, t1, max_frames)
         xs, ys = [], []
         for t in times:
             x, y = self._frame(float(t))

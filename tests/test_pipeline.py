@@ -1,0 +1,308 @@
+"""FramePipeline + online re-allocation tests: speculative windows are
+bit-identical to inline slicing for every scenario, reconcile hits/misses
+are accounted per phase, the session consumes only pipeline handles, the
+DC-ST-Online policy shifts rows on drift under hysteresis, and the golden
+guard pins DC-ST-Online (re-allocation disabled) to DC-ST's exact timeline
+on the refactored data path."""
+import numpy as np
+import pytest
+
+from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.allocation import (
+    CLHyperParams,
+    OnlineSpatiotemporalAllocator,
+    PhaseFeedback,
+)
+from repro.core.dispatch import SEQUENTIAL, PhasePlan
+from repro.core.estimator import DaCapoEstimator
+from repro.core.mx import PrecisionPolicy
+from repro.core.partition import forced_row_mesh
+from repro.core.session import CLSystemSpec, pretrain_model
+from repro.data.pipeline import FramePipeline
+from repro.data.stream import DriftStream, SCENARIOS, scenario
+
+# Per-phase request layout replayed below: (dt0, dt1, max_frames) offsets
+# from the phase start — a score window, a labeling burst, a tail window.
+_PHASE_LAYOUT = ((0.0, 2.05, 4), (2.05, 2.9, 24), (2.9, 5.17, 3))
+# Starts straddle the 60 s segment boundary so speculated windows cross a
+# drift edge (segment_index changes mid-window).
+_PHASE_STARTS = (50.0, 54.31, 58.62, 62.93)
+
+
+# ----------------------------------------------------------- determinism --
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_speculative_windows_bit_identical_all_scenarios(name):
+    """Satellite: prefetched/speculative windows yield bit-identical frames
+    to inline slicing for every scenario (S1-S6, ES1, ES2)."""
+    stream = DriftStream(scenario(name, 2), seed=9, img=16)
+    inline = DriftStream(scenario(name, 2), seed=9, img=16)
+    pipe = FramePipeline(stream, speculative=True)
+    try:
+        for s in _PHASE_STARTS:
+            pipe.begin_phase(s)
+            for dt0, dt1, mf in _PHASE_LAYOUT:
+                x, y = pipe.frames(s + dt0, s + dt1, max_frames=mf)
+                xi, yi = inline.frames(s + dt0, s + dt1, max_frames=mf)
+                np.testing.assert_array_equal(x, xi)
+                np.testing.assert_array_equal(y, yi)
+        # Phase 1 had no trace to speculate from: all three windows miss.
+        # Phases 2-4 replay the same layout and reconcile as hits — except
+        # when a replayed timestamp lands exactly on a 1e-4 rounding
+        # boundary, which the matcher deliberately rejects (a miss, never a
+        # wrong frame); allow a couple of those per scenario.
+        speculated = (len(_PHASE_STARTS) - 1) * len(_PHASE_LAYOUT)
+        assert pipe.hits >= speculated - 2
+        assert pipe.misses <= len(_PHASE_LAYOUT) + 2
+        assert pipe.hit_rate > 0
+    finally:
+        pipe.close()
+
+
+def test_mispredicted_window_synthesizes_inline_exactly():
+    """A request outside the speculated layout is a miss — and still returns
+    exactly what inline slicing would."""
+    stream = DriftStream(scenario("S1", 2), seed=7, img=16)
+    inline = DriftStream(scenario("S1", 2), seed=7, img=16)
+    pipe = FramePipeline(stream, speculative=True)
+    try:
+        pipe.begin_phase(0.0)
+        pipe.frames(0.0, 1.0, max_frames=4)
+        pipe.begin_phase(3.0)
+        h0, m0 = pipe.hits, pipe.misses
+        # The drift case: the phase asks for a bigger labeling burst than
+        # the speculation predicted.
+        x, y = pipe.frames(3.0, 5.0, max_frames=16)
+        xi, yi = inline.frames(3.0, 5.0, max_frames=16)
+        np.testing.assert_array_equal(x, xi)
+        np.testing.assert_array_equal(y, yi)
+        assert (pipe.hits, pipe.misses) == (h0, m0 + 1)
+        assert pipe.stats.windows_speculated == 1
+    finally:
+        pipe.close()
+
+
+def test_ulp_perturbed_replay_still_hits():
+    """The reconcile matcher tolerates the float-accumulation jitter of
+    replaying offsets from a different phase start: a request perturbed by
+    an ulp-scale delta still hits, and the frames are exactly what inline
+    slicing at the perturbed time yields."""
+    stream = DriftStream(scenario("S3", 2), seed=11, img=16)
+    inline = DriftStream(scenario("S3", 2), seed=11, img=16)
+    pipe = FramePipeline(stream, speculative=True)
+    try:
+        pipe.begin_phase(10.0)
+        pipe.frames(10.0, 12.33, max_frames=6)
+        pipe.begin_phase(17.31)
+        t0, t1 = 17.31 + 1e-10, 17.31 + 2.33 + 1e-10
+        x, y = pipe.frames(t0, t1, max_frames=6)
+        xi, yi = inline.frames(t0, t1, max_frames=6)
+        np.testing.assert_array_equal(x, xi)
+        np.testing.assert_array_equal(y, yi)
+        assert pipe.hits == 1
+    finally:
+        pipe.close()
+
+
+def test_pipeline_close_and_transparent_modes():
+    stream = DriftStream(scenario("S1", 2), seed=7, img=16)
+    pipe = FramePipeline(stream, speculative=True)
+    pipe.begin_phase(0.0)
+    pipe.frames(0.0, 1.0, max_frames=2)
+    pipe.begin_phase(2.0)
+    assert pipe._worker is not None
+    assert pipe.stats.windows_speculated == 1
+    pipe.close()
+    assert pipe._worker is None and not pipe.speculative
+    # The unconsumed in-flight speculation is accounted as wasted:
+    # speculated == hits + wasted always balances at close.
+    assert pipe.stats.windows_wasted == 1
+    assert (pipe.stats.windows_speculated
+            == pipe.stats.hits + pipe.stats.windows_wasted)
+    h, m = pipe.hits, pipe.misses
+    x, y = pipe.frames(2.0, 3.0, max_frames=2)  # still serves, inline
+    assert len(x) == len(y) == 2
+    assert (pipe.hits, pipe.misses) == (h, m)
+    # speculative=False never spawns a worker nor counts.
+    flat = FramePipeline(stream, speculative=False)
+    flat.begin_phase(0.0)
+    flat.frames(0.0, 1.0, max_frames=2)
+    flat.begin_phase(2.0)
+    flat.frames(2.0, 3.0, max_frames=2)
+    assert flat._worker is None
+    assert flat.hits == flat.misses == 0 and flat.stats.phases == 0
+
+
+def test_plan_fetch_requires_pipeline():
+    plan = PhasePlan(SEQUENTIAL, start=0.0)
+    with pytest.raises(ValueError):
+        plan.fetch(0.0, 1.0, max_frames=2)
+
+
+# -------------------------------------------------------- online policy --
+_MX9_SERVE = PrecisionPolicy(inference="mx9")  # balanced (8, 8) split
+
+
+def _online(hp=None, **kw) -> OnlineSpatiotemporalAllocator:
+    pol = OnlineSpatiotemporalAllocator(hp or CLHyperParams(), _MX9_SERVE,
+                                        **kw)
+    return pol.bind(DaCapoEstimator(), RESNET18)
+
+
+def test_online_policy_shifts_rows_on_drift_with_hysteresis():
+    pol = _online(boost_rows=2, hysteresis_phases=2, recover_margin=0.05)
+    r_tsa0, r_bsa0 = pol.rows
+    assert pol.boost_rows == 2
+    d = pol.initial_decision()
+    assert (d.rows_tsa, d.rows_bsa) == (r_tsa0, r_bsa0)
+    d = pol.next_decision(PhaseFeedback(0.8, 0.82, 1.0))  # healthy
+    assert d.rows_tsa == r_tsa0
+    d = pol.next_decision(PhaseFeedback(0.9, 0.3, 2.0))  # drift cliff
+    assert d.reset_buffer
+    assert (d.rows_tsa, d.rows_bsa) == (r_tsa0 + 2, r_bsa0 - 2)
+    assert d.rows_tsa + d.rows_bsa == r_tsa0 + r_bsa0
+    # Hysteresis: acc_valid already recovered, but the window holds rows.
+    d = pol.next_decision(PhaseFeedback(0.85, 0.84, 3.0))
+    assert d.rows_tsa == r_tsa0 + 2
+    # Window expired + acc_valid at the pre-drift EMA: rows return.
+    d = pol.next_decision(PhaseFeedback(0.85, 0.84, 4.0))
+    assert (d.rows_tsa, d.rows_bsa) == (r_tsa0, r_bsa0)
+
+
+def test_online_policy_redrift_rearms_and_low_acc_defers_return():
+    pol = _online(boost_rows=2, hysteresis_phases=1, recover_margin=0.02)
+    pol.next_decision(PhaseFeedback(0.8, 0.8, 0.0))  # EMA -> 0.8
+    pol.next_decision(PhaseFeedback(0.9, 0.3, 1.0))  # drift -> boost
+    d = pol.next_decision(PhaseFeedback(0.9, 0.2, 2.0))  # re-drift re-arms
+    assert d.reset_buffer and d.rows_tsa == pol.rows[0] + 2
+    # Window expired but acc_valid still below the EMA: rows stay boosted.
+    d = pol.next_decision(PhaseFeedback(0.4, 0.42, 3.0))
+    assert d.rows_tsa == pol.rows[0] + 2
+    d = pol.next_decision(PhaseFeedback(0.79, 0.8, 4.0))  # recovered
+    assert d.rows_tsa == pol.rows[0]
+
+
+def test_online_policy_boost_clamped_and_disabled():
+    # Default mx6 serving split leaves B-SA 2 rows: boost clamps to 1.
+    hp = CLHyperParams()
+    pol = OnlineSpatiotemporalAllocator(hp, boost_rows=5).bind(
+        DaCapoEstimator(), RESNET18)
+    assert pol.rows[1] - pol.boost_rows >= 1
+    # boost_rows=0 disables re-allocation: drift never moves rows.
+    off = _online(boost_rows=0)
+    d = off.next_decision(PhaseFeedback(0.9, 0.3, 1.0))
+    assert d.reset_buffer and (d.rows_tsa, d.rows_bsa) == off.rows
+    # R=0 fallback split (a 0-row side means "time-share the whole
+    # array"): boosting would shrink it to an exclusive slice — disabled.
+    degen = OnlineSpatiotemporalAllocator(hp, boost_rows=4).bind(
+        DaCapoEstimator(total_rows=1), RESNET18)
+    assert degen.rows[0] == 0 and degen.boost_rows == 0
+    d = degen.next_decision(PhaseFeedback(0.9, 0.3, 1.0))
+    assert (d.rows_tsa, d.rows_bsa) == degen.rows
+
+
+# ------------------------------------------------------------- sessions --
+@pytest.fixture(scope="module")
+def small_setup():
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    hp = CLHyperParams(n_t=32, n_l=16, c_b=128, epochs=1)
+    rng = np.random.default_rng(0)
+    from repro.models.registry import make_vision_model
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        10, 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream,
+                        8, 32, rng, segments=stream.segments[:1], seed=8)
+    return stream, hp, tp, sp
+
+
+def _spec(hp, **kw) -> CLSystemSpec:
+    kw.setdefault("allocator", "dacapo-spatiotemporal")
+    return CLSystemSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                        apply_mx=False, seed=0, eval_fps=0.5, **kw)
+
+
+def test_concurrent_session_speculates_and_golden_guard(small_setup):
+    """One fixture, three concurrent runs: DC-ST on the session-owned
+    pipeline (speculation hits recorded per phase), DC-ST on an explicit
+    pipeline handle (identical timeline), and DC-ST-Online with
+    re-allocation disabled (the golden guard: exact DC-ST behaviour on the
+    refactored data path)."""
+    stream, hp, tp, sp = small_setup
+
+    session = _spec(hp, dispatch="concurrent").build()
+    assert session.speculative_frames
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=20.0)
+    assert res.records[0].spec_hits == 0  # nothing to speculate from yet
+    assert sum(r.spec_hits for r in res.records) > 0
+    for rec in res.records:
+        entry = rec.as_log_entry()
+        assert entry["spec_hits"] == rec.spec_hits
+        assert entry["t_tsa"] == rec.t_tsa  # satellite: timing fields kept
+
+    # Same run through an explicit FramePipeline handle.
+    handle = FramePipeline(stream, speculative=True)
+    session2 = _spec(hp, dispatch="concurrent").build()
+    session2.set_pretrained(tp, sp)
+    res2 = session2.run(handle, duration=20.0)
+    assert handle.hits > 0  # the session fed our pipeline, not its own
+    handle.close()
+    assert res2.accuracy_timeline == res.accuracy_timeline
+
+    # Golden guard: online policy with re-allocation disabled == DC-ST.
+    guard = OnlineSpatiotemporalAllocator(hp, boost_rows=0)
+    session3 = _spec(hp, dispatch="concurrent", allocator=guard).build()
+    session3.set_pretrained(tp, sp)
+    res3 = session3.run(stream, duration=20.0)
+    assert res3.accuracy_timeline == res.accuracy_timeline
+    assert res3.retrain_time == res.retrain_time
+    assert len(res3.records) == len(res.records)
+
+
+class _FireOnce:
+    """Scripted drift detector: exactly one drift once t passes 5 s."""
+
+    def __init__(self):
+        self.fired = False
+
+    def check(self, acc_label, acc_valid, t):
+        if not self.fired and t > 5.0:
+            self.fired = True
+            return True
+        return False
+
+
+def test_online_session_moves_rows_and_repartitions(small_setup):
+    """DC-ST-Online in a concurrent session on a 4-row mesh: the drift
+    boost re-fissions the mesh (B-SA 2 mesh rows -> 1) and the hysteresis
+    return restores it — the per-phase re-partitioning path driven by a
+    real policy."""
+    stream, hp, tp, sp = small_setup
+    policy = OnlineSpatiotemporalAllocator(
+        hp, _MX9_SERVE, boost_rows=4, hysteresis_phases=1,
+        recover_margin=1.0)  # margin 1.0: return as soon as window expires
+    policy.detector = _FireOnce()
+    session = _spec(hp, dispatch="concurrent", allocator=policy,
+                    policy=_MX9_SERVE, mesh=forced_row_mesh(4)).build()
+    session.set_pretrained(tp, sp)
+    seen = []
+    session.add_observer(lambda rec: seen.append(
+        (rec.decision.rows_bsa, session.partition.b_sa.devices.shape[0])))
+    res = session.run(stream, duration=30.0)
+    assert res.drift_events == 1
+    rows = [r for r, _ in seen]
+    r_tsa0, r_bsa0 = policy.rows
+    assert rows[0] == r_bsa0  # offline split first
+    assert r_bsa0 - 4 in rows  # boosted phases ran
+    assert rows[-1] == r_bsa0  # rows returned after recovery
+    # Mesh split follows the decision rows: 8/16 -> 2 mesh rows boosted->1.
+    mesh_rows = {r: m for r, m in seen}
+    assert mesh_rows[r_bsa0] == 2 and mesh_rows[r_bsa0 - 4] == 1
+
+
+def test_sequential_session_defaults_to_transparent_pipeline(small_setup):
+    stream, hp, tp, sp = small_setup
+    session = _spec(hp).build()
+    assert not session.speculative_frames
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=10.0)
+    assert all(r.spec_hits == 0 and r.spec_misses == 0 for r in res.records)

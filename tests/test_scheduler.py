@@ -58,7 +58,9 @@ def test_eomu_triggers_on_drop_only():
 def test_window_pacing_is_declared_on_decisions():
     """Window pacing is decision data, not an engine branch."""
     hp = CLHyperParams()
-    windows = {"dacapo-spatiotemporal": None, "dacapo-spatial": None,
+    windows = {"dacapo-spatiotemporal": None,
+               "dacapo-spatiotemporal-online": None,
+               "dacapo-spatial": None,
                "ekya": 120.0, "eomu": 10.0}
     for name, cls in ALLOCATORS.items():
         pol = cls(hp)

@@ -17,7 +17,9 @@ def test_public_api_surface():
         spatial_allocation,
     )
 
-    assert set(SCHEDULERS) == {"dacapo-spatiotemporal", "dacapo-spatial",
+    # The paper's four systems, plus any later-grown allocators (DC-ST-
+    # Online) — the legacy registry is a live view over ALLOCATORS.
+    assert set(SCHEDULERS) >= {"dacapo-spatiotemporal", "dacapo-spatial",
                                "ekya", "eomu"}
     assert PrecisionPolicy().retraining == "mx9"  # paper §IV
     assert PrecisionPolicy().inference == "mx6"
