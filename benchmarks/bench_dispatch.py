@@ -172,5 +172,22 @@ def main():
     print(f"\nwrote {args.out}")
 
 
+def run():
+    """Registry entry (benchmarks/run.py): smoke measurements as CSV rows."""
+    fusion = bench_scoring_fusion(True)
+    session = bench_session(True)
+    return [
+        ("dispatch/scoring_fused", fusion["fused"]["wall_s"] * 1e6,
+         f"call_reduction={fusion['call_reduction']}"),
+        ("dispatch/session_sequential",
+         session["sequential"]["wall_s"] * 1e6,
+         f"phase_dt={session['sequential']['mean_phase_dt_s']}"),
+        ("dispatch/session_concurrent",
+         session["concurrent"]["wall_s"] * 1e6,
+         f"phase_dt={session['concurrent']['mean_phase_dt_s']}"
+         f";virtual_speedup={session['virtual_phase_speedup']}"),
+    ]
+
+
 if __name__ == "__main__":
     main()

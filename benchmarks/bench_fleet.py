@@ -1,0 +1,197 @@
+"""Multi-camera fleet benchmark: cross-stream T-SA allocation policies.
+
+Runs an N-stream heterogeneous fleet — one camera drifting (label
+distribution flips each compressed segment) next to stable cameras parked
+in the student's pretraining context — through
+:class:`~repro.core.fleet.FleetSession` under three cross-stream split
+modes on identical pretrained weights and an identical virtual-clock
+budget:
+
+* ``drift-weighted`` — the :class:`~repro.core.allocation.FleetAllocator`
+  routes the shared T-SA's labeling/retraining budget to the cameras whose
+  accuracy-loss signal (and drift flags) say they need it;
+* ``uniform`` — every camera gets ``1/N`` of the budget every phase;
+* ``isolated`` — the no-fleet baseline: every camera keeps a full
+  per-session budget, so the shared T-SA serializes ~N sessions' worth of
+  work per phase (N isolated sessions time-sharing the accelerator) and
+  each stream's update cadence is ~N× slower.
+
+Writes ``BENCH_fleet.json`` with, per mode: mean fleet accuracy,
+per-stream accuracies/drifts, fleet phases executed, the per-phase shared
+T-SA time (the equal-budget check: uniform and drift-weighted spend ~one
+session's T-SA budget per phase, isolated ~N×), speculation counters, and
+host wall time.
+
+Acceptance (asserted after the JSON is written): the drift-weighted fleet
+beats BOTH uniform and isolated on mean fleet accuracy.
+
+Run:  PYTHONPATH=src python benchmarks/bench_fleet.py [--smoke] [--out F]
+          [--streams N]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+
+MODES = ("drift-weighted", "uniform", "isolated")
+
+
+def build_streams(n_streams: int, smoke: bool):
+    """One hard-drifting camera + (n-1) static-context cameras.
+
+    All cameras share one stream seed — the same visual world (class
+    patterns, textures), the paper's multi-camera deployment — and differ
+    only in their segment timelines: camera 0 flips its label distribution
+    every (compressed) segment (S1), while the static cameras sit in the
+    student's pretraining context. Budget spent on the static cameras is
+    mostly wasted; camera 0 is where labeling/retraining pays — the signal
+    the drift-weighted allocator should find."""
+    from repro.data.stream import DriftStream, Segment, scenario
+
+    seg_s = 30.0 if smoke else 45.0
+    n_seg = 3 if smoke else 4
+    drifting = [dataclasses.replace(s, duration_s=seg_s)
+                for s in scenario("S1", n_seg)]
+    streams = [DriftStream(drifting, seed=17, img=24)]
+    for _ in range(n_streams - 1):
+        stable = [Segment(duration_s=seg_s)] * n_seg
+        streams.append(DriftStream(stable, seed=17, img=24))
+    return streams
+
+
+def bench_fleet(n_streams: int, smoke: bool) -> dict:
+    from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+    from repro.core.allocation import CLHyperParams
+    from repro.core.fleet import FleetSpec
+    from repro.core.session import pretrain_model
+    from repro.models.registry import make_vision_model
+
+    from repro.core.mx import PrecisionPolicy
+
+    duration = 90.0 if smoke else 180.0
+    # Retraining-heavy economics: labels (the teacher is the expensive
+    # kernel) are detection infrastructure every camera keeps in full
+    # (label_floor=1.0 below); the contended budget the modes split is
+    # retraining + the N_ldd drift bursts. v_thr widened for n_l=16 label
+    # counts (the default -0.10 was tuned for 32..48-label estimates).
+    hp = (CLHyperParams(n_t=64, n_l=16, c_b=192, epochs=1, v_thr=-0.25)
+          if smoke
+          else CLHyperParams(n_t=96, n_l=24, c_b=256, epochs=1,
+                             v_thr=-0.25))
+    streams = build_streams(n_streams, smoke)
+    # Shared pretraining: teacher across the whole attribute space of the
+    # drifting camera; student on the stable context only (segments[:1]).
+    # Deeper than the other smoke benches: the drift detector compares
+    # teacher labels against student predictions, so both must be real
+    # models for the drift signal — the thing this bench allocates on — to
+    # carry information instead of noise.
+    # Student pretrained to convergence on the stable context: the static
+    # cameras start at their accuracy ceiling, so budget routed to them is
+    # genuinely wasted — the allocation signal the modes differ on.
+    rng = np.random.default_rng(0)
+    steps = (30, 40) if smoke else (60, 60)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()),
+                        streams[0], steps[0], 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), streams[0],
+                        steps[1], 32, rng,
+                        segments=streams[0].segments[:1], seed=8)
+
+    # MX9 serving -> the balanced (8, 8) offline split (the mx6 default
+    # would leave the B-SA 2 rows and crush every mode's keep_frac).
+    # label_floor=1.0: every camera keeps its full n_l labels per phase so
+    # every drift detector stays reliable — only retraining and the drift
+    # bursts (extra_label_samples) are re-proportioned across the fleet.
+    base = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                     policy=PrecisionPolicy(inference="mx9"),
+                     apply_mx=False, seed=0, eval_fps=1.0,
+                     dispatch="concurrent",
+                     fleet_kwargs={"label_floor": 1.0, "drift_bias": 3.0,
+                                   "gap_eps": 0.01})
+    out = {}
+    for mode in MODES:
+        fleet = dataclasses.replace(base, fleet_mode=mode).build()
+        fleet.set_pretrained(tp, sp)
+        t0 = time.perf_counter()
+        fres = fleet.run(streams, duration=duration)
+        wall = time.perf_counter() - t0
+        spec_hits = sum(r.spec_hits for lane in fres.streams
+                        for r in lane.records)
+        spec_misses = sum(r.spec_misses for lane in fres.streams
+                          for r in lane.records)
+        out[mode] = {
+            "fleet_avg_accuracy": round(fres.fleet_avg_accuracy, 6),
+            "per_stream_accuracy": [round(r.avg_accuracy, 6)
+                                    for r in fres.streams],
+            "per_stream_drifts": [r.drift_events for r in fres.streams],
+            "fleet_phases": len(fres.fleet_phase_log),
+            # Equal-budget check: per-phase shared-T-SA seconds.
+            "mean_phase_t_tsa_s": round(float(np.mean(
+                [e["t_tsa"] for e in fres.fleet_phase_log])), 6)
+            if fres.fleet_phase_log else 0.0,
+            "spec_hits": spec_hits,
+            "spec_misses": spec_misses,
+            "wall_s": round(wall, 3),
+        }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--streams", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    modes = bench_fleet(args.streams, args.smoke)
+    result = {
+        "bench": "fleet",
+        "mode": "smoke" if args.smoke else "full",
+        "backend": jax.default_backend(),
+        "n_streams": args.streams,
+        "modes": modes,
+    }
+    result["fleet_accuracy_gain_vs_uniform"] = round(
+        modes["drift-weighted"]["fleet_avg_accuracy"]
+        - modes["uniform"]["fleet_avg_accuracy"], 6)
+    result["fleet_accuracy_gain_vs_isolated"] = round(
+        modes["drift-weighted"]["fleet_avg_accuracy"]
+        - modes["isolated"]["fleet_avg_accuracy"], 6)
+
+    # Write BEFORE the acceptance asserts so a failing comparison still
+    # leaves the per-mode numbers to diagnose (CI uploads the file).
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out} in {time.perf_counter() - t0:.1f}s")
+
+    dw = modes["drift-weighted"]["fleet_avg_accuracy"]
+    assert dw > modes["uniform"]["fleet_avg_accuracy"], \
+        "drift-weighted must beat the uniform split on fleet accuracy"
+    assert dw > modes["isolated"]["fleet_avg_accuracy"], \
+        "drift-weighted must beat isolated sessions on fleet accuracy"
+    return result
+
+
+def run():
+    """Registry entry (benchmarks/run.py): smoke fleet sweep as CSV rows.
+    Writes to a distinct file so a full-sweep BENCH_fleet.json survives."""
+    result = main(["--smoke", "--out", "BENCH_fleet_smoke.json"])
+    return [(f"fleet/{mode}",
+             result["modes"][mode]["wall_s"] * 1e6,
+             f"acc={result['modes'][mode]['fleet_avg_accuracy']}")
+            for mode in MODES]
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,13 @@ policy:
 * ``wall_s`` / ``mean_phase_dt_s`` — host wall time and mean virtual phase
   time.
 
+A third variant (``dacapo-spatiotemporal+nohints``) re-runs DC-ST with
+decision-aware speculation disabled — the labeling burst replayed from the
+last layout instead of pre-sized with the next decision's budget — and the
+sweep reports ``decision_aware_hit_rate_delta``: how much hit rate the
+decision-aware predictor recovers (drift phases change the burst size, so
+pure replay always misses them).
+
 Scenario segments are compressed (60 s -> 30 s, 15 s in smoke) so drift —
 and with it the re-allocation path — fires inside bench timescales. The
 serving precision is pinned to MX9 so the offline split is the balanced
@@ -38,6 +45,12 @@ import jax
 import numpy as np
 
 POLICIES = ("dacapo-spatiotemporal", "dacapo-spatiotemporal-online")
+# (policy, decision_aware_spec) per measured variant.
+VARIANTS = {
+    "dacapo-spatiotemporal": ("dacapo-spatiotemporal", True),
+    "dacapo-spatiotemporal-online": ("dacapo-spatiotemporal-online", True),
+    "dacapo-spatiotemporal+nohints": ("dacapo-spatiotemporal", False),
+}
 
 
 def _stats(res, pipe, wall_s: float) -> dict:
@@ -99,19 +112,20 @@ def bench_scenario(scen: str, smoke: bool) -> dict:
                         mesh=forced_row_mesh(4))
 
     out = {}
-    for policy in POLICIES:
-        session = dataclasses.replace(base, allocator=policy).build()
+    for variant, (policy, aware) in VARIANTS.items():
+        session = dataclasses.replace(base, allocator=policy,
+                                      decision_aware_spec=aware).build()
         session.set_pretrained(tp, sp)
         pipe = FramePipeline(stream, speculative=True)
         t0 = time.perf_counter()
         res = session.run(pipe, duration=duration)
         wall = time.perf_counter() - t0
         pipe.close()  # settles the wasted-window accounting
-        out[policy] = _stats(res, pipe, wall)
+        out[variant] = _stats(res, pipe, wall)
     return out
 
 
-def main():
+def main(argv=None):
     from repro.data.stream import SCENARIOS
 
     ap = argparse.ArgumentParser()
@@ -121,7 +135,7 @@ def main():
     ap.add_argument("--scenarios", default=None,
                     help="comma-separated subset (default: all 8; "
                          "smoke default: S1,ES1)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.scenarios:
         names = args.scenarios.split(",")
@@ -136,6 +150,7 @@ def main():
         "mode": "smoke" if args.smoke else "full",
         "backend": jax.default_backend(),
         "policies": list(POLICIES),
+        "variants": list(VARIANTS),
         "scenarios": {},
     }
     for name in names:
@@ -144,13 +159,20 @@ def main():
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               flush=True)
 
-    for policy in POLICIES:
-        hits = sum(s[policy]["speculation"]["hits"]
+    for variant in VARIANTS:
+        hits = sum(s[variant]["speculation"]["hits"]
                    for s in result["scenarios"].values())
-        misses = sum(s[policy]["speculation"]["misses"]
+        misses = sum(s[variant]["speculation"]["misses"]
                      for s in result["scenarios"].values())
         rate = hits / max(1, hits + misses)
-        result.setdefault("speculation_hit_rate", {})[policy] = round(rate, 4)
+        result.setdefault("speculation_hit_rate", {})[variant] = round(rate,
+                                                                       4)
+    # Satellite: what the decision-aware predictor recovers over pure
+    # layout replay (same policy, hints off).
+    result["decision_aware_hit_rate_delta"] = round(
+        result["speculation_hit_rate"]["dacapo-spatiotemporal"]
+        - result["speculation_hit_rate"]["dacapo-spatiotemporal+nohints"],
+        4)
     # Phases the online policy spent away from the offline split
     # (drift-dependent, hence sweep-level).
     result["online_rows_moved_phases"] = sum(
@@ -166,10 +188,31 @@ def main():
                      indent=2))
     print(f"wrote {args.out} ({len(result['scenarios'])} scenarios)")
 
-    # Acceptance: concurrent sessions actually speculate, for both
-    # policies, across the sweep.
-    for policy, rate in result["speculation_hit_rate"].items():
-        assert rate > 0, f"{policy}: speculation never hit"
+    # Acceptance: concurrent sessions actually speculate, for every
+    # variant, across the sweep — and the decision-aware predictor never
+    # costs hits (it only rewrites bursts to the budget actually coming).
+    for variant, rate in result["speculation_hit_rate"].items():
+        assert rate > 0, f"{variant}: speculation never hit"
+    assert result["decision_aware_hit_rate_delta"] >= 0, \
+        "decision-aware speculation lost hits vs pure replay"
+    return result
+
+
+def run():
+    """Registry entry (benchmarks/run.py): smoke sweep as CSV rows. Writes
+    to a distinct file so a full-sweep BENCH_reallocation.json survives."""
+    result = main(["--smoke", "--out", "BENCH_reallocation_smoke.json"])
+    rows = []
+    for scen, variants in result["scenarios"].items():
+        for variant, stats in variants.items():
+            rows.append((f"reallocation/{scen}/{variant}",
+                         stats["wall_s"] * 1e6,
+                         f"acc={stats['avg_accuracy']}"
+                         f";hit_rate={stats['speculation']['hit_rate']}"))
+    rows.append(("reallocation/decision_aware_delta", 0.0,
+                 f"hit_rate_delta="
+                 f"{result['decision_aware_hit_rate_delta']}"))
+    return rows
 
 
 if __name__ == "__main__":

@@ -14,11 +14,14 @@ import traceback
 def main() -> None:
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     from benchmarks import (
+        bench_dispatch,
         bench_fig3_flops,
         bench_fig9_accuracy,
         bench_fig11_temporal,
         bench_fig12_extreme,
+        bench_fleet,
         bench_kernels,
+        bench_reallocation,
         bench_table3_models,
     )
     from benchmarks.common import emit
@@ -33,6 +36,11 @@ def main() -> None:
             ("fig9", bench_fig9_accuracy),
             ("fig11", bench_fig11_temporal),
             ("fig12", bench_fig12_extreme),
+            # System benches (smoke sizes when run via the registry; the
+            # standalone scripts expose the full sweeps + JSON artifacts).
+            ("dispatch", bench_dispatch),
+            ("reallocation", bench_reallocation),
+            ("fleet", bench_fleet),
         ]
     print("name,us_per_call,derived")
     failures = 0

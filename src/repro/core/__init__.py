@@ -3,11 +3,13 @@ policies, pluggable CL kernels, mesh spatial partitioning, the performance
 estimator and the CLSession engine behind the CLSystemSpec front door."""
 from repro.core.allocation import (  # noqa: F401
     ALLOCATORS,
+    FLEET_MODES,
     AllocationDecision,
     AllocationPolicy,
     CLHyperParams,
     EkyaAllocator,
     EOMUAllocator,
+    FleetAllocator,
     OnlineSpatiotemporalAllocator,
     PhaseFeedback,
     SpatialAllocator,
@@ -26,6 +28,11 @@ from repro.core.estimator import (  # noqa: F401
     DaCapoEstimator,
     TPUEstimator,
     spatial_allocation,
+)
+from repro.core.fleet import (  # noqa: F401
+    FleetResult,
+    FleetSession,
+    FleetSpec,
 )
 from repro.core.kernel import (  # noqa: F401
     InferenceKernel,

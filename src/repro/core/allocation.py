@@ -21,7 +21,7 @@ window and returning them as validation accuracy recovers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple, Type
+from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 from repro.configs.dacapo_pairs import VisionConfig
 from repro.core.drift import DriftDetector
@@ -71,6 +71,8 @@ class AllocationDecision:
     rows_bsa: Optional[int] = None
     precisions: PrecisionPolicy = DEFAULT_POLICY
     pace_window_s: Optional[float] = None  # fixed-window grid period
+    retrain_epochs: Optional[int] = None  # None -> hp.epochs (fleet knob)
+    profile_cost_s: float = 0.0  # T-SA seconds of profiling overhead
 
     @property
     def total_label_samples(self) -> int:
@@ -270,14 +272,36 @@ class OnlineSpatiotemporalAllocator(SpatiotemporalAllocator):
 
 
 class EkyaAllocator(SpatiotemporalAllocator):
-    """Idealized Ekya: fixed 120 s retraining window; per-window label quota
-    then retraining for the rest of the window (profiling cost idealized
-    away, as in the paper's baseline §III-A). Window pacing is declared on
+    """Ekya: fixed 120 s retraining window; per-window label quota then
+    retraining for the rest of the window. Window pacing is declared on
     every decision via ``pace_window_s`` — the engine pads the virtual clock
-    to the next window-grid boundary, with no Ekya-specific branch."""
+    to the next window-grid boundary, with no Ekya-specific branch.
+
+    The real Ekya microprofiles candidate retraining configurations at each
+    window on the shared retraining accelerator; the paper's baseline (and
+    this class's default, ``profile_cost=0.0``) idealizes that cost away.
+    A positive ``profile_cost`` (seconds per retraining window) rides on
+    every decision as ``profile_cost_s`` and is charged to the T-SA ledger
+    by the engine before the window's retraining starts — the non-idealized
+    variant eats into each window's retraining/labeling time exactly as
+    microprofiling does."""
 
     name = "ekya"
     pace_window_s = 120.0
+
+    def __init__(self, hp: CLHyperParams,
+                 precision: PrecisionPolicy = DEFAULT_POLICY,
+                 profile_cost: float = 0.0):
+        super().__init__(hp, precision)
+        self.profile_cost = profile_cost
+
+    def _decision(self, retrain_samples: int, *, reset: bool = False,
+                  extra_label: int = 0) -> AllocationDecision:
+        base = super()._decision(retrain_samples, reset=reset,
+                                 extra_label=extra_label)
+        if not self.profile_cost:
+            return base  # idealized default: decisions identical to seed
+        return dataclasses.replace(base, profile_cost_s=self.profile_cost)
 
     def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
         return self._decision(self.hp.n_t)
@@ -303,6 +327,240 @@ class EOMUAllocator(SpatiotemporalAllocator):
                    or feedback.acc_label < self._last_acc - self.drop_eps)
         self._last_acc = feedback.acc_label
         return self._decision(self.hp.n_t if trigger else 0)
+
+
+FLEET_MODES = ("uniform", "round-robin", "drift-weighted", "isolated")
+
+
+class FleetAllocator(AllocationPolicy):
+    """Cross-stream T-SA allocator: wraps one per-stream policy per camera
+    and splits the fleet's shared labeling/retraining budget across streams
+    each phase (Ekya's multi-tenant scheduling problem, ECCO's cross-camera
+    budget sharing — PAPERS.md).
+
+    Each stream lane keeps an ordinary :class:`AllocationPolicy` (its own
+    drift detector, its own online row state), so DC-ST / DC-ST-Online /
+    Ekya / EOMU compose unchanged; the fleet layer only *re-proportions*
+    the temporal budgets the lane policies emit. The fleet-wide budget per
+    phase is ``budget_streams`` sessions' worth of T-SA work (default 1.0:
+    an N-stream fleet spends the same per-phase T-SA time a single session
+    would, keeping the phase cadence — and thus each stream's update
+    latency — independent of N).
+
+    Modes (``FLEET_MODES``):
+
+    * ``uniform`` — every stream gets ``1/N`` of the budget every phase;
+    * ``round-robin`` — one focus stream per phase gets the whole budget,
+      the rest label at the ``label_floor`` and retrain at the heartbeat
+      minimum (drift stays detectable on every camera);
+    * ``drift-weighted`` — shares follow each stream's accuracy-loss
+      signal: the drift gap ``max(0, acc_valid - acc_label)`` (spikes at
+      drift onset, before the buffer reset) plus the *recovery deficit*
+      ``max(0, best_acc - acc_label)`` — how far the lane currently runs
+      below its own healthy fresh-label accuracy (an EMA-tracked high-water
+      mark), which keeps budget on a drifted camera through retraining,
+      after the reset has collapsed the gap term — with a ``× drift_bias``
+      boost on phases whose lane policy fired drift;
+    * ``isolated`` — no re-proportioning at all: every stream keeps its
+      full per-session budget, so the fleet phase costs ~N× the T-SA time
+      (the naive "N sessions time-sharing one accelerator" baseline the
+      fleet bench compares against).
+
+    Per-stream decisions are emitted as ordinary ``AllocationDecision``s
+    (scaled via ``dataclasses.replace``), and a weight of exactly 1 returns
+    the lane decision object untouched — a 1-stream fleet is decision-for-
+    decision identical to the wrapped policy, which the degeneracy golden
+    pins. With ``scale_epochs``, retraining depth is proportioned too: a
+    lane at ``k×`` its uniform share retrains for ``round(k × hp.epochs)``
+    epochs (≥ 1).
+
+    Scaled sample budgets are quantized to multiples of ``bucket`` (labels/
+    retraining; validation to ``bucket // 2``): continuously drift-varying
+    budgets would otherwise give every phase a unique batch shape and make
+    XLA recompile the (expensive) teacher/student applies per phase —
+    bucketing keeps the shape set small, which is what makes drift-weighted
+    fleets run at uniform-split wall speed.
+    """
+
+    name = "fleet"
+
+    def __init__(self, hp: CLHyperParams,
+                 precision: PrecisionPolicy = DEFAULT_POLICY,
+                 policy="dacapo-spatiotemporal",
+                 mode: str = "drift-weighted",
+                 budget_streams: float = 1.0,
+                 label_floor: float = 0.25,
+                 drift_bias: float = 4.0,
+                 gap_eps: float = 0.02,
+                 gap_ema: float = 0.5,
+                 scale_epochs: bool = False,
+                 bucket: int = 8):
+        super().__init__(hp, precision)
+        if mode not in FLEET_MODES:
+            raise ValueError(
+                f"unknown fleet mode {mode!r}; known: {FLEET_MODES}")
+        if isinstance(policy, FleetAllocator) or policy is FleetAllocator:
+            raise ValueError("FleetAllocator cannot wrap itself")
+        self._policy_spec = policy
+        self.mode = mode
+        self.name = f"fleet-{mode}"
+        self.budget_streams = budget_streams
+        self.label_floor = label_floor
+        self.drift_bias = drift_bias
+        self.gap_eps = gap_eps
+        self.gap_ema = gap_ema
+        self.scale_epochs = scale_epochs
+        self.bucket = max(1, bucket)
+        self.policies: List[AllocationPolicy] = []
+        self._estimator = None
+        self._student_cfg: Optional[VisionConfig] = None
+        self._rr = 0  # round-robin focus cursor
+        self._gaps: List[float] = []  # per-stream drift-gap EMA
+        self._acc_ema: List[Optional[float]] = []  # fresh-label acc EMA
+        self._acc_best: List[float] = []  # healthy-acc high-water mark
+
+    # -------------------------------------------------------------- binding
+    def bind(self, estimator, student_cfg: VisionConfig) -> "FleetAllocator":
+        super().bind(estimator, student_cfg)
+        self._estimator, self._student_cfg = estimator, student_cfg
+        for p in self.policies:
+            p.precision = self.precision
+            p.bind(estimator, student_cfg)
+        return self
+
+    def lanes(self, n: int) -> List[AllocationPolicy]:
+        """(Re)create the per-stream policies for an ``n``-stream run —
+        fresh drift detectors and round-robin/EMA state every run."""
+        if isinstance(self._policy_spec, AllocationPolicy):
+            if n > 1:
+                raise ValueError(
+                    "FleetAllocator needs a policy name/class for n > 1 "
+                    "streams (a shared instance would share detector state)")
+            self.policies = [self._policy_spec]
+        else:
+            self.policies = [make_allocator(self._policy_spec, self.hp,
+                                            self.precision)
+                             for _ in range(n)]
+        for p in self.policies:
+            p.precision = self.precision
+            if self._estimator is not None:
+                p.bind(self._estimator, self._student_cfg)
+        self._rr = 0
+        self._gaps = [0.0] * n
+        self._acc_ema = [None] * n
+        self._acc_best = [0.0] * n
+        return self.policies
+
+    # ------------------------------------------------------------ decisions
+    _SINGLE_STREAM_MSG = (
+        "FleetAllocator emits per-stream decision lists "
+        "(initial_decisions/next_decisions) and must run inside a "
+        "FleetSession — build one via FleetSpec, not CLSystemSpec")
+
+    def initial_decision(self) -> AllocationDecision:
+        raise TypeError(self._SINGLE_STREAM_MSG)
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        raise TypeError(self._SINGLE_STREAM_MSG)
+
+    def initial_decisions(self, n: int) -> List[AllocationDecision]:
+        self.lanes(n)  # fresh per-lane policies/state every run
+        base = [p.initial_decision() for p in self.policies]
+        return self._split(base, self._weights(base, None))
+
+    def next_decisions(self, feedbacks: Sequence[PhaseFeedback]
+                       ) -> List[AllocationDecision]:
+        if len(feedbacks) != len(self.policies):
+            raise ValueError(
+                f"{len(feedbacks)} feedbacks for {len(self.policies)} lanes")
+        base = [p.next_decision(fb)
+                for p, fb in zip(self.policies, feedbacks)]
+        return self._split(base, self._weights(base, feedbacks))
+
+    # -------------------------------------------------------------- weights
+    def _weights(self, base: Sequence[AllocationDecision],
+                 feedbacks: Optional[Sequence[PhaseFeedback]]
+                 ) -> Optional[List[float]]:
+        n = len(base)
+        if self.mode == "isolated":
+            return None  # no re-proportioning
+        if self.mode == "round-robin":
+            focus = self._rr % n
+            self._rr += 1
+            return [1.0 if i == focus else 0.0 for i in range(n)]
+        if self.mode == "drift-weighted" and feedbacks is not None:
+            raw = []
+            for i, (d, fb) in enumerate(zip(base, feedbacks)):
+                # Drift gap: buffer-vs-fresh mismatch (fires at drift
+                # onset, collapses once the buffer resets to fresh data).
+                gap = max(0.0, fb.acc_valid - fb.acc_label)
+                self._gaps[i] = (self.gap_ema * self._gaps[i]
+                                 + (1.0 - self.gap_ema) * gap)
+                # Recovery deficit: distance below the lane's own healthy
+                # fresh-label accuracy — keeps budget on a drifted camera
+                # through retraining, after the gap term has collapsed.
+                self._acc_ema[i] = (fb.acc_label
+                                    if self._acc_ema[i] is None
+                                    else self.gap_ema * self._acc_ema[i]
+                                    + (1.0 - self.gap_ema) * fb.acc_label)
+                self._acc_best[i] = max(self._acc_best[i],
+                                        self._acc_ema[i])
+                deficit = max(0.0, self._acc_best[i] - fb.acc_label)
+                w = self.gap_eps + self._gaps[i] + deficit
+                if d.reset_buffer:
+                    w *= self.drift_bias
+                raw.append(w)
+            total = sum(raw)
+            if total <= 0.0:  # e.g. gap_eps=0 on an all-healthy fleet
+                return [1.0 / n] * n
+            return [w / total for w in raw]
+        # uniform (and drift-weighted's first phase, before any feedback)
+        return [1.0 / n] * n
+
+    # -------------------------------------------------------------- scaling
+    def _split(self, base: Sequence[AllocationDecision],
+               weights: Optional[Sequence[float]]
+               ) -> List[AllocationDecision]:
+        if weights is None:
+            return list(base)
+        n = len(base)
+        return [self._scale(d, w, n) for d, w in zip(base, weights)]
+
+    def _scale(self, d: AllocationDecision, weight: float,
+               n: int) -> AllocationDecision:
+        share = weight * self.budget_streams
+        if abs(share - 1.0) < 1e-12 and not (self.scale_epochs and n > 1):
+            return d  # exact degeneracy: 1-stream fleets reuse the decision
+
+        def q(x: float, b: int) -> int:  # quantize to a shape bucket
+            return int(round(x / b)) * b
+
+        b = self.bucket
+        label_floor = max(1, int(round(self.label_floor * self.hp.n_l)))
+        # Retraining heartbeat: a lane that retrains at all runs at least
+        # one SGD batch. Scaling into (0, sgd_batch) would draw data and
+        # refresh serving while executing zero steps, and scaling to zero
+        # makes the engine report the acc_valid=1.0 sentinel — either way
+        # the lane's drift detector sees noise and fires false resets.
+        retrain = q(d.retrain_samples * share, b)
+        if d.retrain_samples > 0:
+            retrain = max(self.hp.sgd_batch, retrain)
+        # Validation is detection infrastructure, not adaptation budget:
+        # a retraining lane keeps its full N_v (cheap student inference)
+        # so acc_valid — half of the drift signal — stays low-variance.
+        valid = (d.valid_samples if retrain > 0
+                 else q(d.valid_samples * share, max(1, b // 2)))
+        label = max(label_floor, q(d.label_samples * share, b))
+        extra = q(d.extra_label_samples * share, b)
+        epochs = d.retrain_epochs
+        if self.scale_epochs and retrain > 0:
+            # k× the uniform share -> k× the retraining depth (>= 1 epoch).
+            epochs = max(1, int(round((epochs or self.hp.epochs)
+                                      * weight * n)))
+        return dataclasses.replace(
+            d, retrain_samples=retrain, valid_samples=valid,
+            label_samples=label, extra_label_samples=extra,
+            retrain_epochs=epochs)
 
 
 ALLOCATORS: Dict[str, Type[AllocationPolicy]] = {

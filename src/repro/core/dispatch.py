@@ -39,11 +39,18 @@ program's thunk immediately); the difference is purely in clock accounting.
 Because JAX dispatch is asynchronous, eager issue + deferred ``collect()`` is
 what lets XLA overlap the B-SA scoring stream with T-SA work — the session
 never blocks between programs of one phase.
+
+Fleet sessions (core/fleet.py) bind N pipelines to one plan — one data-plane
+lane per camera stream — and attribute every charge to a lane ledger next to
+the fleet ledger, so the shared T-SA is charged once for the fleet while
+per-stream shares stay auditable (``lane_time``). ``dispatch_multi`` issues
+one device program on behalf of several lanes (cross-stream batched labeling)
+and fans its per-lane results out into individual handles.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +59,16 @@ CONCURRENT = "concurrent"
 DISPATCH_MODES = (SEQUENTIAL, CONCURRENT)
 
 ROLES = ("t_sa", "b_sa")
+
+
+def _as_pipelines(pipeline) -> Tuple:
+    """Normalize ``begin_phase``'s pipeline argument: None, a single
+    FramePipeline, or a sequence of them (one lane per fleet stream)."""
+    if pipeline is None:
+        return ()
+    if isinstance(pipeline, (list, tuple)):
+        return tuple(pipeline)
+    return (pipeline,)
 
 
 class ProgramHandle:
@@ -90,6 +107,7 @@ class DeviceProgram:
     label: str  # e.g. "valid", "label", "score", "acc_label"
     cost_s: float
     handle: Optional[ProgramHandle]
+    lane: Optional[int] = None  # fleet stream lane this program serves
 
 
 class PhasePlan:
@@ -104,41 +122,90 @@ class PhasePlan:
     def __init__(self, mode: str, start: float, pipeline=None):
         self.mode = mode
         self.start = start
-        self.pipeline = pipeline  # bound FramePipeline (data/pipeline.py)
+        # Bound data plane(s): one FramePipeline per stream lane. A single
+        # pipeline (the CLSession case) is lane 0 of a one-lane plan.
+        self.pipelines: Tuple = _as_pipelines(pipeline)
         self.programs: List[DeviceProgram] = []
         self.totals: Dict[str, float] = {role: 0.0 for role in ROLES}
+        # Per-lane ledgers: plain sums from 0.0 (the same addends that feed
+        # ``totals``), so a one-lane plan's lane ledger is bit-identical to
+        # the fleet ledger — the fleet golden test relies on that.
+        self.lane_totals: Dict[int, Dict[str, float]] = {}
         self._now = start  # T-SA running clock (seed accumulator)
         self._floor = start  # pacing floor on the phase end
 
+    @property
+    def pipeline(self):
+        """Lane-0 pipeline (back-compat single-stream handle)."""
+        return self.pipelines[0] if self.pipelines else None
+
     # ----------------------------------------------------------- dispatch
     def dispatch(self, role: str, label: str, issue: Callable[[], Any],
-                 cost_s: float = 0.0) -> ProgramHandle:
+                 cost_s: float = 0.0,
+                 lane: Optional[int] = None) -> ProgramHandle:
         """Issue a device program *now* (async — the thunk must not block)
         and charge its cost; returns a handle to ``collect()`` later."""
         handle = ProgramHandle(issue())
-        self.programs.append(DeviceProgram(role, label, cost_s, handle))
-        self.charge(role, cost_s)
+        self.programs.append(DeviceProgram(role, label, cost_s, handle, lane))
+        self.charge(role, cost_s, lane=lane)
         return handle
 
-    def fetch(self, t0: float, t1: float, max_frames: int = 0):
+    def dispatch_multi(self, role: str, label: str,
+                       issue: Callable[[], Sequence[Any]],
+                       costs: Sequence[float],
+                       lanes: Sequence[int]) -> List[ProgramHandle]:
+        """Issue ONE device program serving several stream lanes (e.g. a
+        labeling burst batched across the fleet on the shared T-SA) and
+        split its per-lane results into individual handles. The thunk must
+        return one device value per lane; each lane's cost is charged to
+        both the fleet ledger and that lane's ledger, in lane order — for a
+        one-lane plan this is exactly a single ``dispatch``."""
+        values = issue()
+        if len(values) != len(lanes) or len(costs) != len(lanes):
+            raise ValueError(
+                f"dispatch_multi: {len(values)} values / {len(costs)} costs "
+                f"for {len(lanes)} lanes")
+        handles = []
+        for value, cost_s, lane in zip(values, costs, lanes):
+            handle = ProgramHandle(value)
+            self.programs.append(
+                DeviceProgram(role, label, cost_s, handle, lane))
+            self.charge(role, cost_s, lane=lane)
+            handles.append(handle)
+        return handles
+
+    def fetch(self, t0: float, t1: float, max_frames: int = 0,
+              lane: int = 0, tag: Optional[str] = None):
         """Pipeline-aware plan step: pull a frame window for this phase's
         programs through the bound :class:`~repro.data.pipeline.\
-FramePipeline`, so dispatch issues device programs against prefetched,
-        host-ready windows (speculation hits) instead of stalling on inline
-        frame synthesis. Reconciliation keeps results bit-identical either
-        way."""
-        if self.pipeline is None:
+FramePipeline` of ``lane``, so dispatch issues device programs against
+        prefetched, host-ready windows (speculation hits) instead of
+        stalling on inline frame synthesis. Reconciliation keeps results
+        bit-identical either way. ``tag`` marks the window's role in the
+        phase layout (e.g. ``"label"``) for decision-aware speculation."""
+        if not self.pipelines:
             raise ValueError(
                 "no FramePipeline bound to this plan; pass one to "
                 "KernelDispatcher.begin_phase")
-        return self.pipeline.frames(t0, t1, max_frames=max_frames)
+        return self.pipelines[lane].frames(t0, t1, max_frames=max_frames,
+                                           tag=tag)
 
-    def charge(self, role: str, seconds: float) -> None:
+    def charge(self, role: str, seconds: float,
+               lane: Optional[int] = None) -> None:
         """Charge virtual time without an attached program (e.g. retraining
-        SGD, whose cost is known only after the batch count is)."""
+        SGD, whose cost is known only after the batch count is). With a
+        ``lane``, the charge is also attributed to that stream's ledger."""
         self.totals[role] += seconds
+        if lane is not None:
+            lane_led = self.lane_totals.setdefault(
+                lane, {r: 0.0 for r in ROLES})
+            lane_led[role] += seconds
         if role == "t_sa":
             self._now += seconds
+
+    def lane_time(self, role: str, lane: int) -> float:
+        """This phase's virtual seconds charged to ``lane`` on ``role``."""
+        return self.lane_totals.get(lane, {}).get(role, 0.0)
 
     def pad_to(self, t: float) -> None:
         """Floor the phase end on a pacing-grid boundary (pace_window_s)."""
@@ -153,7 +220,11 @@ FramePipeline`, so dispatch issues device programs against prefetched,
 
     @property
     def t_tsa(self) -> float:
-        return self._now - self.start
+        # Reported from the role ledger (a plain sum from 0.0) rather than
+        # as ``_now - start``: mathematically identical, but the ledger form
+        # is bitwise-reproducible by per-lane accounting, which the fleet's
+        # 1-stream degeneracy golden pins.
+        return self.totals["t_sa"]
 
     @property
     def t_bsa(self) -> float:
@@ -198,15 +269,26 @@ class KernelDispatcher:
     def concurrent(self) -> bool:
         return self.mode == CONCURRENT
 
-    def begin_phase(self, start: float, pipeline=None) -> PhasePlan:
+    def begin_phase(self, start: float, pipeline=None,
+                    label_hints: Optional[Sequence] = None) -> PhasePlan:
         """Open a phase plan. With a ``pipeline``
-        (:class:`~repro.data.pipeline.FramePipeline`), the plan becomes the
-        phase's data-plane handle too: opening the plan rotates the
-        pipeline's speculation onto this phase start, and ``plan.fetch``
-        serves the phase's frame windows from the speculative prefetcher."""
-        if pipeline is not None:
-            pipeline.begin_phase(start)
-        plan = _TrackedPlan(self, self.mode, start, pipeline)
+        (:class:`~repro.data.pipeline.FramePipeline`, or a sequence of them
+        — one lane per fleet stream), the plan becomes the phase's
+        data-plane handle too: opening the plan rotates each pipeline's
+        speculation onto this phase start, and ``plan.fetch(lane=i)`` serves
+        the phase's frame windows from that lane's speculative prefetcher.
+        ``label_hints`` (one ``(n_samples, fps)`` per lane, or None entries)
+        is the decision-aware speculation signal: the session knows each
+        lane's next labeling budget at the barrier and hands it to the
+        pipeline so drift-phase bursts are pre-sized instead of replayed
+        from the last layout."""
+        pipelines = _as_pipelines(pipeline)
+        for i, pipe in enumerate(pipelines):
+            hint = (label_hints[i]
+                    if label_hints is not None and i < len(label_hints)
+                    else None)
+            pipe.begin_phase(start, label_hint=hint)
+        plan = _TrackedPlan(self, self.mode, start, pipelines)
         self.phases_dispatched += 1
         return plan
 
@@ -220,10 +302,19 @@ class _TrackedPlan(PhasePlan):
         self._dispatcher = dispatcher
 
     def dispatch(self, role: str, label: str, issue: Callable[[], Any],
-                 cost_s: float = 0.0) -> ProgramHandle:
+                 cost_s: float = 0.0,
+                 lane: Optional[int] = None) -> ProgramHandle:
         self._dispatcher.programs_dispatched += 1
-        return super().dispatch(role, label, issue, cost_s)
+        return super().dispatch(role, label, issue, cost_s, lane=lane)
 
-    def fetch(self, t0: float, t1: float, max_frames: int = 0):
+    def dispatch_multi(self, role: str, label: str,
+                       issue: Callable[[], Sequence[Any]],
+                       costs: Sequence[float],
+                       lanes: Sequence[int]) -> List[ProgramHandle]:
+        self._dispatcher.programs_dispatched += 1
+        return super().dispatch_multi(role, label, issue, costs, lanes)
+
+    def fetch(self, t0: float, t1: float, max_frames: int = 0,
+              lane: int = 0, tag: Optional[str] = None):
         self._dispatcher.windows_fetched += 1
-        return super().fetch(t0, t1, max_frames)
+        return super().fetch(t0, t1, max_frames, lane=lane, tag=tag)

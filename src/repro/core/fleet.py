@@ -1,0 +1,447 @@
+"""FleetSession — multi-camera fleet sessions on one spatially-shared array.
+
+DaCapo's deployment story (paper §2, §5) is an autonomous system serving
+*several* camera feeds from one accelerator: every feed needs its own
+inference timeline on the B-SA while labeling and retraining for all feeds
+compete for the single T-SA. Ekya frames the same setting as a multi-tenant
+scheduling problem over shared retraining compute; ECCO shows the accuracy
+is won by sharing the labeling/retraining budget *across* cameras. This
+module is that layer: the engine that turns N independent
+:class:`~repro.data.stream.DriftStream`s into one fleet session.
+
+Architecture (see ROADMAP.md):
+
+* each stream gets its own **data-plane lane** — a
+  :class:`~repro.data.pipeline.FramePipeline` with per-stream speculation
+  state, a per-stream :class:`~repro.core.session._ScoreSink` (its B-SA
+  serving/accuracy timeline), a per-stream
+  :class:`~repro.core.sample_buffer.SampleBuffer`, student weights and
+  optimizer state, and a per-stream :class:`~repro.core.session.PhaseRecord`
+  record lane (``record.stream`` carries the lane id);
+* one **shared plan** per fleet phase: the
+  :class:`~repro.core.dispatch.KernelDispatcher` binds all N pipelines to a
+  single :class:`~repro.core.dispatch.PhasePlan` whose T-SA ledger is
+  charged once for the fleet while each charge is also attributed to its
+  lane (``plan.lane_time``) — the virtual clock pays for the shared T-SA,
+  not for N copies of it;
+* labeling bursts are **batched across streams** on the shared T-SA
+  (:meth:`~repro.core.kernel.LabelingKernel.label_fleet_async` via
+  ``plan.dispatch_multi``): one microbatched device program labels the whole
+  fleet's burst, and per-lane label handles split back out device-side;
+* a :class:`~repro.core.allocation.FleetAllocator` proportions the fleet's
+  temporal budget across streams every phase (uniform / round-robin /
+  drift-weighted / isolated), while each lane keeps an ordinary per-stream
+  :class:`~repro.core.allocation.AllocationPolicy` underneath.
+
+Degeneracy contract: a **1-stream fleet is bit-identical to**
+:class:`~repro.core.session.CLSession` — same records (including per-phase
+``t_tsa``/``t_bsa`` and speculation counters), same accuracy timeline, same
+virtual clock. The fleet loop is the session loop generalized over lanes;
+every float accumulation it performs at N=1 replays the single-stream
+sequence exactly, and ``tests/test_fleet.py`` pins that against the seed
+goldens of ``tests/test_session.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.configs.dacapo_pairs import VisionConfig
+from repro.core.allocation import (
+    AllocationDecision,
+    CLHyperParams,
+    FleetAllocator,
+    PhaseFeedback,
+)
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.session import (
+    CLResult,
+    CLSession,
+    CLSystemSpec,
+    PhaseObserver,
+    PhaseRecord,
+    _ScoreSink,
+)
+from repro.data.pipeline import FramePipeline
+from repro.data.stream import DriftStream
+
+
+@dataclasses.dataclass
+class _StreamLane:
+    """Per-stream engine state: one camera's data plane + learning state."""
+
+    index: int
+    pipe: FramePipeline  # ownership is tracked by FleetSession.run
+    buffer: SampleBuffer
+    sink: _ScoreSink
+    rng: np.random.Generator
+    params: object  # this stream's student weights (master, fp32)
+    opt: object
+    serving: object  # quantized serving copy of ``params``
+    decision: AllocationDecision
+    keep_frac: float = 1.0
+    eval_cursor: float = 0.0
+    retrain_time: float = 0.0
+    label_time: float = 0.0
+    drift_events: int = 0
+    records: List[PhaseRecord] = dataclasses.field(default_factory=list)
+    # per-phase scratch
+    spec_seen: Tuple[int, int] = (0, 0)
+    acc_v: float = 1.0
+    valid_h: object = None
+    yv: object = None
+    label_h: object = None
+    pred_l_h: object = None
+    x_l: object = None
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """One fleet run: per-stream :class:`CLResult` lanes + fleet ledger."""
+
+    name: str
+    streams: List[CLResult]
+    fleet_avg_accuracy: float  # mean of the per-stream averages
+    fleet_phase_log: List[dict]  # per-phase shared-T-SA/B-SA ledger
+    drift_events: int  # total across streams
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.streams)
+
+
+class FleetSession(CLSession):
+    """Executes fleet allocation decisions phase-by-phase for N streams.
+
+    Construction mirrors :class:`CLSession`; ``allocator`` is either a ready
+    :class:`FleetAllocator` or a per-stream policy (registry name / class /
+    instance) that gets wrapped in one, with ``fleet_mode`` /
+    ``fleet_budget_streams`` / ``fleet_kwargs`` configuring the wrapper.
+    All streams share the student/teacher model pair (one jitted apply per
+    kernel for the whole fleet) but keep independent weights, buffers and
+    drift state per lane.
+    """
+
+    def __init__(self, student_cfg: VisionConfig, teacher_cfg: VisionConfig,
+                 hp: Optional[CLHyperParams] = None, estimator=None,
+                 allocator="dacapo-spatiotemporal",
+                 fleet_mode: str = "drift-weighted",
+                 fleet_budget_streams: float = 1.0,
+                 fleet_kwargs: Optional[dict] = None, **kwargs):
+        hp = hp or CLHyperParams()
+        if not isinstance(allocator, FleetAllocator):
+            allocator = FleetAllocator(
+                hp, policy=allocator, mode=fleet_mode,
+                budget_streams=fleet_budget_streams, **(fleet_kwargs or {}))
+        super().__init__(student_cfg, teacher_cfg, hp=hp,
+                         estimator=estimator, allocator=allocator, **kwargs)
+        self.fleet_allocator: FleetAllocator = self.allocator
+
+    # ------------------------------------------------------------ fleet run
+    def _fleet_rows(self, decisions: Sequence[AllocationDecision]
+                    ) -> Tuple[int, int]:
+        """The fleet-wide spatial split this phase: the array is one — the
+        most T-SA-hungry lane decision wins (for one lane this is exactly
+        the lane's own effective rows)."""
+        effs = [self._effective_rows(d) for d in decisions]
+        return max(e[0] for e in effs), min(e[1] for e in effs)
+
+    def run(self, streams: Union[DriftStream, FramePipeline,
+                                 Sequence[Union[DriftStream, FramePipeline]]],
+            duration: Optional[float] = None,
+            observers: Sequence[PhaseObserver] = ()) -> FleetResult:
+        """Execute the fleet loop over ``streams`` — raw
+        :class:`DriftStream`s (each wrapped in its own lane pipeline) or
+        ready :class:`FramePipeline` handles, freely mixed. A single stream
+        is a 1-lane fleet (bit-identical to :class:`CLSession`)."""
+        if isinstance(streams, (DriftStream, FramePipeline)):
+            streams = [streams]
+        pipes: List[Tuple[FramePipeline, bool]] = []
+        for s in streams:
+            if isinstance(s, FramePipeline):
+                pipes.append((s, False))
+            else:
+                pipes.append((FramePipeline(
+                    s, speculative=self.speculative_frames), True))
+        try:
+            return self._run_fleet([p for p, _ in pipes], duration,
+                                   observers)
+        finally:
+            for pipe, own in pipes:
+                if own:
+                    pipe.close()
+
+    def _run_fleet(self, pipes: List[FramePipeline],
+                   duration: Optional[float],
+                   observers: Sequence[PhaseObserver]) -> FleetResult:
+        hp = self.hp
+        n = len(pipes)
+        duration = duration or min(p.duration for p in pipes)
+        observers = self._observers + list(observers)
+        decisions = self.fleet_allocator.initial_decisions(n)
+
+        lanes = [
+            _StreamLane(
+                index=i, pipe=pipe,
+                buffer=SampleBuffer(hp.c_b, seed=3),
+                sink=_ScoreSink(self.inference,
+                                fuse=self.dispatcher.concurrent),
+                rng=np.random.default_rng(self.seed + i),
+                params=jax.tree_util.tree_map(
+                    lambda x: x.copy(), self.student_params),
+                opt=None, serving=None, decision=decisions[i])
+            for i, pipe in enumerate(pipes)
+        ]
+        r_tsa, r_bsa = self._fleet_rows(decisions)
+        for lane in lanes:
+            lane.opt = self.retrain.init_state(lane.params)
+            prec = lane.decision.precisions
+            # The B-SA serves all N streams: per-stream sustainable frame
+            # fraction divides its throughput by the fleet's aggregate fps.
+            lane.keep_frac = self.inference.keep_frac(
+                r_bsa, prec.inference, hp.fps * n)
+            lane.serving = self.inference.serving_params(lane.params,
+                                                         prec.inference)
+        clock = 0.0
+        fleet_phase_log: List[dict] = []
+
+        def score_lane_until(lane: _StreamLane, t_end: float, serving,
+                             plan) -> None:
+            """Queue lane-``i`` student-accuracy scoring on
+            [lane.eval_cursor, t_end): that stream's B-SA serving program.
+            The generalization of the session's ``score_until`` — same
+            guard, same subsampling, same charge, per lane."""
+            if t_end <= lane.eval_cursor + 1e-9:
+                return
+            n_eval = max(1, int((t_end - lane.eval_cursor) * self.eval_fps))
+            if plan is not None:
+                x, y = plan.fetch(lane.eval_cursor, t_end,
+                                  max_frames=n_eval, lane=lane.index)
+                plan.charge(
+                    "b_sa",
+                    len(x) * self.inference.time_per_sample(
+                        r_bsa, lane.decision.precisions.inference),
+                    lane=lane.index)
+            else:
+                x, y = lane.pipe.frames(lane.eval_cursor, t_end,
+                                        max_frames=n_eval)
+            lane.sink.add(t_end, x, y, lane.keep_frac, serving)
+            lane.eval_cursor = t_end
+
+        while clock < duration:
+            phase_start = clock
+            r_tsa, r_bsa = self._fleet_rows(decisions)
+            self._repartition(r_bsa)
+            for lane in lanes:
+                lane.decision = decisions[lane.index]
+                lane.keep_frac = self.inference.keep_frac(
+                    r_bsa, lane.decision.precisions.inference, hp.fps * n)
+            # ---- Plan: one shared ledger for the fleet phase; rotates
+            # every lane's speculation, pre-sized with its known budget. ----
+            hints = [((d.total_label_samples, hp.fps)
+                      if self.decision_aware_spec else None)
+                     for d in decisions]
+            plan = self.dispatcher.begin_phase(clock, pipes,
+                                               label_hints=hints)
+            for lane in lanes:
+                lane.spec_seen = (lane.pipe.hits, lane.pipe.misses)
+                lane.valid_h = lane.yv = None
+                lane.acc_v = 1.0
+                if lane.decision.profile_cost_s:
+                    plan.charge("t_sa", lane.decision.profile_cost_s,
+                                lane=lane.index)
+            # -------- Retraining (Alg. 1 lines 4-7), lane by lane on the
+            # shared T-SA chain --------
+            for lane in lanes:
+                d = lane.decision
+                if (len(lane.buffer) >= hp.sgd_batch
+                        and d.retrain_samples > 0):
+                    xt, yt, xv, yv = lane.buffer.get_data(d.retrain_samples,
+                                                          d.valid_samples)
+                    lane.params, lane.opt, n_batches = self.retrain.fit(
+                        lane.params, lane.opt, xt, yt, lane.rng,
+                        epochs=d.retrain_epochs)
+                    t_phase = n_batches * self.retrain.time_per_batch(
+                        r_tsa, d.precisions.retraining)
+                    plan.charge("t_sa", t_phase, lane=lane.index)
+                    lane.retrain_time += t_phase
+                    lane.serving = self.inference.serving_params(
+                        lane.params, d.precisions.inference)
+                    lane.yv = yv
+                    v_role, v_rows = (("b_sa", r_bsa)
+                                      if self.dispatcher.concurrent
+                                      else ("t_sa", r_tsa))
+                    lane.valid_h = plan.dispatch(
+                        v_role, "valid",
+                        lambda s=lane.serving, v=xv:
+                        self.inference.predict_async(s, v),
+                        cost_s=len(xv) * self.inference.time_per_sample(
+                            v_rows, d.precisions.inference),
+                        lane=lane.index)
+            for lane in lanes:
+                score_lane_until(lane, min(plan.now(), duration),
+                                 lane.serving, plan)
+            if plan.now() >= duration:
+                clock = plan.finish()
+                break
+
+            # -------- Labeling (lines 8-10): bursts fetched per lane, then
+            # batched across the fleet on the shared T-SA --------
+            for lane in lanes:
+                if lane.decision.reset_buffer:
+                    lane.buffer.reset()  # line 12
+                    lane.drift_events += 1
+            t_lab0 = plan.now()
+            for lane in lanes:
+                n_label = lane.decision.total_label_samples
+                lane.x_l, _ = plan.fetch(t_lab0, t_lab0 + n_label / hp.fps,
+                                         max_frames=n_label,
+                                         lane=lane.index, tag="label")
+            # Group lanes by labeling precision: each group is ONE batched
+            # device program (cross-stream microbatches) on the T-SA.
+            groups: dict = {}
+            for lane in lanes:
+                groups.setdefault(lane.decision.precisions.labeling,
+                                  []).append(lane)
+            for prec_label, group in groups.items():
+                costs = [
+                    lane.decision.total_label_samples
+                    * self.labeling.time_per_sample(r_tsa, prec_label)
+                    for lane in group]
+                t_run = plan.now()
+                handles = plan.dispatch_multi(
+                    "t_sa", "label",
+                    lambda g=group, p=prec_label:
+                    self.labeling.label_fleet_async(
+                        self.teacher_params, [ln.x_l for ln in g], p,
+                        microbatch=self._label_microbatch),
+                    costs=costs, lanes=[lane.index for lane in group])
+                for lane, handle, cost in zip(group, handles, costs):
+                    # Replay the plan's serial accumulation so each lane's
+                    # label_time reproduces the single-stream float pattern
+                    # ((t + c) - t), which the degeneracy golden pins.
+                    t_next = t_run + cost
+                    lane.label_time += t_next - t_run
+                    t_run = t_next
+                    lane.label_h = handle
+            for lane in lanes:
+                lane.pred_l_h = plan.dispatch(
+                    "b_sa", "acc_label",
+                    lambda s=lane.serving, x=lane.x_l:
+                    self.inference.predict_async(s, x),
+                    cost_s=len(lane.x_l) * self.inference.time_per_sample(
+                        r_bsa, lane.decision.precisions.inference),
+                    lane=lane.index)
+            for lane in lanes:
+                score_lane_until(lane, min(plan.now(), duration),
+                                 lane.serving, plan)
+
+            # Fixed-window pacing, per lane decision (the pacing floor is
+            # the max boundary any paced lane declares).
+            for lane in lanes:
+                if lane.decision.pace_window_s:
+                    w = lane.decision.pace_window_s
+                    next_boundary = (int(phase_start / w) + 1) * w
+                    if plan.now() < next_boundary:
+                        score_lane_until(lane, min(next_boundary, duration),
+                                         lane.serving, plan)
+                        plan.pad_to(next_boundary)
+
+            # ---- Collect: the fleet phase-end barrier. ----
+            clock = plan.finish()
+            for lane in lanes:
+                score_lane_until(lane, min(clock, duration), lane.serving,
+                                 None)
+                if lane.valid_h is not None:
+                    lane.acc_v = float(
+                        (lane.valid_h.collect() == lane.yv).mean())
+                y_l = lane.label_h.collect()
+                lane.acc_l = float(
+                    (lane.pred_l_h.collect() == y_l).mean())
+                lane.buffer.update(lane.x_l, y_l)  # line 14
+                lane.sink.flush()
+
+            # -------- Next decisions (lines 11-13), fleet-proportioned ----
+            feedbacks = [
+                PhaseFeedback(acc_valid=lane.acc_v, acc_label=lane.acc_l,
+                              t=clock, phase_start=phase_start,
+                              retrain_time=lane.retrain_time,
+                              label_time=lane.label_time)
+                for lane in lanes]
+            next_decisions = self.fleet_allocator.next_decisions(feedbacks)
+            fleet_phase_log.append({
+                "t": clock, "phase_start": phase_start,
+                "t_tsa": plan.t_tsa, "t_bsa": plan.t_bsa,
+                "per_stream_t_tsa": [plan.lane_time("t_sa", lane.index)
+                                     for lane in lanes],
+                "per_stream_t_bsa": [plan.lane_time("b_sa", lane.index)
+                                     for lane in lanes],
+            })
+            for lane in lanes:
+                record = PhaseRecord(
+                    index=len(lane.records), t=clock, acc_valid=lane.acc_v,
+                    acc_label=lane.acc_l,
+                    drift=next_decisions[lane.index].reset_buffer,
+                    retrain_time=lane.retrain_time,
+                    label_time=lane.label_time,
+                    decision=lane.decision,
+                    next_decision=next_decisions[lane.index],
+                    phase_start=phase_start,
+                    t_tsa=plan.lane_time("t_sa", lane.index),
+                    t_bsa=plan.lane_time("b_sa", lane.index),
+                    spec_hits=lane.pipe.hits - lane.spec_seen[0],
+                    spec_misses=lane.pipe.misses - lane.spec_seen[1],
+                    stream=lane.index)
+                lane.records.append(record)
+                for obs in observers:
+                    obs(record)
+            decisions = next_decisions
+
+        results = []
+        for lane in lanes:
+            score_lane_until(lane, duration, lane.serving, None)
+            acc_timeline = lane.sink.timeline()
+            accs = [a for _, a in acc_timeline]
+            results.append(CLResult(
+                name=f"{self.fleet_allocator.name}[{lane.index}]",
+                accuracy_timeline=acc_timeline,
+                phase_log=[r.as_log_entry() for r in lane.records],
+                avg_accuracy=float(np.mean(accs)) if accs else 0.0,
+                retrain_time=lane.retrain_time,
+                label_time=lane.label_time,
+                drift_events=lane.drift_events,
+                records=lane.records,
+            ))
+        return FleetResult(
+            name=self.fleet_allocator.name,
+            streams=results,
+            fleet_avg_accuracy=float(
+                np.mean([r.avg_accuracy for r in results])),
+            fleet_phase_log=fleet_phase_log,
+            drift_events=sum(r.drift_events for r in results),
+        )
+
+
+@dataclasses.dataclass
+class FleetSpec(CLSystemSpec):
+    """Declarative front door for fleet sessions: every
+    :class:`~repro.core.session.CLSystemSpec` knob (inherited — new session
+    knobs are mirrored automatically via ``_session_kwargs``) plus the
+    fleet surface: the per-stream ``allocator`` is wrapped in a
+    :class:`FleetAllocator` with ``fleet_mode`` / ``budget_streams`` /
+    ``fleet_kwargs``."""
+
+    fleet_mode: str = "drift-weighted"
+    budget_streams: float = 1.0
+    fleet_kwargs: Optional[dict] = None
+
+    def build(self) -> FleetSession:
+        return FleetSession(
+            fleet_mode=self.fleet_mode,
+            fleet_budget_streams=self.budget_streams,
+            fleet_kwargs=self.fleet_kwargs,
+            **self._session_kwargs(),
+        )

@@ -176,6 +176,36 @@ class LabelingKernel(_PlacedKernel):
               microbatch: Optional[int] = None) -> np.ndarray:
         return np.asarray(self.label_async(params, x, precision, microbatch))
 
+    def label_fleet_async(self, params, bursts: Sequence[np.ndarray],
+                          precision: str,
+                          microbatch: Optional[int] = None
+                          ) -> List[jax.Array]:
+        """Label several streams' bursts in ONE pass over the shared T-SA.
+
+        The fleet's labeling work arrives as one burst per camera stream;
+        issuing them separately would microbatch each burst on its own
+        (``sum(ceil(n_i / mb))`` jitted calls and N tail fragments).
+        Batching concatenates the bursts on the batch axis, microbatches the
+        *combined* burst (``ceil(sum(n_i) / mb)`` calls — chunks freely
+        cross stream boundaries), and splits the labels back per stream as
+        device-side slices, still async. Per-sample models make the result
+        equal to labeling each burst alone; a single-burst fleet takes the
+        exact ``label_async`` path the single-stream goldens pin."""
+        bursts = [b for b in bursts]
+        if not bursts:
+            return []
+        if len(bursts) == 1:
+            return [self.label_async(params, bursts[0], precision,
+                                     microbatch)]
+        sizes = [len(b) for b in bursts]
+        fused = self.label_async(params, np.concatenate(bursts, axis=0),
+                                 precision, microbatch)
+        out, off = [], 0
+        for size in sizes:
+            out.append(fused[off: off + size])
+            off += size
+        return out
+
     def time_per_sample(self, rows: int, precision: str) -> float:
         return self.estimator.forward_time(self.full_cfg, rows, precision,
                                            batch=1)
@@ -212,15 +242,18 @@ class RetrainKernel(_PlacedKernel):
         return jax.tree_util.tree_map(jnp.zeros_like, params)
 
     def fit(self, params, opt, xt: np.ndarray, yt: np.ndarray,
-            rng: np.random.Generator) -> Tuple[object, object, int]:
+            rng: np.random.Generator,
+            epochs: Optional[int] = None) -> Tuple[object, object, int]:
         """Retrain (Alg. 1 line 5): epochs x minibatch SGD over D_t.
         Returns (params, opt, n_batches) — the engine charges
         n_batches * time_per_batch to the virtual clock, and n_batches is
         exactly the number of SGD steps executed (a D_t smaller than one
-        SGD batch runs — and charges — zero steps)."""
+        SGD batch runs — and charges — zero steps). ``epochs`` overrides
+        the hyper-parameter default — the knob cross-stream allocators use
+        to proportion retraining depth per stream."""
         hp = self.hp
         n_batches = 0
-        for _ in range(hp.epochs):
+        for _ in range(epochs if epochs is not None else hp.epochs):
             perm = rng.permutation(len(xt))
             for i in range(0, len(xt) - hp.sgd_batch + 1, hp.sgd_batch):
                 idx = perm[i: i + hp.sgd_batch]

@@ -109,6 +109,7 @@ class PhaseRecord:
     t_bsa: float = 0.0  # B-SA kernel time this phase (serving-side programs)
     spec_hits: int = 0  # frame windows served from speculative prefetch
     spec_misses: int = 0  # frame windows synthesized inline (reconcile miss)
+    stream: int = 0  # fleet stream lane this record belongs to
 
     def as_log_entry(self) -> dict:
         """``phase_log`` dict layout — every PhaseRecord field the legacy
@@ -120,7 +121,8 @@ class PhaseRecord:
                 "phase_start": self.phase_start,
                 "t_tsa": self.t_tsa, "t_bsa": self.t_bsa,
                 "spec_hits": self.spec_hits,
-                "spec_misses": self.spec_misses}
+                "spec_misses": self.spec_misses,
+                "stream": self.stream}
 
 
 PhaseObserver = Callable[[PhaseRecord], None]
@@ -190,6 +192,7 @@ class CLSession:
         dispatch: str = "sequential",
         label_microbatch: Optional[int] = None,
         speculative_frames: Optional[bool] = None,
+        decision_aware_spec: bool = True,
     ):
         self.hp = hp or CLHyperParams()
         self.estimator = estimator or DaCapoEstimator()
@@ -204,6 +207,11 @@ class CLSession:
         if speculative_frames is None:
             speculative_frames = self.dispatcher.concurrent
         self.speculative_frames = speculative_frames
+        # Decision-aware speculation: at each phase barrier the next
+        # decision's labeling budget is handed to the pipeline so the
+        # speculated labeling burst is pre-sized (drift phases stop missing
+        # on the replayed small layout). Only meaningful when speculating.
+        self.decision_aware_spec = decision_aware_spec
         # Microbatched labeling: seed call pattern (one jitted call) by
         # default; concurrent mode chunks big label bursts unless overridden
         # (0 explicitly disables microbatching in either mode).
@@ -217,6 +225,7 @@ class CLSession:
         self.teacher_cfg = teacher_cfg.reduced()
         self.student = make_vision_model(self.student_cfg)
         self.teacher = make_vision_model(self.teacher_cfg)
+        self.seed = seed
         self.key = jax.random.PRNGKey(seed)
         self.rng = np.random.default_rng(seed)
         self._observers: List[PhaseObserver] = list(observers)
@@ -375,17 +384,29 @@ class CLSession:
             keep_frac = self.inference.keep_frac(r_bsa, prec.inference,
                                                  hp.fps)
             # ---- Plan: open the phase ledger on the dispatcher; this also
-            # rotates the pipeline's speculation onto this phase start. ----
-            plan = self.dispatcher.begin_phase(clock, pipe)
+            # rotates the pipeline's speculation onto this phase start,
+            # pre-sized with this decision's labeling budget (the
+            # decision-aware predictor — the budget is known at the
+            # barrier, so drift-phase N_ldd bursts prefetch whole). ----
+            hint = ((decision.total_label_samples, hp.fps)
+                    if self.decision_aware_spec else None)
+            plan = self.dispatcher.begin_phase(clock, pipe,
+                                               label_hints=(hint,))
             spec_seen = (pipe.hits, pipe.misses)
             valid_h = xv = yv = None
+            # Profiling overhead (e.g. Ekya's per-window microprofiling)
+            # rides on the decision and is charged to the T-SA ledger
+            # before the window's own work — zero for idealized policies.
+            if decision.profile_cost_s:
+                plan.charge("t_sa", decision.profile_cost_s)
             # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
             acc_v = 1.0
             if len(buffer) >= hp.sgd_batch and decision.retrain_samples > 0:
                 xt, yt, xv, yv = buffer.get_data(decision.retrain_samples,
                                                  decision.valid_samples)
                 self.student_params, self._opt, n_batches = self.retrain.fit(
-                    self.student_params, self._opt, xt, yt, self.rng)
+                    self.student_params, self._opt, xt, yt, self.rng,
+                    epochs=decision.retrain_epochs)
                 t_phase = n_batches * self.retrain.time_per_batch(
                     r_tsa, prec.retraining)
                 plan.charge("t_sa", t_phase)
@@ -418,7 +439,7 @@ class CLSession:
                 drift_events += 1
             t_lab0 = plan.now()
             x_l, _y_true = plan.fetch(t_lab0, t_lab0 + n_label / hp.fps,
-                                      max_frames=n_label)
+                                      max_frames=n_label, tag="label")
             label_h = plan.dispatch(
                 "t_sa", "label",
                 lambda: self.labeling.label_async(
@@ -521,15 +542,20 @@ class CLSystemSpec:
     # Speculative frame prefetch (data/pipeline.py); None = follow dispatch
     # mode (on for concurrent, off for sequential).
     speculative_frames: Optional[bool] = None
+    # Pre-size speculated labeling bursts with the next decision's budget.
+    decision_aware_spec: bool = True
 
-    def build(self) -> CLSession:
+    def _session_kwargs(self) -> dict:
+        """The resolved CLSession constructor kwargs this spec describes —
+        shared with subclasses (FleetSpec) so new knobs are mirrored once."""
         if self.student is None or self.teacher is None:
-            raise ValueError("CLSystemSpec needs student and teacher configs")
+            raise ValueError(
+                f"{type(self).__name__} needs student and teacher configs")
         est = self.estimator
         if est is not None and (isinstance(est, type)
                                 or not hasattr(est, "total_rows")):
             est = est()  # class or zero-arg factory -> instance
-        return CLSession(
+        return dict(
             student_cfg=self.student,
             teacher_cfg=self.teacher,
             hp=self.hp,
@@ -543,7 +569,11 @@ class CLSystemSpec:
             dispatch=self.dispatch,
             label_microbatch=self.label_microbatch,
             speculative_frames=self.speculative_frames,
+            decision_aware_spec=self.decision_aware_spec,
         )
+
+    def build(self) -> CLSession:
+        return CLSession(**self._session_kwargs())
 
 
 # ------------------------------------------------------------------ helpers

@@ -90,6 +90,7 @@ class SpeculationStats:
     misses: int = 0
     windows_speculated: int = 0
     windows_wasted: int = 0  # predicted but never consumed
+    windows_hinted: int = 0  # pre-sized by a decision-aware label hint
     phases: int = 0
 
     @property
@@ -127,7 +128,10 @@ class FramePipeline:
         # never a wrong frame.
         self.reconcile_timeout_s = reconcile_timeout_s
         self.stats = SpeculationStats()
-        self._trace: List[Tuple[float, float, int]] = []
+        # Request trace: (dt0, dt1, max_frames, tag) offsets from the phase
+        # start; ``tag`` marks the window's role ("label" for the labeling
+        # burst) so decision-aware hints can pre-size it on rotation.
+        self._trace: List[Tuple[float, float, int, Optional[str]]] = []
         self._phase_start: Optional[float] = None
         self._batch: Optional[_SpecBatch] = None
         self._queue: "queue.Queue" = queue.Queue()
@@ -184,9 +188,19 @@ class FramePipeline:
                     w.ready.set()  # unset windows reconcile as misses
 
     # -------------------------------------------------------------- phases
-    def begin_phase(self, start: float) -> None:
+    def begin_phase(self, start: float,
+                    label_hint: Optional[Tuple[int, float]] = None) -> None:
         """Open a phase at virtual time ``start``: retire the previous
-        phase's speculation, and speculate this phase from its trace."""
+        phase's speculation, and speculate this phase from its trace.
+
+        ``label_hint`` is the decision-aware predictor (ROADMAP "smarter
+        speculation"): at the phase barrier the session already knows the
+        next decision's labeling budget, so a ``(n_samples, fps)`` hint
+        pre-sizes every ``"label"``-tagged window of the replayed trace to
+        the upcoming burst — on drift phases the N_ldd burst prefetches
+        whole instead of replaying (and missing on) the last phase's small
+        layout. Mis-sized hints behave like any misprediction: a reconcile
+        miss, never a wrong frame."""
         prev_trace = self._trace
         self._trace = []
         self._phase_start = start
@@ -200,27 +214,34 @@ class FramePipeline:
             self._batch = None
         if not prev_trace:
             return
-        windows = [
-            _SpecWindow(start + dt0, start + dt1, mf,
-                        _window_key(self.stream, start + dt0, start + dt1,
-                                    mf))
-            for dt0, dt1, mf in prev_trace[:self.max_prefetch]
-        ]
+        windows = []
+        for dt0, dt1, mf, tag in prev_trace[:self.max_prefetch]:
+            if (label_hint is not None and tag == "label"
+                    and mf != label_hint[0]):
+                n, fps = label_hint
+                dt1, mf = dt0 + n / fps, int(n)
+                self.stats.windows_hinted += 1
+            windows.append(
+                _SpecWindow(start + dt0, start + dt1, mf,
+                            _window_key(self.stream, start + dt0,
+                                        start + dt1, mf)))
         self._batch = _SpecBatch(windows)
         self.stats.windows_speculated += len(windows)
         self._ensure_worker()
         self._queue.put(self._batch)
 
     # -------------------------------------------------------------- frames
-    def frames(self, t0: float, t1: float,
-               max_frames: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    def frames(self, t0: float, t1: float, max_frames: int = 0,
+               tag: Optional[str] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Frames in [t0, t1) — bit-identical to ``stream.frames``, served
-        from the speculation when the prediction reconciles."""
+        from the speculation when the prediction reconciles. ``tag`` names
+        the window's role in the phase layout (``"label"`` enables
+        decision-aware pre-sizing on the next rotation)."""
         if not self.speculative:
             return self.stream.frames(t0, t1, max_frames=max_frames)
         if self._phase_start is not None:
             self._trace.append((t0 - self._phase_start,
-                                t1 - self._phase_start, max_frames))
+                                t1 - self._phase_start, max_frames, tag))
         batch = self._batch
         if batch is not None and not batch.cancelled:
             w = batch.index.get(_window_key(self.stream, t0, t1, max_frames))

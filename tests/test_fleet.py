@@ -1,0 +1,423 @@
+"""Fleet-session tests: the 1-stream degeneracy golden (a 1-lane
+FleetSession is bit-identical to CLSession — records, accuracy timeline,
+speculation counters — and hits the seed goldens of tests/test_session.py),
+a heterogeneous 3-stream run with T-SA ledger conservation and per-stream
+PhaseRecord lanes, the FleetAllocator split modes, cross-stream batched
+labeling, Ekya's non-idealized profiling cost, and decision-aware
+speculation hints."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.allocation import (
+    FLEET_MODES,
+    CLHyperParams,
+    EkyaAllocator,
+    FleetAllocator,
+    PhaseFeedback,
+)
+from repro.core.estimator import DaCapoEstimator
+from repro.core.fleet import FleetSession, FleetSpec
+from repro.core.kernel import LabelingKernel
+from repro.core.session import CLSystemSpec, pretrain_model
+from repro.data.pipeline import FramePipeline
+from repro.data.stream import DriftStream, scenario
+from repro.models.registry import make_vision_model
+
+# The seed-capture goldens of tests/test_session.py (same fixture: S1 x3
+# segments seed=5 img=24, hp(48, 24, c_b=192), pretrain rng(0) 25/15 steps,
+# duration 90 s, apply_mx False, eval_fps 0.5). A 1-stream fleet must hit
+# them bit-for-bit.
+GOLDEN_ST = dict(avg_accuracy=0.32608695652173914, phases=23, drifts=9,
+                 retrain_time=54.54179220000003,
+                 label_time=36.060292799999985)
+
+_RECORD_FIELDS = ("index", "t", "acc_valid", "acc_label", "drift",
+                  "retrain_time", "label_time", "phase_start", "t_tsa",
+                  "t_bsa", "spec_hits", "spec_misses", "stream")
+
+
+def _assert_records_identical(recs_a, recs_b):
+    assert len(recs_a) == len(recs_b)
+    for a, b in zip(recs_a, recs_b):
+        for field in _RECORD_FIELDS:
+            assert getattr(a, field) == getattr(b, field), field
+        assert a.decision == b.decision
+        assert a.next_decision == b.next_decision
+
+
+@pytest.fixture(scope="module")
+def golden_setup():
+    stream = DriftStream(scenario("S1", 3), seed=5, img=24)
+    hp = CLHyperParams(n_t=48, n_l=24, c_b=192, epochs=1)
+    rng = np.random.default_rng(0)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        25, 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream, 15,
+                        32, rng, segments=stream.segments[:1], seed=8)
+    return stream, hp, tp, sp
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    hp = CLHyperParams(n_t=32, n_l=16, c_b=128, epochs=1)
+    rng = np.random.default_rng(0)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        10, 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream, 8,
+                        32, rng, segments=stream.segments[:1], seed=8)
+    return stream, hp, tp, sp
+
+
+def _fleet(hp, mode="drift-weighted", **kw) -> FleetSession:
+    kw.setdefault("allocator", "dacapo-spatiotemporal")
+    return FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                     fleet_mode=mode, apply_mx=False, seed=0, eval_fps=0.5,
+                     **kw).build()
+
+
+def _session(hp, **kw):
+    kw.setdefault("allocator", "dacapo-spatiotemporal")
+    return CLSystemSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                        apply_mx=False, seed=0, eval_fps=0.5, **kw).build()
+
+
+# ------------------------------------------------------ degeneracy golden --
+def test_one_stream_fleet_hits_seed_goldens(golden_setup):
+    """Acceptance: a 1-stream fleet reproduces the seed-capture goldens of
+    tests/test_session.py bit-for-bit, AND is record-for-record identical
+    to a live CLSession on the same fixture."""
+    stream, hp, tp, sp = golden_setup
+    session = _session(hp)
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=90.0)
+
+    fleet = _fleet(hp)
+    fleet.set_pretrained(tp, sp)
+    fres = fleet.run([stream], duration=90.0)
+    assert fres.n_streams == 1
+    lane = fres.streams[0]
+
+    # The seed goldens (same constants test_session pins).
+    assert abs(lane.avg_accuracy - GOLDEN_ST["avg_accuracy"]) < 1e-6
+    assert len(lane.phase_log) == GOLDEN_ST["phases"]
+    assert lane.drift_events == GOLDEN_ST["drifts"]
+    assert abs(lane.retrain_time - GOLDEN_ST["retrain_time"]) < 1e-6
+    assert abs(lane.label_time - GOLDEN_ST["label_time"]) < 1e-6
+
+    # Bit-identity against the live session: timeline and every record.
+    assert lane.accuracy_timeline == res.accuracy_timeline
+    assert lane.retrain_time == res.retrain_time
+    assert lane.label_time == res.label_time
+    _assert_records_identical(lane.records, res.records)
+    assert fres.fleet_avg_accuracy == lane.avg_accuracy
+
+
+@pytest.mark.parametrize("mode", FLEET_MODES)
+def test_one_stream_fleet_degenerate_in_every_mode(small_setup, mode):
+    """Every split mode is the identity at N=1 (weights collapse to 1)."""
+    stream, hp, tp, sp = small_setup
+    session = _session(hp)
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=20.0)
+
+    fleet = _fleet(hp, mode=mode)
+    fleet.set_pretrained(tp, sp)
+    fres = fleet.run([stream], duration=20.0)
+    assert fres.streams[0].accuracy_timeline == res.accuracy_timeline
+    _assert_records_identical(fres.streams[0].records, res.records)
+
+
+def test_one_stream_fleet_concurrent_with_speculation(small_setup):
+    """Concurrent dispatch: the 1-lane fleet matches CLSession including
+    the per-phase speculation hit/miss counters."""
+    stream, hp, tp, sp = small_setup
+    session = _session(hp, dispatch="concurrent")
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=20.0)
+
+    fleet = _fleet(hp, dispatch="concurrent")
+    assert fleet.speculative_frames
+    fleet.set_pretrained(tp, sp)
+    fres = fleet.run([stream], duration=20.0)
+    lane = fres.streams[0]
+    assert sum(r.spec_hits for r in lane.records) > 0
+    assert lane.accuracy_timeline == res.accuracy_timeline
+    _assert_records_identical(lane.records, res.records)
+
+
+# --------------------------------------------------- heterogeneous fleet --
+def test_three_stream_fleet_ledger_conservation(small_setup):
+    """A heterogeneous 3-stream fleet (different scenarios/seeds): the
+    shared T-SA ledger is conserved — each fleet phase's charge equals the
+    sum of the per-stream charges — and the records arrive in per-stream
+    lanes."""
+    _, hp, tp, sp = small_setup
+    streams = [DriftStream(scenario("S1", 2), seed=5, img=24),
+               DriftStream(scenario("S3", 2), seed=6, img=24),
+               DriftStream(scenario("ES1", 2), seed=7, img=24)]
+    fleet = _fleet(hp, mode="drift-weighted")
+    fleet.set_pretrained(tp, sp)
+    seen = []
+    fres = fleet.run(streams, duration=40.0, observers=(seen.append,))
+
+    assert fres.n_streams == 3
+    assert fres.fleet_phase_log, "fleet executed no phases"
+    for entry in fres.fleet_phase_log:
+        # Sum of per-stream charges == fleet charge, both roles.
+        assert sum(entry["per_stream_t_tsa"]) == pytest.approx(
+            entry["t_tsa"], rel=1e-9, abs=1e-12)
+        assert sum(entry["per_stream_t_bsa"]) == pytest.approx(
+            entry["t_bsa"], rel=1e-9, abs=1e-12)
+        assert len(entry["per_stream_t_tsa"]) == 3
+    # Per-stream PhaseRecord lanes: contiguous indices, correct lane ids,
+    # one record per fleet phase per stream.
+    n_phases = len(fres.fleet_phase_log)
+    for i, lane in enumerate(fres.streams):
+        assert len(lane.records) == n_phases
+        for j, rec in enumerate(lane.records):
+            assert rec.stream == i and rec.index == j
+        assert lane.avg_accuracy > 0.0
+        ts = [t for t, _ in lane.accuracy_timeline]
+        assert ts == sorted(ts)
+    # Observers saw every lane's records.
+    assert {rec.stream for rec in seen} == {0, 1, 2}
+    assert len(seen) == 3 * n_phases
+    # Per-lane record t_tsa matches the fleet ledger attribution.
+    for i, lane in enumerate(fres.streams):
+        for rec, entry in zip(lane.records, fres.fleet_phase_log):
+            assert rec.t_tsa == entry["per_stream_t_tsa"][i]
+
+
+def test_fleet_budget_scales_phase_cost(small_setup):
+    """The point of the fleet layer: a uniform 3-stream split spends about
+    one session's T-SA budget per phase, while the isolated baseline spends
+    ~3x — so at equal virtual duration the split fleet executes more
+    phases (more frequent per-stream updates)."""
+    _, hp, tp, sp = small_setup
+    streams = [DriftStream(scenario("S1", 2), seed=5, img=24),
+               DriftStream(scenario("S3", 2), seed=6, img=24),
+               DriftStream(scenario("S5", 2), seed=7, img=24)]
+    phases = {}
+    for mode in ("uniform", "isolated"):
+        fleet = _fleet(hp, mode=mode)
+        fleet.set_pretrained(tp, sp)
+        fres = fleet.run(streams, duration=40.0)
+        phases[mode] = len(fres.fleet_phase_log)
+    assert phases["uniform"] > phases["isolated"]
+
+
+# ------------------------------------------------------- allocator modes --
+def _bound_fleet_allocator(mode, **kw) -> FleetAllocator:
+    hp = CLHyperParams(n_t=64, n_l=32)
+    alloc = FleetAllocator(hp, policy="dacapo-spatiotemporal", mode=mode,
+                           **kw)
+    return alloc.bind(DaCapoEstimator(), RESNET18)
+
+
+_HEALTHY = PhaseFeedback(acc_valid=0.8, acc_label=0.82, t=1.0)
+
+
+def test_fleet_allocator_uniform_split():
+    alloc = _bound_fleet_allocator("uniform")
+    decisions = alloc.initial_decisions(4)
+    assert len(decisions) == 4 == len(alloc.policies)
+    for d in decisions:
+        assert d.retrain_samples == round(alloc.hp.n_t / 4)
+        assert d.rows_tsa is not None  # spatial split still carried
+    decisions = alloc.next_decisions([_HEALTHY] * 4)
+    total_label = sum(d.label_samples for d in decisions)
+    assert total_label <= alloc.hp.n_l + 4  # ~one session's labeling budget
+
+
+def test_fleet_allocator_round_robin_rotates_focus():
+    alloc = _bound_fleet_allocator("round-robin")
+    focus_order = []
+    alloc.initial_decisions(3)
+    for _ in range(3):
+        decisions = alloc.next_decisions([_HEALTHY] * 3)
+        focus = [i for i, d in enumerate(decisions)
+                 if d.retrain_samples == alloc.hp.n_t]
+        assert len(focus) == 1
+        focus_order.append(focus[0])
+        for i, d in enumerate(decisions):
+            if i != focus[0]:
+                # Heartbeat: non-focus lanes keep one SGD batch + full N_v
+                # so their drift detectors stay live.
+                assert d.retrain_samples == alloc.hp.sgd_batch
+                assert d.valid_samples == alloc.hp.n_v
+                assert d.label_samples >= 1  # drift stays detectable
+    assert len(set(focus_order)) == 3  # every stream got a turn
+
+
+def test_fleet_allocator_drift_weighted_follows_drift():
+    alloc = _bound_fleet_allocator("drift-weighted", drift_bias=4.0)
+    alloc.initial_decisions(3)
+    alloc.next_decisions([_HEALTHY] * 3)  # settle EMAs
+    # Stream 1 falls off a cliff (fresh-label acc collapses -> drift).
+    cliff = PhaseFeedback(acc_valid=0.9, acc_label=0.2, t=2.0)
+    decisions = alloc.next_decisions([_HEALTHY, cliff, _HEALTHY])
+    assert decisions[1].reset_buffer  # lane policy fired drift
+    assert decisions[1].retrain_samples > decisions[0].retrain_samples
+    assert (decisions[1].total_label_samples
+            > decisions[0].total_label_samples)
+
+
+def test_fleet_allocator_isolated_keeps_full_budgets():
+    alloc = _bound_fleet_allocator("isolated")
+    decisions = alloc.initial_decisions(3)
+    for d in decisions:
+        assert d.retrain_samples == alloc.hp.n_t
+        assert d.label_samples == alloc.hp.n_l
+
+
+def test_fleet_allocator_one_stream_identity_and_guards():
+    alloc = _bound_fleet_allocator("drift-weighted")
+    decisions = alloc.initial_decisions(1)
+    base = alloc.policies[0]
+    # Weight 1 returns the lane decision object untouched.
+    assert decisions[0] == base.initial_decision()
+    with pytest.raises(ValueError):
+        FleetAllocator(CLHyperParams(), mode="nope")
+    with pytest.raises(ValueError):
+        inst = _bound_fleet_allocator("uniform")
+        FleetAllocator(CLHyperParams(), policy=inst)
+    shared = EkyaAllocator(CLHyperParams())
+    alloc2 = FleetAllocator(CLHyperParams(), policy=shared)
+    with pytest.raises(ValueError):
+        alloc2.lanes(2)  # shared instance across lanes is refused
+    # The single-stream AllocationPolicy surface raises early with
+    # guidance (a FleetAllocator inside a plain CLSession would otherwise
+    # fail with a bare NotImplementedError after the first phase).
+    with pytest.raises(TypeError):
+        alloc.initial_decision()
+    with pytest.raises(TypeError):
+        alloc.next_decision(_HEALTHY)
+
+
+def test_fleet_allocator_zero_eps_all_healthy_falls_back_uniform():
+    alloc = _bound_fleet_allocator("drift-weighted", gap_eps=0.0)
+    alloc.initial_decisions(2)
+    decisions = alloc.next_decisions([_HEALTHY] * 2)  # raw weights all 0
+    assert [d.retrain_samples for d in decisions] == [32, 32]  # 1/2 each
+
+
+def test_fleet_allocator_scale_epochs():
+    alloc = _bound_fleet_allocator("round-robin", scale_epochs=True)
+    alloc.initial_decisions(3)
+    decisions = alloc.next_decisions([_HEALTHY] * 3)
+    focus = [d for d in decisions
+             if d.retrain_samples == alloc.hp.n_t][0]
+    # Focus lane holds 3x the uniform share -> 3x the retraining depth;
+    # heartbeat lanes stay at 1 epoch.
+    assert focus.retrain_epochs == 3
+    for d in decisions:
+        if d is not focus:
+            assert d.retrain_epochs == 1
+
+
+# ------------------------------------------- cross-stream batched labeling --
+def test_label_fleet_async_batches_microbatches_across_streams():
+    model = make_vision_model(WIDERESNET50.reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    kernel = LabelingKernel(model, WIDERESNET50, DaCapoEstimator(),
+                            apply_mx=False)
+    rng = np.random.default_rng(0)
+    bursts = [np.asarray(rng.normal(size=(n, 24, 24, 3)), np.float32)
+              for n in (24, 24, 24)]
+    # Per-stream calls: 3 bursts of 24 <= mb=64 -> one jitted call each.
+    kernel.n_apply_calls = 0
+    separate = [kernel.label(params, b, "mx6", microbatch=64)
+                for b in bursts]
+    calls_separate = kernel.n_apply_calls
+    # Fleet call: 72 samples -> ceil(72/64) = 2 microbatches total.
+    kernel.n_apply_calls = 0
+    fused = [np.asarray(y) for y in
+             kernel.label_fleet_async(params, bursts, "mx6", microbatch=64)]
+    calls_fused = kernel.n_apply_calls
+    assert calls_fused < calls_separate
+    for a, b in zip(separate, fused):
+        np.testing.assert_array_equal(a, b)
+    # Single-burst fleets take the exact label_async path.
+    kernel.n_apply_calls = 0
+    solo = kernel.label_fleet_async(params, bursts[:1], "mx6",
+                                    microbatch=64)
+    assert len(solo) == 1 and kernel.n_apply_calls == 1
+    assert kernel.label_fleet_async(params, [], "mx6") == []
+
+
+# ----------------------------------------------------- ekya profiling cost --
+def test_ekya_profile_cost_charged_to_tsa_ledger(small_setup):
+    """profile_cost=0 (default) is the idealized seed behaviour; a positive
+    cost rides on every decision and lands in the phase's T-SA ledger."""
+    stream, hp, tp, sp = small_setup
+    ideal = EkyaAllocator(hp)
+    assert ideal.initial_decision().profile_cost_s == 0.0
+    profiled = EkyaAllocator(hp, profile_cost=5.0)
+    assert profiled.initial_decision().profile_cost_s == 5.0
+    assert profiled.next_decision(_HEALTHY).profile_cost_s == 5.0
+
+    recs = {}
+    for name, alloc in (("ideal", EkyaAllocator(hp)),
+                        ("profiled", EkyaAllocator(hp, profile_cost=5.0))):
+        session = _session(hp, allocator=alloc)
+        session.set_pretrained(tp, sp)
+        recs[name] = session.run(stream, duration=30.0).records
+    assert recs["ideal"] and recs["profiled"]
+    # Same phase structure (the 120 s window pacing absorbs the cost), but
+    # the T-SA ledger carries the extra 5 s of microprofiling per window.
+    assert len(recs["ideal"]) == len(recs["profiled"])
+    assert recs["profiled"][0].t_tsa == pytest.approx(
+        recs["ideal"][0].t_tsa + 5.0)
+
+
+# ------------------------------------------------- decision-aware hints --
+def test_label_hint_presizes_speculated_burst():
+    """The decision-aware predictor: a label-tagged window is re-sized to
+    the hinted budget on rotation, so a drift-phase burst 4x the replayed
+    layout still reconciles as a hit — and stays bit-identical to inline
+    synthesis."""
+    stream = DriftStream(scenario("S1", 2), seed=7, img=16)
+    inline = DriftStream(scenario("S1", 2), seed=7, img=16)
+    fps = stream.fps
+    pipe = FramePipeline(stream, speculative=True)
+    try:
+        pipe.begin_phase(0.0)
+        pipe.frames(0.0, 0.0 + 16 / fps, max_frames=16, tag="label")
+        # Without a hint this request would miss (cf. the misprediction
+        # test in test_pipeline); the hint pre-sizes it.
+        pipe.begin_phase(3.0, label_hint=(64, fps))
+        assert pipe.stats.windows_hinted == 1
+        h0, m0 = pipe.hits, pipe.misses
+        x, y = pipe.frames(3.0, 3.0 + 64 / fps, max_frames=64, tag="label")
+        xi, yi = inline.frames(3.0, 3.0 + 64 / fps, max_frames=64)
+        np.testing.assert_array_equal(x, xi)
+        np.testing.assert_array_equal(y, yi)
+        assert (pipe.hits, pipe.misses) == (h0 + 1, m0)
+        # A hint matching the recorded size rewrites nothing.
+        pipe.begin_phase(6.0, label_hint=(64, fps))
+        assert pipe.stats.windows_hinted == 1
+    finally:
+        pipe.close()
+
+
+def test_session_decision_aware_spec_knob(small_setup):
+    """The knob only changes speculation efficiency, never results: with
+    hints disabled the timeline is identical, and drift phases (budget
+    changes) cost at least as many misses."""
+    stream, hp, tp, sp = small_setup
+    runs = {}
+    for aware in (True, False):
+        session = _session(hp, dispatch="concurrent",
+                           decision_aware_spec=aware)
+        session.set_pretrained(tp, sp)
+        runs[aware] = session.run(stream, duration=20.0)
+    assert (runs[True].accuracy_timeline
+            == runs[False].accuracy_timeline)
+    hits = {k: sum(r.spec_hits for r in v.records) for k, v in runs.items()}
+    misses = {k: sum(r.spec_misses for r in v.records)
+              for k, v in runs.items()}
+    assert hits[True] >= hits[False]
+    assert misses[True] <= misses[False]
