@@ -1,0 +1,96 @@
+"""Guard the BENCH_*.json schema the benchmarks (and CI consumers) depend
+on: every artifact must parse as JSON and carry its headline accuracy keys.
+
+Each system bench writes a JSON artifact CI uploads; downstream tooling
+(and the acceptance asserts in the benches themselves) read the headline
+keys below. A bench refactor that renames or drops one would silently ship
+artifacts nobody can compare across runs — this script fails the build
+instead.
+
+Run:  python benchmarks/check_artifacts.py [PATTERN ...]
+      (defaults to BENCH_*.json in the current directory; missing benches
+      are fine — only artifacts that EXIST are validated.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+# Per-bench headline keys: path segments into the JSON document. A tuple
+# entry like ("modes", "*", "fleet_avg_accuracy") requires the key in every
+# member of that mapping; mappings verified non-empty unless the bench
+# wrote them conditionally (see OPTIONAL_EMPTY).
+HEADLINE_KEYS = {
+    "dispatch": [("session", "sequential", "avg_accuracy"),
+                 ("session", "concurrent", "avg_accuracy")],
+    "reallocation": [("scenarios", "*", "*", "avg_accuracy"),
+                     ("speculation_hit_rate",)],
+    "fleet": [("modes", "*", "fleet_avg_accuracy"),
+              ("row_policies", "*", "fleet_avg_accuracy")],
+}
+# Mappings a bench may legitimately leave empty (e.g. a --row-policy matrix
+# run skips the temporal-mode sweep).
+OPTIONAL_EMPTY = {("fleet", "modes")}
+
+
+def _check_path(bench: str, doc: dict, path: tuple, errors: list,
+                name: str, prefix: tuple = ()) -> None:
+    node, walked = doc, list(prefix)
+    for i, seg in enumerate(path):
+        if seg == "*":
+            label = "/".join(walked) or "<root>"
+            if not isinstance(node, dict):
+                errors.append(f"{name}: {label} is not a mapping")
+                return
+            if not node:
+                # Only mappings explicitly allowed to be empty pass (the
+                # walked prefix always carries the mapping's own key here).
+                if walked and (bench, walked[-1]) in OPTIONAL_EMPTY:
+                    return
+                errors.append(f"{name}: {label} is empty")
+                return
+            rest = path[i + 1:]
+            for key, sub in node.items():
+                _check_path(bench, sub, rest, errors,
+                            f"{name}:{label}[{key}]",
+                            prefix=tuple(walked) + (key,))
+            return
+        if not isinstance(node, dict) or seg not in node:
+            errors.append(f"{name}: missing headline key "
+                          f"{'/'.join(walked + [seg])}")
+            return
+        walked.append(seg)
+        node = node[seg]
+    if node is None:
+        errors.append(f"{name}: headline key {'/'.join(walked)} is null")
+
+
+def main(argv=None) -> int:
+    patterns = (argv if argv else sys.argv[1:]) or ["BENCH_*.json"]
+    paths = sorted(p for pat in patterns for p in glob.glob(pat))
+    if not paths:
+        print(f"no artifacts matched {patterns} — nothing to check")
+        return 0
+    errors: list = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{path}: does not parse: {e}")
+            continue
+        bench = doc.get("bench")
+        if bench is None:
+            errors.append(f"{path}: missing the 'bench' discriminator key")
+            continue
+        for key_path in HEADLINE_KEYS.get(bench, []):
+            _check_path(bench, doc, key_path, errors, path)
+        print(f"ok: {path} (bench={bench})")
+    for err in errors:
+        print(f"FAIL: {err}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,11 +7,16 @@ inference timeline on the B-SA while a single shared T-SA labels and
 retrains for the whole fleet, with the
 :class:`~repro.core.allocation.FleetAllocator` proportioning the per-phase
 budget across cameras (``--mode drift-weighted|uniform|round-robin|
-isolated``). The per-phase log shows each stream's lane (``s0``, ``s1``,
-...) and where the budget went; the summary compares per-stream accuracy.
+isolated``) and a pluggable :class:`~repro.core.decision.FleetRowPolicy`
+resolving the fleet's ONE spatial plane per phase (``--row-policy
+resolve-max|drift-surge|weighted-vote``). The per-phase log shows each
+stream's lane (``s0``, ``s1``, ...) and where the budget went; the summary
+compares per-stream accuracy and plots the fleet T-SA rows over time (the
+spatial plane in motion under drift-surge / weighted-vote).
 
 Run:  PYTHONPATH=src python examples/fleet_drive.py [--fast] [--streams 3]
-          [--mode drift-weighted] [--dispatch sequential|concurrent]
+          [--mode drift-weighted] [--row-policy resolve-max]
+          [--dispatch sequential|concurrent]
 """
 import argparse
 import os
@@ -30,6 +35,9 @@ def main():
     ap.add_argument("--mode", default="drift-weighted",
                     choices=("drift-weighted", "uniform", "round-robin",
                              "isolated"))
+    ap.add_argument("--row-policy", default="resolve-max",
+                    choices=("resolve-max", "drift-surge", "weighted-vote"),
+                    help="fleet spatial-plane policy (FleetRowPolicy)")
     ap.add_argument("--dispatch", default="sequential",
                     choices=("sequential", "concurrent"))
     args = ap.parse_args()
@@ -65,7 +73,8 @@ def main():
                         segments=streams[0].segments[:1], seed=8)
 
     fleet = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
-                      fleet_mode=args.mode, apply_mx=False, eval_fps=0.5,
+                      fleet_mode=args.mode, row_policy=args.row_policy,
+                      apply_mx=False, eval_fps=0.5,
                       policy=PrecisionPolicy(inference="mx9"),
                       dispatch=args.dispatch).build()
     fleet.set_pretrained(tp, sp)
@@ -78,8 +87,8 @@ def main():
         f"{' DRIFT' if rec.drift else ''}"))
     fres = fleet.run(streams, duration=duration)
 
-    print(f"\nfleet mode={args.mode} streams={args.streams} "
-          f"{duration:.0f} virtual seconds "
+    print(f"\nfleet mode={args.mode} row-policy={args.row_policy} "
+          f"streams={args.streams} {duration:.0f} virtual seconds "
           f"({len(fres.fleet_phase_log)} fleet phases)")
     for i, lane in enumerate(fres.streams):
         kind = "drifting" if i == 0 else "stable"
@@ -93,6 +102,15 @@ def main():
                                   for e in fres.fleet_phase_log]))
         print(f"shared T-SA per phase: {mean_tsa:.2f}s "
               f"(sum of per-stream shares — one array, not N)")
+        # Fleet rows over time: the ONE spatial plane per phase.
+        rows = [(e["t"], e["rows_tsa"], e["rows_bsa"])
+                for e in fres.fleet_phase_log]
+        print("fleet rows over time (t: T-SA/B-SA):")
+        print("  " + "  ".join(f"{t:5.0f}s:{rt}/{rb}"
+                               for t, rt, rb in rows))
+        moves = sum(1 for a, b in zip(rows, rows[1:]) if a[1] != b[1])
+        print(f"spatial re-allocations: {moves} "
+              f"(row policy: {args.row_policy})")
 
 
 if __name__ == "__main__":

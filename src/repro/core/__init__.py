@@ -16,7 +16,22 @@ from repro.core.allocation import (  # noqa: F401
     SpatiotemporalAllocator,
     make_allocator,
 )
+# ``SCHEDULERS`` is the legacy alias for the allocator registry; imported
+# from allocation (not the deprecated core.scheduler shim) so importing
+# repro.core stays warning-free under -W error::DeprecationWarning.
+from repro.core.allocation import ALLOCATORS as SCHEDULERS  # noqa: F401
 from repro.core.cl_system import ContinuousLearningSystem  # noqa: F401
+from repro.core.decision import (  # noqa: F401
+    FLEET_ROW_POLICIES,
+    Decision,
+    FleetDecision,
+    FleetRowContext,
+    FleetRowPolicy,
+    SpatialPlan,
+    TemporalPlan,
+    as_decision,
+    make_fleet_row_policy,
+)
 from repro.core.dispatch import (  # noqa: F401
     DISPATCH_MODES,
     DeviceProgram,
@@ -43,7 +58,6 @@ from repro.core.kernel import (  # noqa: F401
 from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy, mx_dense  # noqa: F401
 from repro.core.partition import SpatialPartition, partition_mesh  # noqa: F401
 from repro.core.sample_buffer import SampleBuffer  # noqa: F401
-from repro.core.scheduler import SCHEDULERS  # noqa: F401
 from repro.core.session import (  # noqa: F401
     CLResult,
     CLSession,

@@ -1,29 +1,50 @@
 """Resource-allocation policies — Algorithm 1 and the §III baselines as data.
 
-This module is the *decision* layer of the continuous-learning stack: an
+This module is the *policy* layer of the continuous-learning stack: an
 ``AllocationPolicy`` looks at per-phase feedback (validation vs. fresh-label
-accuracy, the virtual clock) and emits an ``AllocationDecision`` describing
-everything the engine (core/session.py) should do next — temporal sample
-budgets, spatial T-SA/B-SA row split, per-kernel MX precision, and optional
-fixed-window pacing. The engine executes decisions mechanically; every
-behavioural difference between DaCapo-Spatiotemporal, DaCapo-Spatial, Ekya
-and EOMU lives here, not in the engine loop.
+accuracy, the engine-side drift flag, the virtual clock) and emits a
+decision describing everything the engine (core/session.py) should do next.
+The decision surface is two composable planes (core/decision.py): a
+``SpatialPlan`` (T-SA/B-SA rows, per-kernel MX precisions, mesh re-fission
+intent) and a ``TemporalPlan`` (sample budgets, pacing window, retraining
+depth, profiling cost), combined by a frozen ``Decision`` the engine
+consumes. The flat ``AllocationDecision`` below is the thin bidirectional
+facade over those planes (``.split()`` / ``.from_decision()``) that every
+pre-plane policy, golden and benchmark still targets — the round trip is
+the identity, so both surfaces are equivalent. The engine executes either
+mechanically; every behavioural difference between DaCapo-Spatiotemporal,
+DaCapo-Spatial, Ekya and EOMU lives here, not in the engine loop.
 
 Policies are constructed from hyper-parameters only and later ``bind``-ed to
 a performance estimator + student config, at which point they compute their
 offline spatial split (GetSpatialAllocation, Alg. 1 line 1). Because every
-decision carries its own row split, a policy is free to re-allocate
+decision carries its own spatial plane, a policy is free to re-allocate
 spatially *online* — the paper's DC-ST does so temporally;
 ``OnlineSpatiotemporalAllocator`` (DC-ST-Online) exercises the spatial axis
 too, shifting rows from B-SA to T-SA at drift time under a hysteresis
 window and returning them as validation accuracy recovers.
+
+Fleets add one more layer: ``FleetAllocator`` wraps a per-stream policy per
+camera lane and emits ``FleetDecision``s — N per-lane ``TemporalPlan``s
+(the re-proportioned temporal budgets) plus ONE fleet-wide ``SpatialPlan``
+resolved by a pluggable ``FleetRowPolicy`` (resolve-max / drift-surge /
+weighted-vote, see core/decision.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 from repro.configs.dacapo_pairs import VisionConfig
+from repro.core.decision import (
+    Decision,
+    FleetDecision,
+    FleetRowContext,
+    SpatialPlan,
+    TemporalPlan,
+    make_fleet_row_policy,
+)
 from repro.core.drift import DriftDetector
 from repro.core.estimator import spatial_allocation
 from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy
@@ -55,11 +76,14 @@ class CLHyperParams:
 
 @dataclasses.dataclass(frozen=True)
 class AllocationDecision:
-    """One phase of work, fully described.
+    """One phase of work, flat — the facade over the two decision planes.
 
     The leading five fields match the legacy ``PhasePlan`` layout so old
     positional constructions keep working; the trailing fields are the richer
-    spatial/precision/pacing surface this API adds.
+    spatial/precision/pacing surface this API adds. :meth:`split` lifts the
+    flat decision into a two-plane :class:`~repro.core.decision.Decision`
+    (what the engines actually consume) and :meth:`from_decision` flattens
+    one back; ``d.split().to_legacy() == d`` for every decision.
     """
 
     retrain_samples: int
@@ -78,10 +102,29 @@ class AllocationDecision:
     def total_label_samples(self) -> int:
         return self.label_samples + self.extra_label_samples
 
+    # ------------------------------------------------- two-plane facade
+    def split(self) -> Decision:
+        """Lift into the two-plane API: (SpatialPlan, TemporalPlan)."""
+        return Decision.from_legacy(self)
+
+    @classmethod
+    def from_decision(cls, decision: Decision) -> "AllocationDecision":
+        """Flatten a two-plane decision back into the legacy layout."""
+        return decision.to_legacy()
+
 
 @dataclasses.dataclass(frozen=True)
 class PhaseFeedback:
-    """What the engine reports back to the policy after each phase."""
+    """What the engine reports back to the policy after each phase.
+
+    ``drifted`` is the engine-side drift verdict for the phase — the single
+    source of truth every policy (DC-ST, DC-ST-Online, the fleet
+    drift-weighted signal) reads instead of re-deriving drift from
+    ``acc_label - acc_valid`` itself. ``None`` means the feedback came
+    through a path that predates the field (the legacy ``next_phase`` API,
+    hand-built feedbacks in tests); policies then fall back to their own
+    detector via :meth:`AllocationPolicy._drift`.
+    """
 
     acc_valid: float
     acc_label: float
@@ -89,6 +132,7 @@ class PhaseFeedback:
     phase_start: float = 0.0
     retrain_time: float = 0.0
     label_time: float = 0.0
+    drifted: Optional[bool] = None  # engine-side drift verdict
 
 
 class AllocationPolicy:
@@ -143,12 +187,37 @@ class AllocationPolicy:
     def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
         raise NotImplementedError
 
+    # ---------------------------------------------------------------- drift
+    def observe_drift(self, acc_label: float, acc_valid: float,
+                      t: float) -> bool:
+        """The drift verdict for a phase — called once by the engine at the
+        phase barrier, and handed to the policy on ``feedback.drifted``.
+        Delegates to this policy's detector, so scripted/custom detectors
+        keep steering the run."""
+        return self.detector.check(acc_label, acc_valid, t)
+
+    def _drift(self, feedback: PhaseFeedback) -> bool:
+        """The phase's drift flag: the engine-set source of truth when
+        present, else this policy's own detector (legacy feedback paths)."""
+        if feedback.drifted is not None:
+            return feedback.drifted
+        return self.observe_drift(feedback.acc_label, feedback.acc_valid,
+                                  feedback.t)
+
     # ------------------------------------------------- legacy scheduler API
     def initial_plan(self) -> AllocationDecision:
+        warnings.warn(
+            "AllocationPolicy.initial_plan() is deprecated; use "
+            "initial_decision() (or the two-plane Decision API via "
+            ".split())", DeprecationWarning, stacklevel=2)
         return self.initial_decision()
 
     def next_phase(self, acc_valid: float, acc_label: float,
                    t: float) -> AllocationDecision:
+        warnings.warn(
+            "AllocationPolicy.next_phase() is deprecated; use "
+            "next_decision(PhaseFeedback(...)) (or the two-plane Decision "
+            "API via .split())", DeprecationWarning, stacklevel=2)
         return self.next_decision(
             PhaseFeedback(acc_valid=acc_valid, acc_label=acc_label, t=t))
 
@@ -162,8 +231,7 @@ class SpatiotemporalAllocator(AllocationPolicy):
     name = "dacapo-spatiotemporal"
 
     def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
-        drift = self.detector.check(feedback.acc_label, feedback.acc_valid,
-                                    feedback.t)
+        drift = self._drift(feedback)
         if drift:
             return self._decision(self.hp.n_t, reset=True,
                                   extra_label=self.hp.n_ldd - self.hp.n_l)
@@ -177,8 +245,7 @@ class SpatialAllocator(SpatiotemporalAllocator):
     name = "dacapo-spatial"
 
     def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
-        self.detector.check(feedback.acc_label, feedback.acc_valid,
-                            feedback.t)  # logged, unused
+        self._drift(feedback)  # logged, unused
         return self._decision(self.hp.n_t)
 
 
@@ -248,8 +315,7 @@ class OnlineSpatiotemporalAllocator(SpatiotemporalAllocator):
         return dataclasses.replace(base, rows_tsa=r_tsa, rows_bsa=r_bsa)
 
     def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
-        drift = self.detector.check(feedback.acc_label, feedback.acc_valid,
-                                    feedback.t)
+        drift = self._drift(feedback)
         if not self._boosted and not drift:
             # Healthy-state acc_valid baseline the recovery check targets
             # (drift-phase feedback is contaminated and never enters it).
@@ -321,8 +387,7 @@ class EOMUAllocator(SpatiotemporalAllocator):
         self._last_acc: Optional[float] = None
 
     def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
-        self.detector.check(feedback.acc_label, feedback.acc_valid,
-                            feedback.t)
+        self._drift(feedback)  # logged, unused (EOMU triggers on drops)
         trigger = (self._last_acc is None
                    or feedback.acc_label < self._last_acc - self.drop_eps)
         self._last_acc = feedback.acc_label
@@ -340,8 +405,15 @@ class FleetAllocator(AllocationPolicy):
 
     Each stream lane keeps an ordinary :class:`AllocationPolicy` (its own
     drift detector, its own online row state), so DC-ST / DC-ST-Online /
-    Ekya / EOMU compose unchanged; the fleet layer only *re-proportions*
-    the temporal budgets the lane policies emit. The fleet-wide budget per
+    Ekya / EOMU compose unchanged; the fleet layer *re-proportions* the
+    temporal budgets the lane policies emit, and resolves their spatial
+    requests into ONE fleet :class:`~repro.core.decision.SpatialPlan` via
+    the pluggable ``row_policy``
+    (:class:`~repro.core.decision.FleetRowPolicy`: ``resolve-max`` — the
+    bit-identical default — / ``drift-surge`` / ``weighted-vote``), emitted
+    together as a per-phase :class:`~repro.core.decision.FleetDecision`
+    (``initial_fleet_decision`` / ``next_fleet_decision``). The fleet-wide
+    budget per
     phase is ``budget_streams`` sessions' worth of T-SA work (default 1.0:
     an N-stream fleet spends the same per-phase T-SA time a single session
     would, keeping the phase cadence — and thus each stream's update
@@ -394,7 +466,8 @@ class FleetAllocator(AllocationPolicy):
                  gap_eps: float = 0.02,
                  gap_ema: float = 0.5,
                  scale_epochs: bool = False,
-                 bucket: int = 8):
+                 bucket: int = 8,
+                 row_policy="resolve-max"):
         super().__init__(hp, precision)
         if mode not in FLEET_MODES:
             raise ValueError(
@@ -403,7 +476,10 @@ class FleetAllocator(AllocationPolicy):
             raise ValueError("FleetAllocator cannot wrap itself")
         self._policy_spec = policy
         self.mode = mode
+        self.row_policy = make_fleet_row_policy(row_policy)
         self.name = f"fleet-{mode}"
+        if self.row_policy.name != "resolve-max":
+            self.name = f"fleet-{mode}+{self.row_policy.name}"
         self.budget_streams = budget_streams
         self.label_floor = label_floor
         self.drift_bias = drift_bias
@@ -418,6 +494,7 @@ class FleetAllocator(AllocationPolicy):
         self._gaps: List[float] = []  # per-stream drift-gap EMA
         self._acc_ema: List[Optional[float]] = []  # fresh-label acc EMA
         self._acc_best: List[float] = []  # healthy-acc high-water mark
+        self._last_weights: Optional[List[float]] = None  # last split shares
 
     # -------------------------------------------------------------- binding
     def bind(self, estimator, student_cfg: VisionConfig) -> "FleetAllocator":
@@ -449,6 +526,8 @@ class FleetAllocator(AllocationPolicy):
         self._gaps = [0.0] * n
         self._acc_ema = [None] * n
         self._acc_best = [0.0] * n
+        self._last_weights = None
+        self.row_policy.reset(n)
         return self.policies
 
     # ------------------------------------------------------------ decisions
@@ -466,7 +545,8 @@ class FleetAllocator(AllocationPolicy):
     def initial_decisions(self, n: int) -> List[AllocationDecision]:
         self.lanes(n)  # fresh per-lane policies/state every run
         base = [p.initial_decision() for p in self.policies]
-        return self._split(base, self._weights(base, None))
+        self._last_weights = self._weights(base, None)
+        return self._split(base, self._last_weights)
 
     def next_decisions(self, feedbacks: Sequence[PhaseFeedback]
                        ) -> List[AllocationDecision]:
@@ -475,7 +555,56 @@ class FleetAllocator(AllocationPolicy):
                 f"{len(feedbacks)} feedbacks for {len(self.policies)} lanes")
         base = [p.next_decision(fb)
                 for p, fb in zip(self.policies, feedbacks)]
-        return self._split(base, self._weights(base, feedbacks))
+        self._last_weights = self._weights(base, feedbacks)
+        return self._split(base, self._last_weights)
+
+    # ------------------------------------------------------ fleet decisions
+    def initial_fleet_decision(self, n: int) -> FleetDecision:
+        """The fleet phase as a first-class decision: N per-lane temporal
+        planes + ONE fleet spatial plane from the bound row policy."""
+        return self._fleet_decision(self.initial_decisions(n), None)
+
+    def next_fleet_decision(self, feedbacks: Sequence[PhaseFeedback]
+                            ) -> FleetDecision:
+        return self._fleet_decision(self.next_decisions(feedbacks),
+                                    feedbacks)
+
+    def _fleet_decision(self, lane_decisions: Sequence[AllocationDecision],
+                        feedbacks: Optional[Sequence[PhaseFeedback]]
+                        ) -> FleetDecision:
+        if self._estimator is None:
+            raise RuntimeError(
+                "FleetAllocator must be bound (estimator + student config) "
+                "before emitting FleetDecisions")
+        n = len(lane_decisions)
+        total = self._estimator.total_rows
+        planes = [d.split() for d in lane_decisions]
+        spatials = [p.spatial.resolve(self._rows[0], self._rows[1], total)
+                    for p in planes]
+        # The fleet executes ONE spatial plane, so one PrecisionPolicy:
+        # lane precisions are forced to the fleet's at bind/lanes() time —
+        # refuse loudly if a custom lane policy diverged anyway, rather
+        # than silently charging every lane at lane 0's precisions.
+        first = spatials[0].precisions
+        if any(s.precisions != first for s in spatials[1:]):
+            raise ValueError(
+                "heterogeneous per-lane precisions are not supported at "
+                "the fleet level: the FleetDecision carries ONE fleet "
+                "SpatialPlan (and ledger) for the whole array")
+        # Engine-side drift truth when the feedback carries it; a lane
+        # policy's reset flag is the pre-`drifted` fallback (identical for
+        # DC-ST-family lanes, where reset fires exactly on drift).
+        drifted = tuple(
+            (fb.drifted if fb is not None and fb.drifted is not None
+             else d.reset_buffer)
+            for fb, d in zip(feedbacks or [None] * n, lane_decisions))
+        weights = tuple(self._last_weights or [1.0 / n] * n)
+        ctx = FleetRowContext(drifted=drifted, weights=weights,
+                              total_rows=total)
+        return FleetDecision(
+            spatial=self.row_policy.fleet_spatial(spatials, ctx),
+            temporal=tuple(p.temporal for p in planes),
+            lane_decisions=tuple(lane_decisions))
 
     # -------------------------------------------------------------- weights
     def _weights(self, base: Sequence[AllocationDecision],
@@ -507,7 +636,11 @@ class FleetAllocator(AllocationPolicy):
                                         self._acc_ema[i])
                 deficit = max(0.0, self._acc_best[i] - fb.acc_label)
                 w = self.gap_eps + self._gaps[i] + deficit
-                if d.reset_buffer:
+                # Engine-set drift truth (feedback.drifted); the lane's
+                # reset flag is the legacy fallback — identical for the
+                # DC-ST family, where resets fire exactly on drift.
+                if (fb.drifted if fb.drifted is not None
+                        else d.reset_buffer):
                     w *= self.drift_bias
                 raw.append(w)
             total = sum(raw)

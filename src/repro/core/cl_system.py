@@ -4,9 +4,13 @@ The monolithic ``ContinuousLearningSystem`` was decomposed into three layers
 (see ROADMAP.md "Architecture"):
 
 * kernels (core/kernel.py)      — inference / labeling / retraining, each
-  owning its jitted apply, MX precision and virtual-clock cost;
+  owning its jitted apply, MX precision and virtual-clock cost, reading
+  rows/precisions off the decision's spatial plane;
+* decisions (core/decision.py)  — the two-plane surface: ``SpatialPlan`` ×
+  ``TemporalPlan`` combined by the frozen ``Decision`` engines consume
+  (``AllocationDecision`` is the flat facade over it);
 * policies (core/allocation.py) — Algorithm 1 and the §III baselines as
-  ``AllocationDecision`` emitters;
+  decision emitters;
 * engine (core/session.py)      — ``CLSession`` executes decisions
   phase-by-phase; ``CLSystemSpec`` is the declarative builder.
 

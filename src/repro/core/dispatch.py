@@ -125,6 +125,10 @@ class PhasePlan:
         # Bound data plane(s): one FramePipeline per stream lane. A single
         # pipeline (the CLSession case) is lane 0 of a one-lane plan.
         self.pipelines: Tuple = _as_pipelines(pipeline)
+        # The two-plane Decision(s) this phase executes (one per lane),
+        # when the session hands them to begin_phase — the plan's view of
+        # the phase's intent (label hints derive from the temporal plane).
+        self.decisions: Tuple = ()
         self.programs: List[DeviceProgram] = []
         self.totals: Dict[str, float] = {role: 0.0 for role in ROLES}
         # Per-lane ledgers: plain sums from 0.0 (the same addends that feed
@@ -270,25 +274,38 @@ class KernelDispatcher:
         return self.mode == CONCURRENT
 
     def begin_phase(self, start: float, pipeline=None,
-                    label_hints: Optional[Sequence] = None) -> PhasePlan:
+                    label_hints: Optional[Sequence] = None,
+                    decisions: Optional[Sequence] = None,
+                    fps: Optional[float] = None) -> PhasePlan:
         """Open a phase plan. With a ``pipeline``
         (:class:`~repro.data.pipeline.FramePipeline`, or a sequence of them
         — one lane per fleet stream), the plan becomes the phase's
         data-plane handle too: opening the plan rotates each pipeline's
         speculation onto this phase start, and ``plan.fetch(lane=i)`` serves
         the phase's frame windows from that lane's speculative prefetcher.
-        ``label_hints`` (one ``(n_samples, fps)`` per lane, or None entries)
-        is the decision-aware speculation signal: the session knows each
-        lane's next labeling budget at the barrier and hands it to the
-        pipeline so drift-phase bursts are pre-sized instead of replayed
-        from the last layout."""
+
+        ``decisions`` (one two-plane
+        :class:`~repro.core.decision.Decision` per lane) is how the plan
+        consumes the phase's intent: with a stream ``fps``, each lane's
+        label hint — the decision-aware speculation signal — derives from
+        its temporal plane's labeling budget, so drift-phase bursts are
+        pre-sized instead of replayed from the last layout (``fps=None``
+        records the decisions without hinting). ``label_hints`` (one
+        ``(n_samples, fps)`` per lane, or None entries) is the pre-plane
+        spelling of the same signal, kept for direct callers."""
         pipelines = _as_pipelines(pipeline)
+        if label_hints is None and decisions is not None:
+            label_hints = [
+                (None if d is None or fps is None
+                 else (d.temporal.total_label_samples, fps))
+                for d in decisions]
         for i, pipe in enumerate(pipelines):
             hint = (label_hints[i]
                     if label_hints is not None and i < len(label_hints)
                     else None)
             pipe.begin_phase(start, label_hint=hint)
         plan = _TrackedPlan(self, self.mode, start, pipelines)
+        plan.decisions = tuple(decisions) if decisions is not None else ()
         self.phases_dispatched += 1
         return plan
 

@@ -28,9 +28,17 @@ Architecture (see ROADMAP.md):
   (:meth:`~repro.core.kernel.LabelingKernel.label_fleet_async` via
   ``plan.dispatch_multi``): one microbatched device program labels the whole
   fleet's burst, and per-lane label handles split back out device-side;
-* a :class:`~repro.core.allocation.FleetAllocator` proportions the fleet's
-  temporal budget across streams every phase (uniform / round-robin /
-  drift-weighted / isolated), while each lane keeps an ordinary per-stream
+* each phase executes ONE :class:`~repro.core.decision.FleetDecision`: a
+  :class:`~repro.core.allocation.FleetAllocator` proportions the fleet's
+  temporal budget across streams (uniform / round-robin / drift-weighted /
+  isolated) into N per-lane :class:`~repro.core.decision.TemporalPlan`s,
+  while a pluggable :class:`~repro.core.decision.FleetRowPolicy` resolves
+  the N per-lane spatial requests into the ONE fleet-wide
+  :class:`~repro.core.decision.SpatialPlan` the engine executes
+  (``resolve-max`` reproduces the pre-plane max/min resolution
+  bit-for-bit; ``drift-surge`` grows the fleet T-SA under multi-lane drift
+  with hysteresis; ``weighted-vote`` follows the drift-weighted temporal
+  shares). Each lane still keeps an ordinary per-stream
   :class:`~repro.core.allocation.AllocationPolicy` underneath.
 
 Degeneracy contract: a **1-stream fleet is bit-identical to**
@@ -56,6 +64,7 @@ from repro.core.allocation import (
     FleetAllocator,
     PhaseFeedback,
 )
+from repro.core.decision import FleetDecision
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.session import (
     CLResult,
@@ -130,25 +139,19 @@ class FleetSession(CLSession):
                  allocator="dacapo-spatiotemporal",
                  fleet_mode: str = "drift-weighted",
                  fleet_budget_streams: float = 1.0,
+                 fleet_row_policy="resolve-max",
                  fleet_kwargs: Optional[dict] = None, **kwargs):
         hp = hp or CLHyperParams()
         if not isinstance(allocator, FleetAllocator):
             allocator = FleetAllocator(
                 hp, policy=allocator, mode=fleet_mode,
-                budget_streams=fleet_budget_streams, **(fleet_kwargs or {}))
+                budget_streams=fleet_budget_streams,
+                row_policy=fleet_row_policy, **(fleet_kwargs or {}))
         super().__init__(student_cfg, teacher_cfg, hp=hp,
                          estimator=estimator, allocator=allocator, **kwargs)
         self.fleet_allocator: FleetAllocator = self.allocator
 
     # ------------------------------------------------------------ fleet run
-    def _fleet_rows(self, decisions: Sequence[AllocationDecision]
-                    ) -> Tuple[int, int]:
-        """The fleet-wide spatial split this phase: the array is one — the
-        most T-SA-hungry lane decision wins (for one lane this is exactly
-        the lane's own effective rows)."""
-        effs = [self._effective_rows(d) for d in decisions]
-        return max(e[0] for e in effs), min(e[1] for e in effs)
-
     def run(self, streams: Union[DriftStream, FramePipeline,
                                  Sequence[Union[DriftStream, FramePipeline]]],
             duration: Optional[float] = None,
@@ -181,7 +184,11 @@ class FleetSession(CLSession):
         n = len(pipes)
         duration = duration or min(p.duration for p in pipes)
         observers = self._observers + list(observers)
-        decisions = self.fleet_allocator.initial_decisions(n)
+        # One FleetDecision per phase: N per-lane temporal planes + ONE
+        # fleet spatial plane (rows already resolved by the row policy).
+        fleet_dec: FleetDecision = \
+            self.fleet_allocator.initial_fleet_decision(n)
+        decisions = list(fleet_dec.lane_decisions)
 
         lanes = [
             _StreamLane(
@@ -195,16 +202,16 @@ class FleetSession(CLSession):
                 opt=None, serving=None, decision=decisions[i])
             for i, pipe in enumerate(pipes)
         ]
-        r_tsa, r_bsa = self._fleet_rows(decisions)
+        spatial = fleet_dec.spatial
+        r_tsa, r_bsa = spatial.rows_tsa, spatial.rows_bsa
         for lane in lanes:
             lane.opt = self.retrain.init_state(lane.params)
-            prec = lane.decision.precisions
             # The B-SA serves all N streams: per-stream sustainable frame
             # fraction divides its throughput by the fleet's aggregate fps.
-            lane.keep_frac = self.inference.keep_frac(
-                r_bsa, prec.inference, hp.fps * n)
-            lane.serving = self.inference.serving_params(lane.params,
-                                                         prec.inference)
+            lane.keep_frac = self.inference.plan_keep_frac(spatial,
+                                                           hp.fps * n)
+            lane.serving = self.inference.serving_params(
+                lane.params, spatial.precisions.inference)
         clock = 0.0
         fleet_phase_log: List[dict] = []
 
@@ -222,8 +229,7 @@ class FleetSession(CLSession):
                                   max_frames=n_eval, lane=lane.index)
                 plan.charge(
                     "b_sa",
-                    len(x) * self.inference.time_per_sample(
-                        r_bsa, lane.decision.precisions.inference),
+                    len(x) * self.inference.plan_time_per_sample(spatial),
                     lane=lane.index)
             else:
                 x, y = lane.pipe.frames(lane.eval_cursor, t_end,
@@ -233,53 +239,54 @@ class FleetSession(CLSession):
 
         while clock < duration:
             phase_start = clock
-            r_tsa, r_bsa = self._fleet_rows(decisions)
-            self._repartition(r_bsa)
+            spatial = fleet_dec.spatial
+            temporal = fleet_dec.temporal
+            r_tsa, r_bsa = spatial.rows_tsa, spatial.rows_bsa
+            if spatial.refission:  # the fleet plane's re-fission intent
+                self._repartition(r_bsa)
             for lane in lanes:
                 lane.decision = decisions[lane.index]
-                lane.keep_frac = self.inference.keep_frac(
-                    r_bsa, lane.decision.precisions.inference, hp.fps * n)
-            # ---- Plan: one shared ledger for the fleet phase; rotates
-            # every lane's speculation, pre-sized with its known budget. ----
-            hints = [((d.total_label_samples, hp.fps)
-                      if self.decision_aware_spec else None)
-                     for d in decisions]
-            plan = self.dispatcher.begin_phase(clock, pipes,
-                                               label_hints=hints)
+                lane.keep_frac = self.inference.plan_keep_frac(
+                    spatial, hp.fps * n)
+            # ---- Plan: one shared ledger for the fleet phase; the plan
+            # consumes the fleet decision's per-lane views — rotating every
+            # lane's speculation, pre-sized with its temporal budget. ----
+            plan = self.dispatcher.begin_phase(
+                clock, pipes, decisions=fleet_dec.per_lane(),
+                fps=hp.fps if self.decision_aware_spec else None)
             for lane in lanes:
                 lane.spec_seen = (lane.pipe.hits, lane.pipe.misses)
                 lane.valid_h = lane.yv = None
                 lane.acc_v = 1.0
-                if lane.decision.profile_cost_s:
-                    plan.charge("t_sa", lane.decision.profile_cost_s,
+                if temporal[lane.index].profile_cost_s:
+                    plan.charge("t_sa", temporal[lane.index].profile_cost_s,
                                 lane=lane.index)
             # -------- Retraining (Alg. 1 lines 4-7), lane by lane on the
             # shared T-SA chain --------
             for lane in lanes:
-                d = lane.decision
+                t_lane = temporal[lane.index]
                 if (len(lane.buffer) >= hp.sgd_batch
-                        and d.retrain_samples > 0):
-                    xt, yt, xv, yv = lane.buffer.get_data(d.retrain_samples,
-                                                          d.valid_samples)
+                        and t_lane.retrain_samples > 0):
+                    xt, yt, xv, yv = lane.buffer.get_data(
+                        t_lane.retrain_samples, t_lane.valid_samples)
                     lane.params, lane.opt, n_batches = self.retrain.fit(
                         lane.params, lane.opt, xt, yt, lane.rng,
-                        epochs=d.retrain_epochs)
-                    t_phase = n_batches * self.retrain.time_per_batch(
-                        r_tsa, d.precisions.retraining)
+                        epochs=t_lane.retrain_epochs)
+                    t_phase = n_batches * self.retrain.plan_time_per_batch(
+                        spatial)
                     plan.charge("t_sa", t_phase, lane=lane.index)
                     lane.retrain_time += t_phase
                     lane.serving = self.inference.serving_params(
-                        lane.params, d.precisions.inference)
+                        lane.params, spatial.precisions.inference)
                     lane.yv = yv
-                    v_role, v_rows = (("b_sa", r_bsa)
-                                      if self.dispatcher.concurrent
-                                      else ("t_sa", r_tsa))
+                    v_role = ("b_sa" if self.dispatcher.concurrent
+                              else "t_sa")
                     lane.valid_h = plan.dispatch(
                         v_role, "valid",
                         lambda s=lane.serving, v=xv:
                         self.inference.predict_async(s, v),
-                        cost_s=len(xv) * self.inference.time_per_sample(
-                            v_rows, d.precisions.inference),
+                        cost_s=len(xv) * self.inference.plan_time_per_sample(
+                            spatial, role=v_role),
                         lane=lane.index)
             for lane in lanes:
                 score_lane_until(lane, min(plan.now(), duration),
@@ -291,59 +298,55 @@ class FleetSession(CLSession):
             # -------- Labeling (lines 8-10): bursts fetched per lane, then
             # batched across the fleet on the shared T-SA --------
             for lane in lanes:
-                if lane.decision.reset_buffer:
+                if temporal[lane.index].reset_buffer:
                     lane.buffer.reset()  # line 12
                     lane.drift_events += 1
             t_lab0 = plan.now()
             for lane in lanes:
-                n_label = lane.decision.total_label_samples
+                n_label = temporal[lane.index].total_label_samples
                 lane.x_l, _ = plan.fetch(t_lab0, t_lab0 + n_label / hp.fps,
                                          max_frames=n_label,
                                          lane=lane.index, tag="label")
-            # Group lanes by labeling precision: each group is ONE batched
-            # device program (cross-stream microbatches) on the T-SA.
-            groups: dict = {}
-            for lane in lanes:
-                groups.setdefault(lane.decision.precisions.labeling,
-                                  []).append(lane)
-            for prec_label, group in groups.items():
-                costs = [
-                    lane.decision.total_label_samples
-                    * self.labeling.time_per_sample(r_tsa, prec_label)
-                    for lane in group]
-                t_run = plan.now()
-                handles = plan.dispatch_multi(
-                    "t_sa", "label",
-                    lambda g=group, p=prec_label:
-                    self.labeling.label_fleet_async(
-                        self.teacher_params, [ln.x_l for ln in g], p,
-                        microbatch=self._label_microbatch),
-                    costs=costs, lanes=[lane.index for lane in group])
-                for lane, handle, cost in zip(group, handles, costs):
-                    # Replay the plan's serial accumulation so each lane's
-                    # label_time reproduces the single-stream float pattern
-                    # ((t + c) - t), which the degeneracy golden pins.
-                    t_next = t_run + cost
-                    lane.label_time += t_next - t_run
-                    t_run = t_next
-                    lane.label_h = handle
+            # ONE batched device program labels the whole fleet's burst at
+            # the fleet spatial plane's labeling precision (cross-stream
+            # microbatches on the shared T-SA).
+            costs = [
+                temporal[lane.index].total_label_samples
+                * self.labeling.plan_time_per_sample(spatial)
+                for lane in lanes]
+            t_run = plan.now()
+            handles = plan.dispatch_multi(
+                "t_sa", "label",
+                lambda: self.labeling.label_fleet_async(
+                    self.teacher_params, [ln.x_l for ln in lanes],
+                    spatial.precisions.labeling,
+                    microbatch=self._label_microbatch),
+                costs=costs, lanes=[lane.index for lane in lanes])
+            for lane, handle, cost in zip(lanes, handles, costs):
+                # Replay the plan's serial accumulation so each lane's
+                # label_time reproduces the single-stream float pattern
+                # ((t + c) - t), which the degeneracy golden pins.
+                t_next = t_run + cost
+                lane.label_time += t_next - t_run
+                t_run = t_next
+                lane.label_h = handle
             for lane in lanes:
                 lane.pred_l_h = plan.dispatch(
                     "b_sa", "acc_label",
                     lambda s=lane.serving, x=lane.x_l:
                     self.inference.predict_async(s, x),
-                    cost_s=len(lane.x_l) * self.inference.time_per_sample(
-                        r_bsa, lane.decision.precisions.inference),
+                    cost_s=len(lane.x_l)
+                    * self.inference.plan_time_per_sample(spatial),
                     lane=lane.index)
             for lane in lanes:
                 score_lane_until(lane, min(plan.now(), duration),
                                  lane.serving, plan)
 
-            # Fixed-window pacing, per lane decision (the pacing floor is
-            # the max boundary any paced lane declares).
+            # Fixed-window pacing, per lane temporal plane (the pacing
+            # floor is the max boundary any paced lane declares).
             for lane in lanes:
-                if lane.decision.pace_window_s:
-                    w = lane.decision.pace_window_s
+                if temporal[lane.index].pace_window_s:
+                    w = temporal[lane.index].pace_window_s
                     next_boundary = (int(phase_start / w) + 1) * w
                     if plan.now() < next_boundary:
                         score_lane_until(lane, min(next_boundary, duration),
@@ -365,16 +368,25 @@ class FleetSession(CLSession):
                 lane.sink.flush()
 
             # -------- Next decisions (lines 11-13), fleet-proportioned ----
+            # Per-lane engine-side drift verdicts: computed once here (by
+            # each lane policy's detector) and handed down on the feedback
+            # — the deduped source the lane policies, the drift-weighted
+            # split AND the fleet row policy all read.
             feedbacks = [
                 PhaseFeedback(acc_valid=lane.acc_v, acc_label=lane.acc_l,
                               t=clock, phase_start=phase_start,
                               retrain_time=lane.retrain_time,
-                              label_time=lane.label_time)
+                              label_time=lane.label_time,
+                              drifted=self.fleet_allocator.policies[
+                                  lane.index].observe_drift(
+                                      lane.acc_l, lane.acc_v, clock))
                 for lane in lanes]
-            next_decisions = self.fleet_allocator.next_decisions(feedbacks)
+            next_fleet = self.fleet_allocator.next_fleet_decision(feedbacks)
+            next_decisions = list(next_fleet.lane_decisions)
             fleet_phase_log.append({
                 "t": clock, "phase_start": phase_start,
                 "t_tsa": plan.t_tsa, "t_bsa": plan.t_bsa,
+                "rows_tsa": r_tsa, "rows_bsa": r_bsa,
                 "per_stream_t_tsa": [plan.lane_time("t_sa", lane.index)
                                      for lane in lanes],
                 "per_stream_t_bsa": [plan.lane_time("b_sa", lane.index)
@@ -398,6 +410,7 @@ class FleetSession(CLSession):
                 lane.records.append(record)
                 for obs in observers:
                     obs(record)
+            fleet_dec = next_fleet
             decisions = next_decisions
 
         results = []
@@ -432,16 +445,19 @@ class FleetSpec(CLSystemSpec):
     knobs are mirrored automatically via ``_session_kwargs``) plus the
     fleet surface: the per-stream ``allocator`` is wrapped in a
     :class:`FleetAllocator` with ``fleet_mode`` / ``budget_streams`` /
-    ``fleet_kwargs``."""
+    ``row_policy`` (the :class:`~repro.core.decision.FleetRowPolicy`
+    resolving the fleet's per-phase spatial plane) / ``fleet_kwargs``."""
 
     fleet_mode: str = "drift-weighted"
     budget_streams: float = 1.0
+    row_policy: object = "resolve-max"  # name, class, or ready instance
     fleet_kwargs: Optional[dict] = None
 
     def build(self) -> FleetSession:
         return FleetSession(
             fleet_mode=self.fleet_mode,
             fleet_budget_streams=self.budget_streams,
+            fleet_row_policy=self.row_policy,
             fleet_kwargs=self.fleet_kwargs,
             **self._session_kwargs(),
         )

@@ -52,14 +52,40 @@ class Kernel(Protocol):
 
 class _PlacedKernel:
     """Shared placement logic: hold this kernel's sub-mesh and stage inputs
-    onto its first device when a real (non-time-shared) partition is bound."""
+    onto its first device when a real (non-time-shared) partition is bound.
+
+    Kernels also know how to read a resolved
+    :class:`~repro.core.decision.SpatialPlan`: each kernel picks its own
+    rows (by ``role``) and precision (by ``precision_field``) off the
+    plane, so the engine never unpacks rows/precisions itself — the
+    ``plan_*`` entry points below are the spatial-plane view of the classic
+    ``time_per_sample``-style cost methods.
+    """
 
     role = "t_sa"
+    precision_field = "retraining"  # which PrecisionPolicy field this reads
 
     def __init__(self):
         self.submesh = None
         self._device = None
         self.n_apply_calls = 0  # jitted-dispatch counter (bench/tests)
+
+    # --------------------------------------------------- spatial-plane view
+    def plan_rows(self, spatial, role: Optional[str] = None) -> int:
+        """This kernel's row count on a resolved spatial plane. ``role``
+        overrides the kernel's home sub-accelerator (sequential dispatch
+        charges validation inference on the T-SA chain)."""
+        role = role or self.role
+        return spatial.rows_bsa if role == "b_sa" else spatial.rows_tsa
+
+    def plan_precision(self, spatial) -> str:
+        return getattr(spatial.precisions, self.precision_field)
+
+    def plan_time_per_sample(self, spatial,
+                             role: Optional[str] = None) -> float:
+        """Virtual-clock seconds per sample at the plane's rows/precision."""
+        return self.time_per_sample(self.plan_rows(spatial, role),
+                                    self.plan_precision(spatial))
 
     def bind_partition(self, partition: SpatialPartition) -> None:
         if partition.time_shared:
@@ -82,6 +108,7 @@ class InferenceKernel(_PlacedKernel):
 
     name = "inference"
     role = "b_sa"
+    precision_field = "inference"
 
     def __init__(self, model, full_cfg: VisionConfig, estimator,
                  apply_mx: bool):
@@ -141,12 +168,19 @@ class InferenceKernel(_PlacedKernel):
         """Fraction of stream frames the B-SA sustains (paper Fig. 2)."""
         return min(1.0, self.fps(rows, precision) / target_fps)
 
+    def plan_keep_frac(self, spatial, target_fps: float) -> float:
+        """Sustainable frame fraction at the spatial plane's B-SA rows and
+        serving precision."""
+        return self.keep_frac(spatial.rows_bsa, spatial.precisions.inference,
+                              target_fps)
+
 
 class LabelingKernel(_PlacedKernel):
     """Teacher pseudo-labeling on the T-SA (time-shared with retraining)."""
 
     name = "labeling"
     role = "t_sa"
+    precision_field = "labeling"
 
     def __init__(self, model, full_cfg: VisionConfig, estimator,
                  apply_mx: bool):
@@ -216,6 +250,7 @@ class RetrainKernel(_PlacedKernel):
 
     name = "retraining"
     role = "t_sa"
+    precision_field = "retraining"
 
     def __init__(self, model, full_cfg: VisionConfig, estimator, hp):
         super().__init__()
@@ -265,6 +300,11 @@ class RetrainKernel(_PlacedKernel):
     def time_per_batch(self, rows: int, precision: str) -> float:
         return self.estimator.train_step_time(self.full_cfg, rows, precision,
                                               self.hp.sgd_batch)
+
+    def plan_time_per_batch(self, spatial) -> float:
+        """SGD-batch cost at the plane's T-SA rows/retraining precision."""
+        return self.time_per_batch(spatial.rows_tsa,
+                                   spatial.precisions.retraining)
 
     def time_per_sample(self, rows: int, precision: str) -> float:
         return self.time_per_batch(rows, precision) / self.hp.sgd_batch

@@ -1,13 +1,24 @@
 """Deprecated shim — the scheduler API moved to ``repro.core.allocation``.
 
 ``PhasePlan`` grew into ``AllocationDecision`` (same leading fields plus
-spatial rows, per-kernel precision and window pacing), and the scheduler
-classes became ``AllocationPolicy`` implementations whose decisions the
-``CLSession`` engine executes. The legacy names below keep old imports and
-positional constructions working; new code should import from
-``repro.core.allocation``.
+spatial rows, per-kernel precision and window pacing), which is itself now
+a facade over the two-plane decision API (``SpatialPlan`` /
+``TemporalPlan`` / ``Decision`` in ``repro.core.decision``), and the
+scheduler classes became ``AllocationPolicy`` implementations whose
+decisions the ``CLSession`` engine executes. The legacy names below keep
+old imports and positional constructions working; importing this module
+emits a ``DeprecationWarning`` — new code should import from
+``repro.core.allocation`` (or ``repro.core.decision`` for the planes).
 """
-from repro.core.allocation import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.scheduler is deprecated: import AllocationPolicy/"
+    "AllocationDecision from repro.core.allocation (or the two-plane "
+    "SpatialPlan/TemporalPlan/Decision API from repro.core.decision)",
+    DeprecationWarning, stacklevel=2)
+
+from repro.core.allocation import (  # noqa: F401,E402
     ALLOCATORS as SCHEDULERS,
     AllocationDecision as PhasePlan,
     CLHyperParams,

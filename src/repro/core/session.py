@@ -10,15 +10,19 @@ does, with JAX/CPU in the GPU role.
 
 Layering (see ROADMAP.md "Architecture"):
 
-    CLSystemSpec ──build()──▶ CLSession ──executes──▶ AllocationDecision
-                               │    ▲                        │
+    CLSystemSpec ──build()──▶ CLSession ──executes──▶ Decision
+                               │    ▲          (SpatialPlan × TemporalPlan)
                      kernels ◀─┘    └── PhaseFeedback ◀── AllocationPolicy
              (core/kernel.py)                        (core/allocation.py)
 
-The engine is policy-free: it executes whatever ``AllocationDecision`` the
-bound :class:`~repro.core.allocation.AllocationPolicy` emits — temporal
-sample budgets, T-SA/B-SA row split, per-kernel MX precision, and optional
-fixed-window pacing — and reports ``PhaseFeedback`` back. When constructed
+The engine is policy-free: it consumes the two-plane
+:class:`~repro.core.decision.Decision` the bound
+:class:`~repro.core.allocation.AllocationPolicy` emits (flat legacy
+``AllocationDecision``s are lifted via their ``.split()`` facade) — the
+spatial plane carries the T-SA/B-SA row split, per-kernel MX precisions and
+mesh re-fission intent; the temporal plane carries sample budgets, pacing,
+retraining depth and profiling cost — and reports ``PhaseFeedback`` (with
+the engine-side ``drifted`` verdict) back. When constructed
 with a multi-device ``mesh``, the engine calls
 :func:`~repro.core.partition.partition_mesh` to fission the mesh into T-SA /
 B-SA sub-meshes and binds each kernel to its sub-accelerator (re-partitioning
@@ -65,6 +69,7 @@ from repro.core.allocation import (
     PhaseFeedback,
     make_allocator,
 )
+from repro.core.decision import SpatialPlan, as_decision
 from repro.core.dispatch import KernelDispatcher, PhasePlan
 from repro.core.estimator import DaCapoEstimator
 from repro.core.kernel import InferenceKernel, LabelingKernel, RetrainKernel
@@ -310,14 +315,17 @@ class CLSession:
         self._opt = self.retrain.init_state(self.student_params)
 
     # ------------------------------------------------------------ main loop
-    def _effective_rows(self, decision: AllocationDecision
-                        ) -> Tuple[int, int]:
-        """Decision rows, falling back to the offline split; a 0-row side
-        time-shares the whole array (the paper's R=0 fallback)."""
-        total = self.estimator.total_rows
-        r_tsa = decision.rows_tsa if decision.rows_tsa is not None else self.r_tsa
-        r_bsa = decision.rows_bsa if decision.rows_bsa is not None else self.r_bsa
-        return (r_tsa or total), (r_bsa or total)
+    def _resolve_spatial(self, decision) -> SpatialPlan:
+        """The decision's spatial plane with concrete rows: ``None`` rows
+        fall back to the offline split, a 0-row side time-shares the whole
+        array (the paper's R=0 fallback)."""
+        return as_decision(decision).spatial.resolve(
+            self.r_tsa, self.r_bsa, self.estimator.total_rows)
+
+    def _effective_rows(self, decision) -> Tuple[int, int]:
+        """Legacy view of :meth:`_resolve_spatial`: the concrete row pair."""
+        spatial = self._resolve_spatial(decision)
+        return spatial.rows_tsa, spatial.rows_bsa
 
     def run(self, stream: Union[DriftStream, FramePipeline],
             duration: Optional[float] = None,
@@ -342,13 +350,15 @@ class CLSession:
         duration = duration or pipe.duration
         buffer = SampleBuffer(hp.c_b, seed=3)
         observers = self._observers + list(observers)
-        decision = self.allocator.initial_decision()
+        # The policy's raw output (legacy facade or two-plane Decision) is
+        # what records carry; the engine consumes the two-plane view.
+        raw = self.allocator.initial_decision()
+        dec = as_decision(raw)
 
-        r_tsa, r_bsa = self._effective_rows(decision)
-        keep_frac = self.inference.keep_frac(
-            r_bsa, decision.precisions.inference, hp.fps)
+        spatial = self._resolve_spatial(dec)
+        keep_frac = self.inference.plan_keep_frac(spatial, hp.fps)
         serving = self.inference.serving_params(
-            self.student_params, decision.precisions.inference)
+            self.student_params, spatial.precisions.inference)
         clock = 0.0
         eval_cursor = 0.0
         sink = _ScoreSink(self.inference,
@@ -371,44 +381,45 @@ class CLSession:
                     if plan is not None
                     else pipe.frames(eval_cursor, t_end, max_frames=n_eval))
             if plan is not None:
-                plan.charge("b_sa", len(x) * self.inference.time_per_sample(
-                    r_bsa, decision.precisions.inference))
+                plan.charge("b_sa", len(x)
+                            * self.inference.plan_time_per_sample(spatial))
             sink.add(t_end, x, y, keep_frac, serving_params)
             eval_cursor = t_end
 
         while clock < duration:
             phase_start = clock
-            prec = decision.precisions
-            r_tsa, r_bsa = self._effective_rows(decision)
-            self._repartition(r_bsa)
-            keep_frac = self.inference.keep_frac(r_bsa, prec.inference,
-                                                 hp.fps)
-            # ---- Plan: open the phase ledger on the dispatcher; this also
-            # rotates the pipeline's speculation onto this phase start,
-            # pre-sized with this decision's labeling budget (the
-            # decision-aware predictor — the budget is known at the
-            # barrier, so drift-phase N_ldd bursts prefetch whole). ----
-            hint = ((decision.total_label_samples, hp.fps)
-                    if self.decision_aware_spec else None)
-            plan = self.dispatcher.begin_phase(clock, pipe,
-                                               label_hints=(hint,))
+            spatial = self._resolve_spatial(dec)
+            temporal = dec.temporal
+            prec = spatial.precisions
+            if spatial.refission:  # the plane's mesh re-fission intent
+                self._repartition(spatial.rows_bsa)
+            keep_frac = self.inference.plan_keep_frac(spatial, hp.fps)
+            # ---- Plan: open the phase ledger on the dispatcher; the plan
+            # consumes the Decision — rotating the pipeline's speculation
+            # onto this phase start, pre-sized with the temporal plane's
+            # labeling budget (the decision-aware predictor — the budget
+            # is known at the barrier, so drift-phase N_ldd bursts
+            # prefetch whole). ----
+            plan = self.dispatcher.begin_phase(
+                clock, pipe, decisions=(dec,),
+                fps=hp.fps if self.decision_aware_spec else None)
             spec_seen = (pipe.hits, pipe.misses)
             valid_h = xv = yv = None
             # Profiling overhead (e.g. Ekya's per-window microprofiling)
-            # rides on the decision and is charged to the T-SA ledger
+            # rides on the temporal plane and is charged to the T-SA ledger
             # before the window's own work — zero for idealized policies.
-            if decision.profile_cost_s:
-                plan.charge("t_sa", decision.profile_cost_s)
+            if temporal.profile_cost_s:
+                plan.charge("t_sa", temporal.profile_cost_s)
             # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
             acc_v = 1.0
-            if len(buffer) >= hp.sgd_batch and decision.retrain_samples > 0:
-                xt, yt, xv, yv = buffer.get_data(decision.retrain_samples,
-                                                 decision.valid_samples)
+            if len(buffer) >= hp.sgd_batch and temporal.retrain_samples > 0:
+                xt, yt, xv, yv = buffer.get_data(temporal.retrain_samples,
+                                                 temporal.valid_samples)
                 self.student_params, self._opt, n_batches = self.retrain.fit(
                     self.student_params, self._opt, xt, yt, self.rng,
-                    epochs=decision.retrain_epochs)
-                t_phase = n_batches * self.retrain.time_per_batch(
-                    r_tsa, prec.retraining)
+                    epochs=temporal.retrain_epochs)
+                t_phase = n_batches * self.retrain.plan_time_per_batch(
+                    spatial)
                 plan.charge("t_sa", t_phase)
                 retrain_time += t_phase
                 # UpdateWeight + Valid (lines 6-7) — dispatched async; the
@@ -419,22 +430,20 @@ class CLSession:
                 # so it overlaps the T-SA moving on to labeling.
                 serving = self.inference.serving_params(self.student_params,
                                                         prec.inference)
-                v_role, v_rows = (("b_sa", r_bsa)
-                                  if self.dispatcher.concurrent
-                                  else ("t_sa", r_tsa))
+                v_role = ("b_sa" if self.dispatcher.concurrent else "t_sa")
                 valid_h = plan.dispatch(
                     v_role, "valid",
                     lambda s=serving, v=xv: self.inference.predict_async(s, v),
-                    cost_s=len(xv) * self.inference.time_per_sample(
-                        v_rows, prec.inference))
+                    cost_s=len(xv) * self.inference.plan_time_per_sample(
+                        spatial, role=v_role))
             score_until(min(plan.now(), duration), serving, plan)
             if plan.now() >= duration:
                 clock = plan.finish()
                 break
 
             # ---------------- Labeling (lines 8-10) ------------------------
-            n_label = decision.total_label_samples
-            if decision.reset_buffer:
+            n_label = temporal.total_label_samples
+            if temporal.reset_buffer:
                 buffer.reset()  # line 12
                 drift_events += 1
             t_lab0 = plan.now()
@@ -445,20 +454,19 @@ class CLSession:
                 lambda: self.labeling.label_async(
                     self.teacher_params, x_l, prec.labeling,
                     microbatch=self._label_microbatch),
-                cost_s=n_label * self.labeling.time_per_sample(
-                    r_tsa, prec.labeling))
+                cost_s=n_label * self.labeling.plan_time_per_sample(spatial))
             label_time += plan.now() - t_lab0
             pred_l_h = plan.dispatch(
                 "b_sa", "acc_label",
                 lambda: self.inference.predict_async(serving, x_l),
-                cost_s=len(x_l) * self.inference.time_per_sample(
-                    r_bsa, prec.inference))
+                cost_s=len(x_l) * self.inference.plan_time_per_sample(
+                    spatial))
             score_until(min(plan.now(), duration), serving, plan)
 
-            # Fixed-window pacing, declared by the decision (no baseline-
-            # specific branch: any policy may put phases on a window grid).
-            if decision.pace_window_s:
-                w = decision.pace_window_s
+            # Fixed-window pacing, declared by the temporal plane (no
+            # baseline-specific branch: any policy may pace on a grid).
+            if temporal.pace_window_s:
+                w = temporal.pace_window_s
                 next_boundary = (int(phase_start / w) + 1) * w
                 if plan.now() < next_boundary:
                     score_until(min(next_boundary, duration), serving, plan)
@@ -480,23 +488,27 @@ class CLSession:
             sink.flush()  # issue fused scoring before serving params change
 
             # ---------------- Next decision (lines 11-13) ------------------
+            # The engine-side drift verdict: computed once here, handed to
+            # the policy on the feedback (the deduped source of truth).
+            drifted = self.allocator.observe_drift(acc_l, acc_v, clock)
             feedback = PhaseFeedback(
                 acc_valid=acc_v, acc_label=acc_l, t=clock,
                 phase_start=phase_start, retrain_time=retrain_time,
-                label_time=label_time)
-            next_decision = self.allocator.next_decision(feedback)
+                label_time=label_time, drifted=drifted)
+            next_raw = self.allocator.next_decision(feedback)
+            next_dec = as_decision(next_raw)
             record = PhaseRecord(
                 index=len(records), t=clock, acc_valid=acc_v,
-                acc_label=acc_l, drift=next_decision.reset_buffer,
+                acc_label=acc_l, drift=next_dec.temporal.reset_buffer,
                 retrain_time=retrain_time, label_time=label_time,
-                decision=decision, next_decision=next_decision,
+                decision=raw, next_decision=next_raw,
                 phase_start=phase_start, t_tsa=plan.t_tsa, t_bsa=plan.t_bsa,
                 spec_hits=pipe.hits - spec_seen[0],
                 spec_misses=pipe.misses - spec_seen[1])
             records.append(record)
             for obs in observers:
                 obs(record)
-            decision = next_decision
+            raw, dec = next_raw, next_dec
 
         score_until(duration, serving, None)
         acc_timeline = sink.timeline()

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.allocation import CLHyperParams
 from repro.core.cl_system import ContinuousLearningSystem, pretrain_model
-from repro.core.scheduler import CLHyperParams
 from repro.data.stream import DriftStream, Segment, scenario
 
 

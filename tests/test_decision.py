@@ -1,0 +1,304 @@
+"""Two-plane decision API tests: the AllocationDecision <-> Decision
+facade round trip (property-pinned), spatial-plane resolution, the kernel
+plan_* accessors, plan-consuming dispatch, the engine-set drift flag, and
+the pluggable FleetRowPolicy implementations."""
+import dataclasses
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.dacapo_pairs import RESNET18
+from repro.core.allocation import (
+    AllocationDecision,
+    CLHyperParams,
+    FleetAllocator,
+    PhaseFeedback,
+    SpatiotemporalAllocator,
+)
+from repro.core.decision import (
+    FLEET_ROW_POLICIES,
+    Decision,
+    DriftSurgeRowPolicy,
+    FleetRowContext,
+    FleetRowPolicy,
+    ResolveMaxRowPolicy,
+    SpatialPlan,
+    TemporalPlan,
+    WeightedVoteRowPolicy,
+    as_decision,
+    make_fleet_row_policy,
+)
+from repro.core.dispatch import KernelDispatcher
+from repro.core.estimator import DaCapoEstimator
+from repro.core.kernel import InferenceKernel, LabelingKernel, RetrainKernel
+from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy
+from repro.models.registry import make_vision_model
+
+
+# ------------------------------------------------------- facade round trip --
+@settings(max_examples=60, deadline=None)
+@given(
+    retrain=st.integers(0, 512),
+    valid=st.integers(0, 128),
+    label=st.integers(1, 512),
+    reset=st.sampled_from([False, True]),
+    extra=st.integers(0, 384),
+    rows=st.sampled_from([(None, None), (0, 16), (8, 8), (12, 4), (16, 0)]),
+    pace=st.sampled_from([None, 10.0, 120.0]),
+    epochs=st.sampled_from([None, 1, 3]),
+    profile=st.floats(0.0, 9.0))
+def test_legacy_split_roundtrip_is_identity(retrain, valid, label, reset,
+                                            extra, rows, pace, epochs,
+                                            profile):
+    """Any legacy AllocationDecision -> .split() -> from_legacy/to_legacy
+    is the identity — the facade loses nothing in either direction."""
+    legacy = AllocationDecision(
+        retrain_samples=retrain, valid_samples=valid, label_samples=label,
+        reset_buffer=reset, extra_label_samples=extra,
+        rows_tsa=rows[0], rows_bsa=rows[1],
+        precisions=PrecisionPolicy(inference="mx9"),
+        pace_window_s=pace, retrain_epochs=epochs, profile_cost_s=profile)
+    dec = legacy.split()
+    assert isinstance(dec, Decision)
+    assert dec == Decision.from_legacy(legacy)
+    back = dec.to_legacy()
+    assert back == legacy
+    assert AllocationDecision.from_decision(dec) == legacy
+    # Plane fields landed where they belong.
+    assert dec.spatial.rows_tsa == rows[0]
+    assert dec.spatial.rows_bsa == rows[1]
+    assert dec.temporal.total_label_samples == legacy.total_label_samples
+    # And a second lift of the flattened form is stable.
+    assert back.split() == dec
+
+
+def test_as_decision_normalizes_both_surfaces():
+    legacy = AllocationDecision(10, 4, 8)
+    dec = legacy.split()
+    assert as_decision(dec) is dec  # two-plane passthrough
+    assert as_decision(legacy) == dec  # legacy lift
+
+
+def test_spatial_plan_resolution_semantics():
+    """None rows -> offline defaults; 0 rows -> whole-array time-share."""
+    plan = SpatialPlan(rows_tsa=None, rows_bsa=None)
+    assert plan.resolve(6, 10, 16) == dataclasses.replace(
+        plan, rows_tsa=6, rows_bsa=10)
+    # The R=0 fallback: a 0-row side time-shares all rows.
+    plan = SpatialPlan(rows_tsa=0, rows_bsa=16)
+    resolved = plan.resolve(None, None, 16)
+    assert (resolved.rows_tsa, resolved.rows_bsa) == (16, 16)
+    # Explicit rows pass through; role accessor follows the ledger names.
+    resolved = SpatialPlan(rows_tsa=12, rows_bsa=4).resolve(8, 8, 16)
+    assert resolved.rows_for("t_sa") == 12
+    assert resolved.rows_for("b_sa") == 4
+    assert resolved.refission  # default: engine may re-fission the mesh
+
+
+# ------------------------------------------------------ kernel plane view --
+def test_kernels_read_rows_and_precision_from_spatial_plane():
+    est = DaCapoEstimator()
+    hp = CLHyperParams()
+    model = make_vision_model(RESNET18.reduced())
+    prec = PrecisionPolicy(inference="mx4", labeling="mx6",
+                           retraining="mx9")
+    spatial = SpatialPlan(rows_tsa=12, rows_bsa=4, precisions=prec)
+    inf = InferenceKernel(model, RESNET18, est, apply_mx=False)
+    lab = LabelingKernel(model, RESNET18, est, apply_mx=False)
+    ret = RetrainKernel(model, RESNET18, est, hp)
+    # Each kernel picks its own rows (by role) and precision (by field).
+    assert inf.plan_time_per_sample(spatial) == inf.time_per_sample(4, "mx4")
+    assert lab.plan_time_per_sample(spatial) == lab.time_per_sample(12, "mx6")
+    assert ret.plan_time_per_batch(spatial) == ret.time_per_batch(12, "mx9")
+    # Role override: sequential dispatch charges validation inference on
+    # the T-SA chain.
+    assert (inf.plan_time_per_sample(spatial, role="t_sa")
+            == inf.time_per_sample(12, "mx4"))
+    assert inf.plan_keep_frac(spatial, 30.0) == inf.keep_frac(4, "mx4", 30.0)
+
+
+# --------------------------------------------------- plan-consuming phase --
+class _RecordingPipe:
+    def __init__(self):
+        self.hints = []
+
+    def begin_phase(self, start, label_hint=None):
+        self.hints.append(label_hint)
+
+
+def test_begin_phase_derives_label_hints_from_temporal_plane():
+    disp = KernelDispatcher()
+    decs = [AllocationDecision(10, 4, 8, extra_label_samples=24).split(),
+            AllocationDecision(10, 4, 16).split()]
+    pipes = [_RecordingPipe(), _RecordingPipe()]
+    plan = disp.begin_phase(0.0, pipes, decisions=decs, fps=30.0)
+    assert pipes[0].hints == [(32, 30.0)]  # label + extra from the plane
+    assert pipes[1].hints == [(16, 30.0)]
+    assert plan.decisions == tuple(decs)  # the plan carries the intent
+    # fps=None records the decisions but suppresses hinting (the
+    # decision_aware_spec=False path).
+    plan = disp.begin_phase(1.0, pipes, decisions=decs, fps=None)
+    assert pipes[0].hints[-1] is None and pipes[1].hints[-1] is None
+    assert plan.decisions == tuple(decs)
+    # Explicit label_hints win over derivation (pre-plane callers).
+    disp.begin_phase(2.0, pipes, label_hints=[(7, 1.0), None],
+                     decisions=decs, fps=30.0)
+    assert pipes[0].hints[-1] == (7, 1.0)
+
+
+# ------------------------------------------------------- engine drift flag --
+def test_policy_honors_engine_set_drift_flag():
+    """feedback.drifted is the source of truth when present; None falls
+    back to the policy's own detector (legacy paths)."""
+    hp = CLHyperParams(v_thr=-0.05)
+    pol = SpatiotemporalAllocator(hp)
+    healthy = dict(acc_valid=0.8, acc_label=0.82, t=1.0)
+    # Engine says drift despite healthy accuracies -> policy resets.
+    d = pol.next_decision(PhaseFeedback(**healthy, drifted=True))
+    assert d.reset_buffer and d.extra_label_samples == hp.n_ldd - hp.n_l
+    # Engine says no drift despite a cliff -> no reset.
+    d = pol.next_decision(PhaseFeedback(
+        acc_valid=0.9, acc_label=0.2, t=2.0, drifted=False))
+    assert not d.reset_buffer
+    # drifted=None (legacy feedback): detector re-derives -> reset fires.
+    d = pol.next_decision(PhaseFeedback(acc_valid=0.9, acc_label=0.2, t=3.0))
+    assert d.reset_buffer
+    # observe_drift delegates to the (swappable) detector.
+    assert pol.observe_drift(0.2, 0.9, 4.0)
+    assert not pol.observe_drift(0.82, 0.8, 5.0)
+
+
+# -------------------------------------------------------- fleet row policies --
+def _ctx(drifted, weights=None, total=16):
+    n = len(drifted)
+    return FleetRowContext(drifted=tuple(drifted),
+                           weights=tuple(weights or [1.0 / n] * n),
+                           total_rows=total)
+
+
+def _spatials(rows):
+    return [SpatialPlan(rows_tsa=t, rows_bsa=b, precisions=DEFAULT_POLICY)
+            for t, b in rows]
+
+
+def test_row_policy_registry_and_constructor_dispatch():
+    for name, cls in FLEET_ROW_POLICIES.items():
+        inst = FleetRowPolicy(name)
+        assert isinstance(inst, cls) and inst.name == name
+        assert isinstance(make_fleet_row_policy(name), cls)
+    surge = FleetRowPolicy("drift-surge", surge_rows=3, hysteresis_phases=5)
+    assert isinstance(surge, DriftSurgeRowPolicy)
+    assert surge.surge_rows == 3 and surge.hysteresis_phases == 5
+    ready = ResolveMaxRowPolicy()
+    assert make_fleet_row_policy(ready) is ready
+    assert isinstance(make_fleet_row_policy(WeightedVoteRowPolicy),
+                      WeightedVoteRowPolicy)
+    with pytest.raises(KeyError):
+        FleetRowPolicy("round-rows")
+    # Tuning knobs for the wrong policy are rejected, never swallowed.
+    with pytest.raises(TypeError):
+        FleetRowPolicy("resolve-max", surge_rows=2)
+
+
+def test_resolve_max_matches_the_legacy_rule():
+    pol = ResolveMaxRowPolicy()
+    spatials = _spatials([(8, 8), (12, 4), (8, 8)])
+    out = pol.fleet_spatial(spatials, _ctx([False, True, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (12, 4)  # max T-SA, min B-SA
+    assert out.precisions is spatials[0].precisions
+
+
+def test_drift_surge_quorum_hysteresis_and_release():
+    pol = DriftSurgeRowPolicy(surge_rows=4, quorum=0.5, hysteresis_phases=2)
+    pol.reset(3)
+    spatials = _spatials([(8, 8)] * 3)
+    # One of three lanes drifting: below quorum, no surge.
+    out = pol.fleet_spatial(spatials, _ctx([True, False, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (8, 8)
+    # Two of three drift simultaneously: surge fires.
+    out = pol.fleet_spatial(spatials, _ctx([True, True, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (12, 4)
+    # Hysteresis holds the surge with no new quorum...
+    out = pol.fleet_spatial(spatials, _ctx([False, False, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (12, 4)
+    # ...and releases once the window expires.
+    out = pol.fleet_spatial(spatials, _ctx([False, False, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (8, 8)
+    # Never drains the B-SA below one row, whatever surge_rows says.
+    greedy = DriftSurgeRowPolicy(surge_rows=99)
+    out = greedy.fleet_spatial(spatials, _ctx([True, True, True]))
+    assert out.rows_bsa == 1 and out.rows_tsa == 15
+    # Time-shared regime (rows don't sum to the array): degenerate no-op.
+    ts = _spatials([(16, 16)])
+    out = pol.fleet_spatial(ts, _ctx([True]))
+    assert (out.rows_tsa, out.rows_bsa) == (16, 16)
+    # reset() clears a held surge.
+    pol.fleet_spatial(spatials, _ctx([True, True, False]))
+    pol.reset(3)
+    out = pol.fleet_spatial(spatials, _ctx([False, False, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (8, 8)
+
+
+def test_weighted_vote_follows_drift_weighted_shares():
+    spatials = _spatials([(8, 8)] * 3)
+    # Healthy fleet: every lane votes serving rows — the fleet runs
+    # healthy_relief (default: a quarter of base T-SA) below the offline
+    # split, because the oversubscribed B-SA is where healthy rows pay.
+    out = WeightedVoteRowPolicy().fleet_spatial(spatials, _ctx([False] * 3))
+    assert (out.rows_tsa, out.rows_bsa) == (6, 10)
+    # healthy_relief=0 pins the healthy-state split to resolve-max.
+    pol = WeightedVoteRowPolicy(drift_boost=8, healthy_relief=0)
+    out = pol.fleet_spatial(spatials, _ctx([False] * 3))
+    assert (out.rows_tsa, out.rows_bsa) == (8, 8)
+    # Uniform weights, one drifted lane: a third of the boost.
+    out = pol.fleet_spatial(spatials, _ctx([True, False, False]))
+    assert (out.rows_tsa, out.rows_bsa) == (11, 5)  # 8 + 8/3 rounded
+    # Drift-weight concentrated on the drifted lane: (almost) full boost.
+    out = pol.fleet_spatial(spatials,
+                            _ctx([True, False, False],
+                                 weights=[0.9, 0.05, 0.05]))
+    assert (out.rows_tsa, out.rows_bsa) == (15, 1)
+    # Clamped: both sides always keep at least one row.
+    out = WeightedVoteRowPolicy(drift_boost=99).fleet_spatial(
+        spatials, _ctx([True] * 3))
+    assert (out.rows_tsa, out.rows_bsa) == (15, 1)
+    out = WeightedVoteRowPolicy(healthy_relief=99).fleet_spatial(
+        spatials, _ctx([False] * 3))
+    assert (out.rows_tsa, out.rows_bsa) == (1, 15)
+
+
+def test_fleet_allocator_emits_fleet_decisions():
+    """The FleetAllocator's first-class protocol: N temporal planes + ONE
+    fleet spatial plane from its bound row policy, with the legacy lane
+    decisions riding along for records."""
+    hp = CLHyperParams(n_t=64, n_l=32)
+    alloc = FleetAllocator(hp, policy="dacapo-spatiotemporal",
+                           mode="drift-weighted", row_policy="drift-surge")
+    alloc.bind(DaCapoEstimator(), RESNET18)
+    assert "drift-surge" in alloc.name
+    fd = alloc.initial_fleet_decision(3)
+    assert fd.n_lanes == 3 and len(fd.lane_decisions) == 3
+    assert fd.spatial.rows_tsa + fd.spatial.rows_bsa \
+        == DaCapoEstimator().total_rows
+    for tp, lane in zip(fd.temporal, fd.lane_decisions):
+        assert isinstance(tp, TemporalPlan)
+        assert tp.retrain_samples == lane.retrain_samples
+        assert tp.total_label_samples == lane.total_label_samples
+    # per-lane views share the ONE fleet spatial plane.
+    views = fd.per_lane()
+    assert all(v.spatial is fd.spatial for v in views)
+    # A cliff on two of three lanes surges the fleet T-SA next phase.
+    healthy = PhaseFeedback(acc_valid=0.8, acc_label=0.82, t=1.0,
+                            drifted=False)
+    cliff = PhaseFeedback(acc_valid=0.9, acc_label=0.2, t=1.0, drifted=True)
+    fd2 = alloc.next_fleet_decision([cliff, cliff, healthy])
+    assert fd2.spatial.rows_tsa > fd.spatial.rows_tsa
+    # Unbound allocators cannot emit fleet decisions.
+    with pytest.raises(RuntimeError):
+        FleetAllocator(hp).initial_fleet_decision(2)
+    # ONE spatial plane means ONE PrecisionPolicy: a lane policy that
+    # diverges from the fleet's precisions is refused loudly instead of
+    # being silently charged at lane 0's precisions.
+    alloc.policies[1].precision = PrecisionPolicy(inference="mx4")
+    with pytest.raises(ValueError, match="heterogeneous"):
+        alloc.next_fleet_decision([healthy, healthy, healthy])

@@ -17,6 +17,7 @@ from repro.core.allocation import (
     FleetAllocator,
     PhaseFeedback,
 )
+from repro.core.decision import DriftSurgeRowPolicy, FleetRowPolicy
 from repro.core.estimator import DaCapoEstimator
 from repro.core.fleet import FleetSession, FleetSpec
 from repro.core.kernel import LabelingKernel
@@ -207,6 +208,100 @@ def test_fleet_budget_scales_phase_cost(small_setup):
         fres = fleet.run(streams, duration=40.0)
         phases[mode] = len(fres.fleet_phase_log)
     assert phases["uniform"] > phases["isolated"]
+
+
+# ---------------------------------------------------- fleet row policies --
+# PR 4 capture: the 3-stream heterogeneous fleet (S1/S3/ES1, seeds 5/6/7,
+# small_setup hp, drift-weighted, 40 s) run on the pre-plane engine — the
+# hard-coded max/min `_fleet_rows` era. FleetRowPolicy("resolve-max") must
+# reproduce every number bit-for-bit in both dispatch modes.
+GOLDEN_FLEET_3S = {
+    "sequential": dict(
+        fleet_avg_accuracy=0.12683780399428937, phases=14,
+        per_stream_acc=[0.19025670599143407, 0.12230788242306476,
+                        0.0679488235683693],
+        retrain=[9.768679200000001, 8.9546226, 8.9546226],
+        label=[5.0484409919999935, 3.1252253759999924, 3.1252253759999924],
+        last_t=40.22439956399999, drifts=[1, 0, 0]),
+    "concurrent": dict(
+        fleet_avg_accuracy=0.14722245106480017, phases=14,
+        per_stream_acc=[0.12619067234125728, 0.13880973957538303,
+                        0.1766669412777602],
+        retrain=[9.768679200000001, 8.9546226, 8.9546226],
+        label=[5.048440991999991, 4.5676370879999935, 2.644421471999993],
+        last_t=40.672010568, drifts=[1, 1, 0]),
+}
+
+
+def _golden_streams():
+    return [DriftStream(scenario("S1", 2), seed=5, img=24),
+            DriftStream(scenario("S3", 2), seed=6, img=24),
+            DriftStream(scenario("ES1", 2), seed=7, img=24)]
+
+
+@pytest.mark.parametrize("dispatch", ["sequential", "concurrent"])
+def test_resolve_max_row_policy_pins_pr4_fleet_goldens(small_setup,
+                                                       dispatch):
+    """Acceptance: the pluggable resolve-max policy is bit-identical to
+    PR 4's hard-coded fleet row resolution, in both dispatch modes."""
+    _, hp, tp, sp = small_setup
+    fleet = _fleet(hp, mode="drift-weighted", dispatch=dispatch,
+                   row_policy=FleetRowPolicy("resolve-max"))
+    fleet.set_pretrained(tp, sp)
+    fres = fleet.run(_golden_streams(), duration=40.0)
+    gold = GOLDEN_FLEET_3S[dispatch]
+    assert fres.fleet_avg_accuracy == gold["fleet_avg_accuracy"]
+    assert len(fres.fleet_phase_log) == gold["phases"]
+    assert fres.fleet_phase_log[-1]["t"] == gold["last_t"]
+    for lane, acc, ret, lab, drifts in zip(
+            fres.streams, gold["per_stream_acc"], gold["retrain"],
+            gold["label"], gold["drifts"]):
+        assert lane.avg_accuracy == acc
+        assert lane.retrain_time == ret
+        assert lane.label_time == lab
+        assert lane.drift_events == drifts
+    # The phase log now also tracks the executed fleet spatial plane, and
+    # resolve-max keeps it pinned to the offline split throughout.
+    for entry in fres.fleet_phase_log:
+        assert (entry["rows_tsa"], entry["rows_bsa"]) \
+            == (fleet.r_tsa, fleet.r_bsa)
+
+
+def test_drift_surge_fleet_moves_rows_and_returns(small_setup):
+    """FleetRowPolicy('drift-surge') in a live fleet: the fleet spatial
+    plane grows the T-SA when the drift quorum fires, rows-over-time is
+    auditable in the fleet phase log, and the surge releases after the
+    hysteresis window."""
+    _, hp, tp, sp = small_setup
+    fleet = _fleet(hp, mode="drift-weighted", dispatch="concurrent",
+                   row_policy=DriftSurgeRowPolicy(
+                       surge_rows=1, quorum=0.3, hysteresis_phases=1))
+    fleet.set_pretrained(tp, sp)
+    fres = fleet.run(_golden_streams(), duration=40.0)
+    base = fleet.r_tsa
+    rows = [e["rows_tsa"] for e in fres.fleet_phase_log]
+    assert rows[0] == base  # offline split first
+    assert base + 1 in rows  # the surge fired (some lane drifted)
+    assert rows[-1] == base  # ...and released after the hysteresis window
+    for e in fres.fleet_phase_log:  # the array stays whole
+        assert e["rows_tsa"] + e["rows_bsa"] == fleet.estimator.total_rows
+    # The surged phases bought a bigger T-SA (ledger runs at more rows).
+    assert fres.drift_events > 0
+
+
+def test_weighted_vote_fleet_invariants(small_setup):
+    """FleetRowPolicy('weighted-vote') in a live fleet: rows stay a valid
+    split of the whole array (healthy phases run serving-heavy — below
+    the offline T-SA split — and both sides always keep a row)."""
+    _, hp, tp, sp = small_setup
+    fleet = _fleet(hp, mode="drift-weighted", dispatch="concurrent",
+                   row_policy="weighted-vote")
+    fleet.set_pretrained(tp, sp)
+    fres = fleet.run(_golden_streams(), duration=20.0)
+    assert "weighted-vote" in fres.name
+    for e in fres.fleet_phase_log:
+        assert e["rows_tsa"] + e["rows_bsa"] == fleet.estimator.total_rows
+        assert e["rows_tsa"] >= 1 and e["rows_bsa"] >= 1
 
 
 # ------------------------------------------------------- allocator modes --

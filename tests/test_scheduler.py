@@ -68,21 +68,31 @@ def test_window_pacing_is_declared_on_decisions():
 
 
 def test_legacy_scheduler_shim():
-    """Old imports and the legacy next_phase API keep working."""
-    from repro.core.scheduler import (
-        PhasePlan,
-        SCHEDULERS,
-        SpatiotemporalScheduler,
-    )
+    """Old imports and the legacy next_phase API keep working — but warn:
+    both the shim module and the plan-era aliases are deprecated, so no
+    internal caller may touch them (tier-1 stays green under
+    -W error::DeprecationWarning)."""
+    import importlib
+    import sys
 
-    assert SCHEDULERS is ALLOCATORS
-    assert PhasePlan is AllocationDecision
+    import pytest
+
+    sys.modules.pop("repro.core.scheduler", None)
+    with pytest.warns(DeprecationWarning, match="repro.core.scheduler"):
+        scheduler = importlib.import_module("repro.core.scheduler")
+
+    assert scheduler.SCHEDULERS is ALLOCATORS
+    assert scheduler.PhasePlan is AllocationDecision
     # Positional PhasePlan construction (legacy field order).
-    plan = PhasePlan(10, 4, 8, True, 2)
+    plan = scheduler.PhasePlan(10, 4, 8, True, 2)
     assert plan.retrain_samples == 10 and plan.reset_buffer
-    sch = SpatiotemporalScheduler(CLHyperParams(v_thr=-0.05))
-    plan = sch.next_phase(acc_valid=0.9, acc_label=0.5, t=1.0)
+    sch = scheduler.SpatiotemporalScheduler(CLHyperParams(v_thr=-0.05))
+    with pytest.warns(DeprecationWarning, match="next_phase"):
+        plan = sch.next_phase(acc_valid=0.9, acc_label=0.5, t=1.0)
     assert plan.reset_buffer
+    with pytest.warns(DeprecationWarning, match="initial_plan"):
+        plan = sch.initial_plan()
+    assert plan.retrain_samples == sch.hp.n_t
 
 
 @settings(max_examples=50, deadline=None)
