@@ -1,0 +1,231 @@
+"""Fleet-manager benchmark: fault-recovery overhead and live migration.
+
+Runs the sharded fleet tier (:class:`~repro.core.manager.FleetManager`,
+N shards = N independent FleetSessions on their own sub-accelerators)
+through two experiments on identical pretrained weights and an identical
+virtual-clock budget:
+
+* **recovery** — the same fleet twice: a no-fault baseline vs a run where
+  one shard's accelerator is lost mid-run
+  (:class:`~repro.runtime.fault.FailureInjector`, probed per round with
+  ``key=shard_index``). The dead shard's lanes restore from their last
+  per-lane durable checkpoint and re-home onto the survivors; the bench
+  reports the accuracy cost of the fault, the explicitly-charged recovery
+  seconds, and the manager/shard **ledger conservation gap** (must be ~0:
+  every phase's T-SA seconds are charged once per tier);
+* **migration** — migration-off (``static`` placement, lanes pinned where
+  admitted) vs migration-on (``headroom`` placement: a drifted lane on an
+  oversubscribed shard re-homes to the shard with T-SA headroom) at equal
+  budget, on the bench_fleet drifting-camera fleet packed asymmetrically
+  so the drifting camera starts on the loaded shard.
+
+Writes ``BENCH_manager.json`` with, per experiment arm: mean fleet
+accuracy, per-lane accuracies, rounds, ledger (T-SA / recovery seconds),
+events (fail/recover/migrate counts) and host wall time.
+
+Acceptance (asserted after the JSON is written): both recovery arms keep
+every camera; the ledger conservation gap is ~0 in every arm; the faulted
+run recovers (>=1 recover event) and lands within an accuracy tolerance
+of the no-fault baseline.
+
+Run:  PYTHONPATH=src python benchmarks/bench_manager.py [--smoke]
+          [--out F] [--fail-shard K] [--shards N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+# Importable both via benchmarks/run.py (repo root on sys.path) and as a
+# standalone CLI (only benchmarks/ on sys.path).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.bench_fleet import _hp, _pretrain, build_streams  # noqa: E402
+
+# The faulted arm must land within this of the no-fault baseline. The
+# dominant cost is not checkpoint staleness but budget dilution: after
+# the round-3 loss every camera shares the surviving shard's single
+# T-SA for the rest of the run, so per-lane retrain budget roughly
+# halves fleet-wide (~0.2 accuracy on the smoke fleet).
+ACCURACY_TOLERANCE = 0.3
+
+
+def _manager(hp, smoke, **kw):
+    from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+    from repro.core.fleet import FleetSpec
+    from repro.core.manager import FleetManager
+    from repro.core.mx import PrecisionPolicy
+
+    spec = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                     policy=PrecisionPolicy(inference="mx9"),
+                     apply_mx=False, seed=0, eval_fps=1.0,
+                     dispatch="concurrent", fleet_mode="drift-weighted",
+                     fleet_kwargs={"label_floor": 1.0, "drift_bias": 3.0,
+                                   "gap_eps": 0.01})
+    return FleetManager(spec, **kw)
+
+
+def _summary(res, wall):
+    counts = {}
+    for e in res.events:
+        counts[e.kind] = counts.get(e.kind, 0) + 1
+    return {
+        "fleet_avg_accuracy": round(res.fleet_avg_accuracy, 6),
+        "per_lane_accuracy": {str(k): round(v.avg_accuracy, 6)
+                              for k, v in sorted(res.lane_results.items(),
+                                                 key=lambda kv: str(kv[0]))},
+        "lanes": len(res.lane_results),
+        "rounds": res.rounds,
+        "dead_shards": sum(1 for r in res.shard_results if r is None),
+        "t_tsa_s": round(res.ledger["t_tsa"], 6),
+        "recovery_cost_s": round(res.ledger["recovery_cost"], 6),
+        "conservation_gap": res.conservation_gap(),
+        "events": counts,
+        "wall_s": round(wall, 3),
+    }
+
+
+def _run(mgr, streams, duration):
+    t0 = time.perf_counter()
+    res = mgr.run(streams, duration=duration)
+    return res, _summary(res, time.perf_counter() - t0)
+
+
+def bench_recovery(n_shards, fail_shard, smoke, ckpt_root) -> dict:
+    """No-fault baseline vs mid-run shard loss with checkpoint recovery."""
+    from repro.runtime.fault import FailureInjector
+
+    duration = 90.0 if smoke else 180.0
+    hp = _hp(smoke)
+    streams = build_streams(3, smoke)
+    tp, sp = _pretrain(streams, smoke)
+
+    base = _manager(hp, smoke, n_shards=n_shards, migration=False,
+                    checkpoint_dir=os.path.join(ckpt_root, "no_fault"),
+                    checkpoint_every=2)
+    base.set_pretrained(tp, sp)
+    _, no_fault = _run(base, build_streams(3, smoke), duration)
+
+    injector = FailureInjector(fail_at_steps=[(3, fail_shard)])
+    faulted = _manager(hp, smoke, n_shards=n_shards, migration=False,
+                       checkpoint_dir=os.path.join(ckpt_root, "fault"),
+                       checkpoint_every=2, failure_injector=injector,
+                       recovery_cost_s=2.0)
+    faulted.set_pretrained(tp, sp)
+    _, fault = _run(faulted, build_streams(3, smoke), duration)
+
+    return {
+        "no_fault": no_fault,
+        "fault": fault,
+        "fail_shard": fail_shard,
+        "accuracy_delta": round(no_fault["fleet_avg_accuracy"]
+                                - fault["fleet_avg_accuracy"], 6),
+        "recovery_overhead_s": fault["recovery_cost_s"],
+    }
+
+
+def bench_migration(n_shards, smoke) -> dict:
+    """static (no migration) vs headroom (drifted lanes re-home) at equal
+    budget. The drifting camera is admitted first so static round-robin
+    and headroom both start it on shard 0 next to a stable camera — the
+    loaded shard headroom migrates it away from."""
+    duration = 90.0 if smoke else 180.0
+    hp = _hp(smoke)
+    streams = build_streams(3, smoke)
+    tp, sp = _pretrain(streams, smoke)
+
+    out = {}
+    for arm, kw in (
+            ("off", {"placement": "static", "migration": False}),
+            ("on", {"placement": "headroom",
+                    "placement_kwargs": {"min_gap": 1},
+                    "migration": True, "migration_cooldown": 2})):
+        mgr = _manager(hp, smoke, n_shards=n_shards, **kw)
+        mgr.set_pretrained(tp, sp)
+        _, out[arm] = _run(mgr, build_streams(3, smoke), duration)
+    out["accuracy_delta"] = round(out["on"]["fleet_avg_accuracy"]
+                                  - out["off"]["fleet_avg_accuracy"], 6)
+    out["migrations"] = out["on"]["events"].get("migrate", 0)
+    return out
+
+
+def main(argv=None):
+    import tempfile
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--fail-shard", type=int, default=1,
+                    help="shard index the injector kills (CI matrix leg)")
+    ap.add_argument("--out", default="BENCH_manager.json")
+    args = ap.parse_args(argv)
+    if not 0 <= args.fail_shard < args.shards:
+        ap.error(f"--fail-shard must be in [0, {args.shards})")
+
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory(prefix="bench_manager_ckpt_") as d:
+        recovery = bench_recovery(args.shards, args.fail_shard,
+                                  args.smoke, d)
+    migration = bench_migration(args.shards, args.smoke)
+    result = {
+        "bench": "manager",
+        "mode": "smoke" if args.smoke else "full",
+        "backend": jax.default_backend(),
+        "n_shards": args.shards,
+        "recovery": recovery,
+        "migration": migration,
+    }
+
+    # Write BEFORE the acceptance asserts so a failing comparison still
+    # leaves the per-arm numbers to diagnose (CI uploads the file).
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out} in {time.perf_counter() - t0:.1f}s")
+
+    for arm in ("no_fault", "fault"):
+        assert recovery[arm]["lanes"] == 3, \
+            f"recovery/{arm}: a camera was lost"
+        assert recovery[arm]["conservation_gap"] < 1e-6, \
+            f"recovery/{arm}: manager/shard ledgers diverged"
+    for arm in ("off", "on"):
+        assert migration[arm]["conservation_gap"] < 1e-6, \
+            f"migration/{arm}: manager/shard ledgers diverged"
+        assert migration[arm]["lanes"] == 3
+    assert recovery["fault"]["events"].get("fail", 0) == 1
+    assert recovery["fault"]["events"].get("recover", 0) >= 1, \
+        "the faulted run never recovered a lane"
+    assert recovery["fault"]["dead_shards"] == 1
+    assert recovery["accuracy_delta"] <= ACCURACY_TOLERANCE, \
+        (f"fault cost {recovery['accuracy_delta']} fleet accuracy "
+         f"(tolerance {ACCURACY_TOLERANCE})")
+    return result
+
+
+def run():
+    """Registry entry (benchmarks/run.py): smoke manager sweep as CSV
+    rows. Writes to a distinct file so a full BENCH_manager.json
+    survives."""
+    result = main(["--smoke", "--out", "BENCH_manager_smoke.json"])
+    rows = []
+    for arm in ("no_fault", "fault"):
+        r = result["recovery"][arm]
+        rows.append((f"manager/recovery/{arm}", r["wall_s"] * 1e6,
+                     f"acc={r['fleet_avg_accuracy']}"))
+    for arm in ("off", "on"):
+        r = result["migration"][arm]
+        rows.append((f"manager/migration/{arm}", r["wall_s"] * 1e6,
+                     f"acc={r['fleet_avg_accuracy']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

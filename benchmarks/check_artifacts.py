@@ -28,6 +28,12 @@ HEADLINE_KEYS = {
                      ("speculation_hit_rate",)],
     "fleet": [("modes", "*", "fleet_avg_accuracy"),
               ("row_policies", "*", "fleet_avg_accuracy")],
+    "manager": [("recovery", "no_fault", "fleet_avg_accuracy"),
+                ("recovery", "fault", "fleet_avg_accuracy"),
+                ("recovery", "fault", "conservation_gap"),
+                ("recovery", "recovery_overhead_s"),
+                ("migration", "off", "fleet_avg_accuracy"),
+                ("migration", "on", "fleet_avg_accuracy")],
 }
 # Mappings a bench may legitimately leave empty (e.g. a --row-policy matrix
 # run skips the temporal-mode sweep).

@@ -21,6 +21,7 @@ def main() -> None:
         bench_fig12_extreme,
         bench_fleet,
         bench_kernels,
+        bench_manager,
         bench_reallocation,
         bench_table3_models,
     )
@@ -41,6 +42,7 @@ def main() -> None:
             ("dispatch", bench_dispatch),
             ("reallocation", bench_reallocation),
             ("fleet", bench_fleet),
+            ("manager", bench_manager),
         ]
     print("name,us_per_call,derived")
     failures = 0

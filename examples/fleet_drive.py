@@ -14,9 +14,19 @@ stream's lane (``s0``, ``s1``, ...) and where the budget went; the summary
 compares per-stream accuracy and plots the fleet T-SA rows over time (the
 spatial plane in motion under drift-surge / weighted-vote).
 
+With ``--shards N`` (N > 1) the same fleet runs under the sharded
+:class:`~repro.core.manager.FleetManager` tier instead — N independent
+FleetSessions, one per sub-accelerator, with headroom placement, live
+lane migration and per-lane checkpointing — and ``--fail-at PHASE``
+injects an accelerator loss on the last shard at that phase: the driver
+prints the manager's re-homing/recovery timeline (admissions,
+migrations, the failure, each lane's checkpoint restore) and the
+conserved manager/shard virtual-clock ledgers.
+
 Run:  PYTHONPATH=src python examples/fleet_drive.py [--fast] [--streams 3]
           [--mode drift-weighted] [--row-policy resolve-max]
           [--dispatch sequential|concurrent]
+          [--shards 2] [--fail-at 4]
 """
 import argparse
 import os
@@ -40,7 +50,14 @@ def main():
                     help="fleet spatial-plane policy (FleetRowPolicy)")
     ap.add_argument("--dispatch", default="sequential",
                     choices=("sequential", "concurrent"))
+    ap.add_argument("--shards", type=int, default=1,
+                    help="run under the FleetManager tier with N shards")
+    ap.add_argument("--fail-at", type=int, default=None, metavar="PHASE",
+                    help="kill the last shard's accelerator at this fleet "
+                         "phase (implies the manager tier)")
     args = ap.parse_args()
+    if args.fail_at is not None and args.shards < 2:
+        args.shards = 2  # a failure needs a survivor to recover onto
 
     import dataclasses
 
@@ -72,11 +89,15 @@ def main():
                         steps[1], 48, rng,
                         segments=streams[0].segments[:1], seed=8)
 
-    fleet = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
-                      fleet_mode=args.mode, row_policy=args.row_policy,
-                      apply_mx=False, eval_fps=0.5,
-                      policy=PrecisionPolicy(inference="mx9"),
-                      dispatch=args.dispatch).build()
+    spec = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                     fleet_mode=args.mode, row_policy=args.row_policy,
+                     apply_mx=False, eval_fps=0.5,
+                     policy=PrecisionPolicy(inference="mx9"),
+                     dispatch=args.dispatch)
+    if args.shards > 1:
+        run_manager(args, spec, streams, tp, sp, duration)
+        return
+    fleet = spec.build()
     fleet.set_pretrained(tp, sp)
     fleet.add_observer(lambda rec: print(
         f"  [s{rec.stream}] phase {rec.index:2d} t={rec.t:6.1f}s "
@@ -111,6 +132,64 @@ def main():
         moves = sum(1 for a, b in zip(rows, rows[1:]) if a[1] != b[1])
         print(f"spatial re-allocations: {moves} "
               f"(row policy: {args.row_policy})")
+
+
+def run_manager(args, spec, streams, tp, sp, duration):
+    """The sharded tier: N FleetSessions under one FleetManager, with
+    headroom placement, live migration, per-lane checkpoints and (with
+    --fail-at) an injected accelerator loss + recovery."""
+    import tempfile
+
+    from repro.core.manager import FleetManager
+    from repro.runtime.fault import FailureInjector
+
+    victim = args.shards - 1
+    injector = None
+    if args.fail_at is not None:
+        injector = FailureInjector(fail_at_steps=[(args.fail_at, victim)])
+    with tempfile.TemporaryDirectory(prefix="fleet_drive_ckpt_") as ckpt:
+        mgr = FleetManager(spec, n_shards=args.shards,
+                           placement="headroom",
+                           placement_kwargs={"min_gap": 1},
+                           checkpoint_dir=ckpt, checkpoint_every=2,
+                           migration=True, migration_cooldown=2,
+                           failure_injector=injector, recovery_cost_s=2.0)
+        mgr.set_pretrained(tp, sp)
+        res = mgr.run(streams, duration=duration)
+
+    print(f"\nmanager: {args.shards} shards, mode={args.mode}, "
+          f"{duration:.0f} virtual seconds, {res.rounds} rounds"
+          + (f", shard {victim} killed at phase {args.fail_at}"
+             if args.fail_at is not None else ""))
+    print("re-homing / recovery timeline:")
+    shown = 0
+    for e in res.events:
+        if e.kind == "checkpoint":
+            continue
+        shown += 1
+        where = (f"shard {e.shard}" if e.to_shard is None
+                 else f"shard {e.shard} -> {e.to_shard}")
+        lane = f" lane {e.key}" if e.key is not None else ""
+        print(f"  t={e.t:6.1f}s round {e.round:2d} {e.kind:8s} "
+              f"{where}{lane}  {e.detail}")
+    if not shown:
+        print("  (no admissions, migrations or failures)")
+    ckpts = sum(1 for e in res.events if e.kind == "checkpoint")
+    print(f"checkpoint sweeps: {ckpts} (every 2 rounds, per-lane)")
+    print("per-lane results:")
+    for key in sorted(res.lane_results, key=str):
+        lane = res.lane_results[key]
+        print(f"  {key}: avg={lane.avg_accuracy * 100:5.1f}%  "
+              f"phases={len(lane.records)}  drifts={lane.drift_events}")
+    print(f"fleet mean accuracy: {res.fleet_avg_accuracy * 100:.1f}%")
+    dead = [i for i, r in enumerate(res.shard_results) if r is None]
+    for i, led in enumerate(res.shard_ledgers):
+        state = "DEAD" if i in dead else "alive"
+        print(f"  shard {i} ({state}): t_tsa={led['t_tsa']:7.2f}s "
+              f"t_bsa={led['t_bsa']:7.2f}s")
+    print(f"manager ledger: t_tsa={res.ledger['t_tsa']:.2f}s "
+          f"+ recovery={res.ledger['recovery_cost']:.2f}s "
+          f"(conservation gap {res.conservation_gap():.2e})")
 
 
 if __name__ == "__main__":

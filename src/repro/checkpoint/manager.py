@@ -9,7 +9,12 @@ Design points for 1000+ node deployments:
     training loop (device->host copy is synchronous, I/O is not);
   * elastic restore — arrays are loaded as full logical tensors and
     re-device_put with the *target* mesh's shardings, so a 512-chip
-    checkpoint restores onto 256 chips (or 1 CPU) unchanged.
+    checkpoint restores onto 256 chips (or 1 CPU) unchanged;
+  * clean shutdown — the manager is a context manager; ``close()`` (or the
+    ``with`` exit) joins the in-flight async save so a process exiting
+    right after a non-blocking ``save()`` cannot silently drop it, and
+    ``all_steps``/``latest_step`` ignore step directories without a
+    committed ``manifest.json`` so a torn write never crashes ``restore``.
 """
 from __future__ import annotations
 
@@ -83,6 +88,18 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
+    def close(self) -> None:
+        """Flush the in-flight async save. Safe to call repeatedly; after
+        close the manager can still be used (it is a flush, not a
+        shutdown)."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.max_to_keep]:
@@ -91,10 +108,14 @@ class CheckpointManager:
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> List[int]:
+        """Committed steps only: a step directory without a manifest.json
+        (torn write, e.g. rename raced a crash) is invisible, so
+        ``latest_step``/``restore`` never pick up a partial checkpoint."""
         steps = []
         for name in os.listdir(self.directory):
             m = re.fullmatch(r"step_(\d+)", name)
-            if m:
+            if m and os.path.isfile(
+                    os.path.join(self.directory, name, "manifest.json")):
                 steps.append(int(m.group(1)))
         return sorted(steps)
 

@@ -27,6 +27,8 @@ from repro.core.decision import (  # noqa: F401
     FleetDecision,
     FleetRowContext,
     FleetRowPolicy,
+    ManagerDecision,
+    PlacementAction,
     SpatialPlan,
     TemporalPlan,
     as_decision,
@@ -46,8 +48,18 @@ from repro.core.estimator import (  # noqa: F401
 )
 from repro.core.fleet import (  # noqa: F401
     FleetResult,
+    FleetRun,
     FleetSession,
     FleetSpec,
+    LaneSnapshot,
+)
+from repro.core.manager import (  # noqa: F401
+    PLACEMENT_POLICIES,
+    FleetManager,
+    ManagerResult,
+    ManagerSpec,
+    PlacementPolicy,
+    make_placement_policy,
 )
 from repro.core.kernel import (  # noqa: F401
     InferenceKernel,

@@ -495,6 +495,7 @@ class FleetAllocator(AllocationPolicy):
         self._acc_ema: List[Optional[float]] = []  # fresh-label acc EMA
         self._acc_best: List[float] = []  # healthy-acc high-water mark
         self._last_weights: Optional[List[float]] = None  # last split shares
+        self._last_base: Optional[List[AllocationDecision]] = None
 
     # -------------------------------------------------------------- binding
     def bind(self, estimator, student_cfg: VisionConfig) -> "FleetAllocator":
@@ -513,7 +514,7 @@ class FleetAllocator(AllocationPolicy):
                 raise ValueError(
                     "FleetAllocator needs a policy name/class for n > 1 "
                     "streams (a shared instance would share detector state)")
-            self.policies = [self._policy_spec]
+            self.policies = [self._policy_spec][:n]
         else:
             self.policies = [make_allocator(self._policy_spec, self.hp,
                                             self.precision)
@@ -527,8 +528,17 @@ class FleetAllocator(AllocationPolicy):
         self._acc_ema = [None] * n
         self._acc_best = [0.0] * n
         self._last_weights = None
+        self._last_base = None
         self.row_policy.reset(n)
         return self.policies
+
+    def begin_empty(self) -> None:
+        """Start a zero-lane fleet that ``admit_lane`` will populate — the
+        manager's restore path (an empty shard receiving re-homed lanes).
+        Fresh fleet-side state, with the base-decision ledger open so the
+        first ``rebuild_fleet_decision`` sees the admitted lanes."""
+        self.lanes(0)
+        self._last_base = []
 
     # ------------------------------------------------------------ decisions
     _SINGLE_STREAM_MSG = (
@@ -545,6 +555,7 @@ class FleetAllocator(AllocationPolicy):
     def initial_decisions(self, n: int) -> List[AllocationDecision]:
         self.lanes(n)  # fresh per-lane policies/state every run
         base = [p.initial_decision() for p in self.policies]
+        self._last_base = list(base)
         self._last_weights = self._weights(base, None)
         return self._split(base, self._last_weights)
 
@@ -555,6 +566,7 @@ class FleetAllocator(AllocationPolicy):
                 f"{len(feedbacks)} feedbacks for {len(self.policies)} lanes")
         base = [p.next_decision(fb)
                 for p, fb in zip(self.policies, feedbacks)]
+        self._last_base = list(base)
         self._last_weights = self._weights(base, feedbacks)
         return self._split(base, self._last_weights)
 
@@ -605,6 +617,79 @@ class FleetAllocator(AllocationPolicy):
             spatial=self.row_policy.fleet_spatial(spatials, ctx),
             temporal=tuple(p.temporal for p in planes),
             lane_decisions=tuple(lane_decisions))
+
+    # ------------------------------------------------------ lane membership
+    # The fleet-manager tier changes membership mid-run: a camera is
+    # admitted, a lane migrates between shards, a dead shard's lanes are
+    # re-homed onto survivors. These hooks keep every per-lane parallel
+    # list (policy, drift-gap EMA, fresh-label EMA, high-water mark, last
+    # base decision) consistent without resetting the surviving lanes'
+    # state the way ``lanes()`` would.
+
+    def lane_policy_state(self, i: int) -> tuple:
+        """The fleet-side state of lane ``i``, as ``admit_lane`` re-accepts
+        it: (gap EMA, fresh-label EMA, high-water mark, last base
+        decision). Part of a lane snapshot — restoring it on the target
+        fleet makes the drift-weighted split treat the migrated lane
+        exactly as the source fleet would have."""
+        base = None if self._last_base is None else self._last_base[i]
+        return (self._gaps[i], self._acc_ema[i], self._acc_best[i], base)
+
+    def admit_lane(self, policy: Optional[AllocationPolicy] = None,
+                   lane_state: Optional[tuple] = None) -> int:
+        """Grow the fleet by one lane mid-run (admission, or a migrated
+        lane re-homing here). ``policy`` is the migrating lane's live
+        :class:`AllocationPolicy` — carrying its drift detector — or None
+        for a fresh camera; ``lane_state`` is :meth:`lane_policy_state`
+        from the source fleet. Returns the new lane index."""
+        if policy is None:
+            if isinstance(self._policy_spec, AllocationPolicy):
+                raise ValueError(
+                    "cannot admit a fresh lane into a FleetAllocator built "
+                    "around a shared policy instance — pass a policy "
+                    "name/class, or hand admit_lane the lane's policy")
+            policy = make_allocator(self._policy_spec, self.hp,
+                                    self.precision)
+        policy.precision = self.precision
+        if self._estimator is not None:
+            policy.bind(self._estimator, self._student_cfg)
+        self.policies.append(policy)
+        gap, ema, best, base = lane_state or (0.0, None, 0.0, None)
+        self._gaps.append(gap)
+        self._acc_ema.append(ema)
+        self._acc_best.append(best)
+        if self._last_base is not None:
+            self._last_base.append(base if base is not None
+                                   else policy.initial_decision())
+        return len(self.policies) - 1
+
+    def remove_lane(self, i: int) -> AllocationPolicy:
+        """Shrink the fleet by lane ``i`` (migration out / lane retired),
+        returning its live policy so a migration can carry it along."""
+        policy = self.policies.pop(i)
+        self._gaps.pop(i)
+        self._acc_ema.pop(i)
+        self._acc_best.pop(i)
+        if self._last_base is not None:
+            self._last_base.pop(i)
+        if self._last_weights is not None and i < len(self._last_weights):
+            self._last_weights.pop(i)
+        return policy
+
+    def rebuild_fleet_decision(self) -> FleetDecision:
+        """Re-emit a :class:`FleetDecision` for the *current* membership
+        from the lanes' last base decisions — the phase-boundary refresh
+        after ``admit_lane``/``remove_lane``, without advancing any lane
+        policy (no feedback is consumed). Drift-weighted fleets degrade to
+        a uniform split for this one rebuilt phase (the weights are
+        feedback-driven); round-robin keeps its focus cursor unmoved."""
+        if self._last_base is None:
+            return self.initial_fleet_decision(len(self.policies))
+        rr = self._rr  # a rebuild is not a phase: don't advance the focus
+        self._last_weights = self._weights(self._last_base, None)
+        self._rr = rr
+        return self._fleet_decision(
+            self._split(self._last_base, self._last_weights), None)
 
     # -------------------------------------------------------------- weights
     def _weights(self, base: Sequence[AllocationDecision],

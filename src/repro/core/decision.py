@@ -174,6 +174,46 @@ class FleetDecision:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlacementAction:
+    """One lane-placement act in a manager round: an admission, a live
+    migration, or a fault-recovery re-home. ``key`` is the lane's stable
+    camera id; ``from_shard`` is ``None`` for admissions."""
+
+    kind: str  # "admit" | "migrate" | "recover"
+    key: object
+    to_shard: int
+    from_shard: Optional[int] = None
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ManagerDecision:
+    """One manager round: :class:`FleetDecision` generalized to a
+    per-shard tuple, plus the round's placement actions.
+
+    The manager tier owns N shards (each one :class:`~repro.core.fleet
+    .FleetSession` on its own sub-accelerator), and each round every live
+    shard executes its own :class:`FleetDecision` — there is no
+    manager-wide spatial plane because the arrays are disjoint; what the
+    manager decides is *where lanes live* (``placements``, emitted by a
+    pluggable :class:`~repro.core.manager.PlacementPolicy` mirroring the
+    :class:`FleetRowPolicy` registry). ``shards[i]`` is ``None`` for a
+    dead or drained shard.
+    """
+
+    shards: Tuple[Optional[FleetDecision], ...]
+    placements: Tuple[PlacementAction, ...] = ()
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_lanes(self) -> int:
+        return sum(d.n_lanes for d in self.shards if d is not None)
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetRowContext:
     """What a :class:`FleetRowPolicy` may condition on, beyond the per-lane
     spatial requests: the engine-side drift flags and the drift-weighted

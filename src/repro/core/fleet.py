@@ -51,6 +51,7 @@ goldens of ``tests/test_session.py``.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -76,6 +77,7 @@ from repro.core.session import (
 )
 from repro.data.pipeline import FramePipeline
 from repro.data.stream import DriftStream
+from repro.runtime.elastic import rehome_tree
 
 
 @dataclasses.dataclass
@@ -105,6 +107,44 @@ class _StreamLane:
     label_h: object = None
     pred_l_h: object = None
     x_l: object = None
+    # manager-tier identity + migration carry-over
+    key: object = None  # stable camera id across shards (None: anonymous)
+    timeline_prefix: List = dataclasses.field(default_factory=list)
+    # accuracy timeline accrued on previous shards, prepended at finalize
+
+
+@dataclasses.dataclass
+class LaneSnapshot:
+    """A lane frozen at a phase boundary — the unit of migration and
+    per-lane checkpointing in the manager tier.
+
+    Everything a lane needs to resume *bit-identically* on another
+    :class:`FleetSession` (same model/kernel configs): host copies of the
+    student weights and optimizer state, the :class:`SampleBuffer` state
+    dict (samples + draw-RNG bit-generator state), the lane RNG's
+    bit-generator state, a deep copy of the lane's live
+    :class:`~repro.core.allocation.AllocationPolicy` (its drift detector
+    and online row state), the fleet-side lane state
+    (:meth:`~repro.core.allocation.FleetAllocator.lane_policy_state`), and
+    the accounting carried into the next shard's records (cursor, times,
+    records, accuracy timeline, the virtual clock at capture).
+    """
+
+    key: object
+    params: object  # host (numpy) student tree
+    opt: object  # host optimizer tree
+    buffer: dict  # SampleBuffer.state_dict()
+    rng_state: dict  # np bit-generator state
+    policy: object  # deep-copied lane AllocationPolicy
+    lane_state: tuple  # FleetAllocator.lane_policy_state(i)
+    decision: object  # the lane's current AllocationDecision
+    eval_cursor: float
+    retrain_time: float
+    label_time: float
+    drift_events: int
+    records: List[PhaseRecord]
+    timeline: List  # accuracy timeline accrued so far
+    clock: float  # virtual clock at capture (phase boundary)
 
 
 @dataclasses.dataclass
@@ -160,100 +200,194 @@ class FleetSession(CLSession):
         :class:`DriftStream`s (each wrapped in its own lane pipeline) or
         ready :class:`FramePipeline` handles, freely mixed. A single stream
         is a 1-lane fleet (bit-identical to :class:`CLSession`)."""
+        run = self.open_run(streams, duration, observers)
+        try:
+            while run.step():
+                pass
+            return run.finalize()
+        finally:
+            run.close()
+
+    def open_run(self, streams: Union[DriftStream, FramePipeline,
+                                      Sequence[Union[DriftStream,
+                                                     FramePipeline]], None]
+                 = None,
+                 duration: Optional[float] = None,
+                 observers: Sequence[PhaseObserver] = (),
+                 clock: float = 0.0) -> "FleetRun":
+        """Open the fleet loop as a phase-steppable :class:`FleetRun` —
+        the handle the manager tier drives: ``step()`` one phase at a
+        time, with lane admission/migration/checkpointing between steps.
+        ``streams`` may be ``None``/empty (an empty shard populated by
+        ``attach_lane``, e.g. the fault-recovery restore path; requires an
+        explicit ``duration``). ``run()`` is exactly open → step* →
+        finalize → close."""
+        streams = [] if streams is None else streams
         if isinstance(streams, (DriftStream, FramePipeline)):
             streams = [streams]
-        pipes: List[Tuple[FramePipeline, bool]] = []
+        pipes: List[FramePipeline] = []
+        owned: List[FramePipeline] = []
         for s in streams:
             if isinstance(s, FramePipeline):
-                pipes.append((s, False))
+                pipes.append(s)
             else:
-                pipes.append((FramePipeline(
-                    s, speculative=self.speculative_frames), True))
+                pipe = FramePipeline(s, speculative=self.speculative_frames)
+                pipes.append(pipe)
+                owned.append(pipe)
         try:
-            return self._run_fleet([p for p, _ in pipes], duration,
-                                   observers)
-        finally:
-            for pipe, own in pipes:
-                if own:
-                    pipe.close()
+            run = FleetRun(self, pipes, duration, observers, clock=clock)
+        except Exception:
+            for pipe in owned:
+                pipe.close()
+            raise
+        run._owned = owned
+        return run
 
-    def _run_fleet(self, pipes: List[FramePipeline],
-                   duration: Optional[float],
-                   observers: Sequence[PhaseObserver]) -> FleetResult:
-        hp = self.hp
+
+class FleetRun:
+    """One live fleet phase loop, opened phase-steppable.
+
+    This is the engine loop of :meth:`FleetSession.run` hoisted into an
+    object so the manager tier can interleave *membership changes* with
+    phases: :meth:`step` executes exactly one fleet phase (one shared
+    :class:`~repro.core.dispatch.PhasePlan`), and between steps — at
+    phase boundaries, the only points where no plan is in flight — lanes
+    can be snapshotted (:meth:`snapshot_lane`), detached
+    (:meth:`detach_lane`) and attached (:meth:`attach_lane`: fresh camera
+    or :class:`LaneSnapshot` restore). A run executed as pure
+    step-until-done reproduces the pre-manager monolithic loop
+    bit-for-bit — the degeneracy goldens of tests/test_fleet.py pin that
+    — because the loop body below *is* the old loop body, with locals
+    hoisted to attributes in the same accumulation order.
+    """
+
+    def __init__(self, session: FleetSession, pipes: List[FramePipeline],
+                 duration: Optional[float] = None,
+                 observers: Sequence[PhaseObserver] = (),
+                 clock: float = 0.0):
+        self.session = session
+        hp = session.hp
         n = len(pipes)
-        duration = duration or min(p.duration for p in pipes)
-        observers = self._observers + list(observers)
+        if duration is None:
+            if not pipes:
+                raise ValueError(
+                    "an empty FleetRun needs an explicit duration")
+            duration = min(p.duration for p in pipes)
+        self.duration = duration
+        self.observers = session._observers + list(observers)
+        self.clock = clock
+        self.done = False
+        self.fleet_phase_log: List[dict] = []
+        self._owned: List[FramePipeline] = []
+        self._lane_seq = n  # monotonic rng-seed cursor across admissions
+        if n == 0:
+            session.fleet_allocator.begin_empty()
+            self.fleet_dec: Optional[FleetDecision] = None
+            self.decisions: List[AllocationDecision] = []
+            self.lanes: List[_StreamLane] = []
+            self._spatial = None
+            return
         # One FleetDecision per phase: N per-lane temporal planes + ONE
         # fleet spatial plane (rows already resolved by the row policy).
-        fleet_dec: FleetDecision = \
-            self.fleet_allocator.initial_fleet_decision(n)
-        decisions = list(fleet_dec.lane_decisions)
-
-        lanes = [
+        self.fleet_dec = session.fleet_allocator.initial_fleet_decision(n)
+        self.decisions = list(self.fleet_dec.lane_decisions)
+        self.lanes = [
             _StreamLane(
                 index=i, pipe=pipe,
                 buffer=SampleBuffer(hp.c_b, seed=3),
-                sink=_ScoreSink(self.inference,
-                                fuse=self.dispatcher.concurrent),
-                rng=np.random.default_rng(self.seed + i),
+                sink=_ScoreSink(session.inference,
+                                fuse=session.dispatcher.concurrent),
+                rng=np.random.default_rng(session.seed + i),
                 params=jax.tree_util.tree_map(
-                    lambda x: x.copy(), self.student_params),
-                opt=None, serving=None, decision=decisions[i])
+                    lambda x: x.copy(), session.student_params),
+                opt=None, serving=None, decision=self.decisions[i])
             for i, pipe in enumerate(pipes)
         ]
-        spatial = fleet_dec.spatial
-        r_tsa, r_bsa = spatial.rows_tsa, spatial.rows_bsa
-        for lane in lanes:
-            lane.opt = self.retrain.init_state(lane.params)
+        spatial = self.fleet_dec.spatial
+        self._spatial = spatial
+        for lane in self.lanes:
+            lane.opt = session.retrain.init_state(lane.params)
             # The B-SA serves all N streams: per-stream sustainable frame
             # fraction divides its throughput by the fleet's aggregate fps.
-            lane.keep_frac = self.inference.plan_keep_frac(spatial,
-                                                           hp.fps * n)
-            lane.serving = self.inference.serving_params(
+            lane.keep_frac = session.inference.plan_keep_frac(spatial,
+                                                              hp.fps * n)
+            lane.serving = session.inference.serving_params(
                 lane.params, spatial.precisions.inference)
-        clock = 0.0
-        fleet_phase_log: List[dict] = []
 
-        def score_lane_until(lane: _StreamLane, t_end: float, serving,
-                             plan) -> None:
-            """Queue lane-``i`` student-accuracy scoring on
-            [lane.eval_cursor, t_end): that stream's B-SA serving program.
-            The generalization of the session's ``score_until`` — same
-            guard, same subsampling, same charge, per lane."""
-            if t_end <= lane.eval_cursor + 1e-9:
-                return
-            n_eval = max(1, int((t_end - lane.eval_cursor) * self.eval_fps))
-            if plan is not None:
-                x, y = plan.fetch(lane.eval_cursor, t_end,
-                                  max_frames=n_eval, lane=lane.index)
-                plan.charge(
-                    "b_sa",
-                    len(x) * self.inference.plan_time_per_sample(spatial),
-                    lane=lane.index)
-            else:
-                x, y = lane.pipe.frames(lane.eval_cursor, t_end,
-                                        max_frames=n_eval)
-            lane.sink.add(t_end, x, y, lane.keep_frac, serving)
-            lane.eval_cursor = t_end
+    @property
+    def n_lanes(self) -> int:
+        return len(self.lanes)
 
-        while clock < duration:
+    def close(self) -> None:
+        """Close the pipelines this run owns (wrapped from raw streams)."""
+        for pipe in self._owned:
+            pipe.close()
+        self._owned = []
+
+    # ------------------------------------------------------------- scoring
+    def _score_lane_until(self, lane: _StreamLane, t_end: float, serving,
+                          plan) -> None:
+        """Queue lane-``i`` student-accuracy scoring on
+        [lane.eval_cursor, t_end): that stream's B-SA serving program.
+        The generalization of the session's ``score_until`` — same
+        guard, same subsampling, same charge, per lane."""
+        session = self.session
+        if t_end <= lane.eval_cursor + 1e-9:
+            return
+        n_eval = max(1, int((t_end - lane.eval_cursor) * session.eval_fps))
+        if plan is not None:
+            x, y = plan.fetch(lane.eval_cursor, t_end,
+                              max_frames=n_eval, lane=lane.index)
+            plan.charge(
+                "b_sa",
+                len(x) * session.inference.plan_time_per_sample(
+                    self._spatial),
+                lane=lane.index)
+        else:
+            x, y = lane.pipe.frames(lane.eval_cursor, t_end,
+                                    max_frames=n_eval)
+        lane.sink.add(t_end, x, y, lane.keep_frac, serving)
+        lane.eval_cursor = t_end
+
+    # -------------------------------------------------------------- phases
+    def step(self) -> bool:
+        """Execute ONE fleet phase. Returns False (and marks the run done)
+        when the virtual clock has reached the duration — including the
+        mid-phase exit, where the phase's plan is finished early — or when
+        the run has no lanes."""
+        if self.done:
+            return False
+        if not self.lanes or self.clock >= self.duration:
+            self.done = True
+            return False
+        session = self.session
+        hp = session.hp
+        duration = self.duration
+        lanes = self.lanes
+        n = len(lanes)
+        pipes = [lane.pipe for lane in lanes]
+        fleet_dec = self.fleet_dec
+        decisions = self.decisions
+        clock = self.clock
+
+        if True:  # one while-body iteration of the pre-manager loop
             phase_start = clock
             spatial = fleet_dec.spatial
+            self._spatial = spatial
             temporal = fleet_dec.temporal
             r_tsa, r_bsa = spatial.rows_tsa, spatial.rows_bsa
             if spatial.refission:  # the fleet plane's re-fission intent
-                self._repartition(r_bsa)
+                session._repartition(r_bsa)
             for lane in lanes:
                 lane.decision = decisions[lane.index]
-                lane.keep_frac = self.inference.plan_keep_frac(
+                lane.keep_frac = session.inference.plan_keep_frac(
                     spatial, hp.fps * n)
             # ---- Plan: one shared ledger for the fleet phase; the plan
             # consumes the fleet decision's per-lane views — rotating every
             # lane's speculation, pre-sized with its temporal budget. ----
-            plan = self.dispatcher.begin_phase(
+            plan = session.dispatcher.begin_phase(
                 clock, pipes, decisions=fleet_dec.per_lane(),
-                fps=hp.fps if self.decision_aware_spec else None)
+                fps=hp.fps if session.decision_aware_spec else None)
             for lane in lanes:
                 lane.spec_seen = (lane.pipe.hits, lane.pipe.misses)
                 lane.valid_h = lane.yv = None
@@ -269,31 +403,32 @@ class FleetSession(CLSession):
                         and t_lane.retrain_samples > 0):
                     xt, yt, xv, yv = lane.buffer.get_data(
                         t_lane.retrain_samples, t_lane.valid_samples)
-                    lane.params, lane.opt, n_batches = self.retrain.fit(
+                    lane.params, lane.opt, n_batches = session.retrain.fit(
                         lane.params, lane.opt, xt, yt, lane.rng,
                         epochs=t_lane.retrain_epochs)
-                    t_phase = n_batches * self.retrain.plan_time_per_batch(
+                    t_phase = n_batches * session.retrain.plan_time_per_batch(
                         spatial)
                     plan.charge("t_sa", t_phase, lane=lane.index)
                     lane.retrain_time += t_phase
-                    lane.serving = self.inference.serving_params(
+                    lane.serving = session.inference.serving_params(
                         lane.params, spatial.precisions.inference)
                     lane.yv = yv
-                    v_role = ("b_sa" if self.dispatcher.concurrent
+                    v_role = ("b_sa" if session.dispatcher.concurrent
                               else "t_sa")
                     lane.valid_h = plan.dispatch(
                         v_role, "valid",
                         lambda s=lane.serving, v=xv:
-                        self.inference.predict_async(s, v),
-                        cost_s=len(xv) * self.inference.plan_time_per_sample(
+                        session.inference.predict_async(s, v),
+                        cost_s=len(xv) * session.inference.plan_time_per_sample(
                             spatial, role=v_role),
                         lane=lane.index)
             for lane in lanes:
-                score_lane_until(lane, min(plan.now(), duration),
-                                 lane.serving, plan)
+                self._score_lane_until(lane, min(plan.now(), duration),
+                                       lane.serving, plan)
             if plan.now() >= duration:
-                clock = plan.finish()
-                break
+                self.clock = plan.finish()
+                self.done = True
+                return False
 
             # -------- Labeling (lines 8-10): bursts fetched per lane, then
             # batched across the fleet on the shared T-SA --------
@@ -312,15 +447,15 @@ class FleetSession(CLSession):
             # microbatches on the shared T-SA).
             costs = [
                 temporal[lane.index].total_label_samples
-                * self.labeling.plan_time_per_sample(spatial)
+                * session.labeling.plan_time_per_sample(spatial)
                 for lane in lanes]
             t_run = plan.now()
             handles = plan.dispatch_multi(
                 "t_sa", "label",
-                lambda: self.labeling.label_fleet_async(
-                    self.teacher_params, [ln.x_l for ln in lanes],
+                lambda: session.labeling.label_fleet_async(
+                    session.teacher_params, [ln.x_l for ln in lanes],
                     spatial.precisions.labeling,
-                    microbatch=self._label_microbatch),
+                    microbatch=session._label_microbatch),
                 costs=costs, lanes=[lane.index for lane in lanes])
             for lane, handle, cost in zip(lanes, handles, costs):
                 # Replay the plan's serial accumulation so each lane's
@@ -334,13 +469,13 @@ class FleetSession(CLSession):
                 lane.pred_l_h = plan.dispatch(
                     "b_sa", "acc_label",
                     lambda s=lane.serving, x=lane.x_l:
-                    self.inference.predict_async(s, x),
+                    session.inference.predict_async(s, x),
                     cost_s=len(lane.x_l)
-                    * self.inference.plan_time_per_sample(spatial),
+                    * session.inference.plan_time_per_sample(spatial),
                     lane=lane.index)
             for lane in lanes:
-                score_lane_until(lane, min(plan.now(), duration),
-                                 lane.serving, plan)
+                self._score_lane_until(lane, min(plan.now(), duration),
+                                       lane.serving, plan)
 
             # Fixed-window pacing, per lane temporal plane (the pacing
             # floor is the max boundary any paced lane declares).
@@ -349,15 +484,17 @@ class FleetSession(CLSession):
                     w = temporal[lane.index].pace_window_s
                     next_boundary = (int(phase_start / w) + 1) * w
                     if plan.now() < next_boundary:
-                        score_lane_until(lane, min(next_boundary, duration),
-                                         lane.serving, plan)
+                        self._score_lane_until(
+                            lane, min(next_boundary, duration),
+                            lane.serving, plan)
                         plan.pad_to(next_boundary)
 
             # ---- Collect: the fleet phase-end barrier. ----
             clock = plan.finish()
+            self.clock = clock
             for lane in lanes:
-                score_lane_until(lane, min(clock, duration), lane.serving,
-                                 None)
+                self._score_lane_until(lane, min(clock, duration),
+                                       lane.serving, None)
                 if lane.valid_h is not None:
                     lane.acc_v = float(
                         (lane.valid_h.collect() == lane.yv).mean())
@@ -377,13 +514,13 @@ class FleetSession(CLSession):
                               t=clock, phase_start=phase_start,
                               retrain_time=lane.retrain_time,
                               label_time=lane.label_time,
-                              drifted=self.fleet_allocator.policies[
+                              drifted=session.fleet_allocator.policies[
                                   lane.index].observe_drift(
                                       lane.acc_l, lane.acc_v, clock))
                 for lane in lanes]
-            next_fleet = self.fleet_allocator.next_fleet_decision(feedbacks)
+            next_fleet = session.fleet_allocator.next_fleet_decision(feedbacks)
             next_decisions = list(next_fleet.lane_decisions)
-            fleet_phase_log.append({
+            self.fleet_phase_log.append({
                 "t": clock, "phase_start": phase_start,
                 "t_tsa": plan.t_tsa, "t_bsa": plan.t_bsa,
                 "rows_tsa": r_tsa, "rows_bsa": r_bsa,
@@ -408,18 +545,27 @@ class FleetSession(CLSession):
                     spec_misses=lane.pipe.misses - lane.spec_seen[1],
                     stream=lane.index)
                 lane.records.append(record)
-                for obs in observers:
+                for obs in self.observers:
                     obs(record)
-            fleet_dec = next_fleet
-            decisions = next_decisions
+            self.fleet_dec = next_fleet
+            self.decisions = next_decisions
+        return True
 
+        raise AssertionError("unreachable")
+
+    def finalize(self) -> FleetResult:
+        """Score every lane to the duration and assemble the
+        :class:`FleetResult` — the post-loop tail of the pre-manager run.
+        Migrated lanes prepend the accuracy timeline they accrued on
+        previous shards."""
+        session = self.session
         results = []
-        for lane in lanes:
-            score_lane_until(lane, duration, lane.serving, None)
-            acc_timeline = lane.sink.timeline()
+        for lane in self.lanes:
+            self._score_lane_until(lane, self.duration, lane.serving, None)
+            acc_timeline = lane.timeline_prefix + lane.sink.timeline()
             accs = [a for _, a in acc_timeline]
             results.append(CLResult(
-                name=f"{self.fleet_allocator.name}[{lane.index}]",
+                name=f"{session.fleet_allocator.name}[{lane.index}]",
                 accuracy_timeline=acc_timeline,
                 phase_log=[r.as_log_entry() for r in lane.records],
                 avg_accuracy=float(np.mean(accs)) if accs else 0.0,
@@ -429,13 +575,150 @@ class FleetSession(CLSession):
                 records=lane.records,
             ))
         return FleetResult(
-            name=self.fleet_allocator.name,
+            name=session.fleet_allocator.name,
             streams=results,
-            fleet_avg_accuracy=float(
-                np.mean([r.avg_accuracy for r in results])),
-            fleet_phase_log=fleet_phase_log,
+            fleet_avg_accuracy=(float(
+                np.mean([r.avg_accuracy for r in results]))
+                if results else 0.0),
+            fleet_phase_log=self.fleet_phase_log,
             drift_events=sum(r.drift_events for r in results),
         )
+
+    # -------------------------------------------- membership (manager tier)
+    # All membership operations happen BETWEEN steps — at phase boundaries,
+    # where no PhasePlan is in flight and every lane's device work has been
+    # collected — so a snapshot is a consistent cut of the lane.
+
+    def snapshot_lane(self, index: int) -> LaneSnapshot:
+        """Freeze lane ``index`` at the current phase boundary. Side-effect
+        free on the live lane: params/opt are host-copied, RNG/buffer
+        states and the lane policy deep-copied — continuing the run does
+        not mutate the snapshot, which is what makes periodic per-lane
+        checkpointing safe."""
+        lane = self.lanes[index]
+        alloc = self.session.fleet_allocator
+
+        def host(tree):
+            return jax.tree_util.tree_map(lambda x: np.array(x), tree)
+
+        return LaneSnapshot(
+            key=lane.key,
+            params=host(lane.params),
+            opt=host(lane.opt),
+            buffer=lane.buffer.state_dict(),
+            rng_state=copy.deepcopy(lane.rng.bit_generator.state),
+            policy=copy.deepcopy(alloc.policies[index]),
+            lane_state=copy.deepcopy(alloc.lane_policy_state(index)),
+            decision=lane.decision,
+            eval_cursor=lane.eval_cursor,
+            retrain_time=lane.retrain_time,
+            label_time=lane.label_time,
+            drift_events=lane.drift_events,
+            records=list(lane.records),
+            timeline=lane.timeline_prefix + lane.sink.timeline(),
+            clock=self.clock,
+        )
+
+    def attach_lane(self, source: Union[DriftStream, FramePipeline],
+                    key: object = None,
+                    snapshot: Optional[LaneSnapshot] = None,
+                    own: Optional[bool] = None) -> _StreamLane:
+        """Admit a lane at the current phase boundary — a fresh camera
+        (``snapshot=None``: new lane from the session's pretrained
+        student, scoring from the current clock) or a
+        :class:`LaneSnapshot` restore (migration / fault recovery: the
+        lane resumes with the snapshot's weights, buffer, RNG and policy
+        state). Raw streams are wrapped in an owned pipeline; pass
+        ``own=True`` to hand over an existing pipeline's ownership too."""
+        session = self.session
+        hp = session.hp
+        alloc = session.fleet_allocator
+        if isinstance(source, FramePipeline):
+            pipe = source
+            if own:
+                self._owned.append(pipe)
+        else:
+            pipe = FramePipeline(source,
+                                 speculative=session.speculative_frames)
+            self._owned.append(pipe)
+        index = len(self.lanes)
+        sink = _ScoreSink(session.inference,
+                          fuse=session.dispatcher.concurrent)
+        if snapshot is None:
+            alloc.admit_lane()
+            lane = _StreamLane(
+                index=index, pipe=pipe,
+                buffer=SampleBuffer(hp.c_b, seed=3), sink=sink,
+                rng=np.random.default_rng(session.seed + self._lane_seq),
+                params=jax.tree_util.tree_map(
+                    lambda x: x.copy(), session.student_params),
+                opt=None, serving=None, decision=None, key=key)
+            lane.opt = session.retrain.init_state(lane.params)
+            lane.eval_cursor = self.clock  # score from the join point
+        else:
+            alloc.admit_lane(policy=copy.deepcopy(snapshot.policy),
+                             lane_state=copy.deepcopy(snapshot.lane_state))
+            buffer = SampleBuffer(hp.c_b, seed=3)
+            buffer.load_state_dict(snapshot.buffer)
+            rng = np.random.default_rng(0)
+            rng.bit_generator.state = copy.deepcopy(snapshot.rng_state)
+            lane = _StreamLane(
+                index=index, pipe=pipe, buffer=buffer, sink=sink, rng=rng,
+                params=rehome_tree(snapshot.params),
+                opt=rehome_tree(snapshot.opt),
+                serving=None, decision=snapshot.decision,
+                key=snapshot.key if key is None else key)
+            lane.eval_cursor = snapshot.eval_cursor
+            lane.retrain_time = snapshot.retrain_time
+            lane.label_time = snapshot.label_time
+            lane.drift_events = snapshot.drift_events
+            lane.records = list(snapshot.records)
+            lane.timeline_prefix = list(snapshot.timeline)
+        self._lane_seq += 1
+        self.lanes.append(lane)
+        self._refresh_decisions()
+        spatial = self.fleet_dec.spatial
+        if self._spatial is None:
+            self._spatial = spatial
+        lane.keep_frac = session.inference.plan_keep_frac(
+            spatial, hp.fps * len(self.lanes))
+        lane.serving = session.inference.serving_params(
+            lane.params, spatial.precisions.inference)
+        if lane.decision is None:
+            lane.decision = self.decisions[lane.index]
+        if self.done and self.clock < self.duration:
+            self.done = False  # an emptied run can be repopulated
+        return lane
+
+    def detach_lane(self, index: int) -> Tuple[LaneSnapshot, FramePipeline]:
+        """Remove lane ``index`` at the current phase boundary, returning
+        its :class:`LaneSnapshot` and its pipeline (which keeps the lane's
+        speculation state — hand both to ``attach_lane`` on the target
+        shard for a bit-identical resume). Surviving lanes are re-indexed
+        compactly; ownership of the pipe transfers to the caller."""
+        snap = self.snapshot_lane(index)
+        lane = self.lanes.pop(index)
+        self.session.fleet_allocator.remove_lane(index)
+        if lane.pipe in self._owned:
+            self._owned.remove(lane.pipe)
+        for j, ln in enumerate(self.lanes):
+            ln.index = j
+        if self.lanes:
+            self._refresh_decisions()
+        else:
+            self.fleet_dec = None
+            self.decisions = []
+        return snap, lane.pipe
+
+    def _refresh_decisions(self) -> None:
+        """Re-emit the fleet decision for the current membership (see
+        :meth:`~repro.core.allocation.FleetAllocator
+        .rebuild_fleet_decision`)."""
+        self.fleet_dec = \
+            self.session.fleet_allocator.rebuild_fleet_decision()
+        self.decisions = list(self.fleet_dec.lane_decisions)
+        for lane, d in zip(self.lanes, self.decisions):
+            lane.decision = d
 
 
 @dataclasses.dataclass

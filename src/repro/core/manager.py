@@ -1,0 +1,786 @@
+"""FleetManager — the sharded, elastic, fault-tolerant fleet-of-fleets tier.
+
+DaCapo's deployment story is one autonomous system on one spatially-
+partitioned accelerator; the ROADMAP north star is production scale —
+thousands of fleets, millions of streams — which needs the tier the paper
+never did: sharding, placement, failure recovery. Cross-camera systems
+like ECCO regroup cameras by context, and SoC-edge systems like
+Legilimens assume devices come and go (PAPERS.md); both presuppose the
+admission/migration/recovery machinery this module provides.
+
+Architecture (see ROADMAP.md):
+
+* a **shard** is one :class:`~repro.core.fleet.FleetSession` on its own
+  mesh/sub-accelerator, opened phase-steppable as a
+  :class:`~repro.core.fleet.FleetRun` — the manager never reaches inside
+  a shard's phase; it acts only at phase boundaries, where no
+  :class:`~repro.core.dispatch.PhasePlan` is in flight;
+* the **manager loop** is round-based: each round, every live shard
+  executes one fleet phase; between rounds the manager checkpoints lanes
+  (per-lane :class:`~repro.checkpoint.CheckpointManager` directories),
+  admits due cameras, and migrates lanes per its placement policy;
+* **lane admission** — a camera joining mid-run is placed on the shard
+  the :class:`PlacementPolicy` picks (``headroom``: most T-SA headroom);
+* **live lane migration** — a lane that drifts hot on an oversubscribed
+  shard is frozen into a :class:`~repro.core.fleet.LaneSnapshot` (student
+  weights + optimizer + :class:`~repro.core.sample_buffer.SampleBuffer` +
+  policy/detector state) and re-homed, resuming *bit-identically*: the
+  snapshot carries every bit of lane state, and the lane's pipeline moves
+  with it;
+* **fault tolerance** — a simulated accelerator loss
+  (:class:`~repro.runtime.fault.FailureInjector`, probed per round with
+  ``key=shard_index``) kills a shard: its lanes restore from their last
+  durable per-lane checkpoint (host arrays re-homed onto the surviving
+  shard's devices via :func:`~repro.runtime.elastic.rehome_tree` — the
+  restore half of an ``elastic_data_axis``-style shrink) and re-home
+  across survivors, with ``recovery_cost_s`` per lane charged explicitly
+  to the manager ledger;
+* the **virtual-clock ledger is conserved**: every phase's T-SA/B-SA
+  seconds are charged once to the owning shard and once to the manager,
+  so ``manager.t_tsa == Σ shard.t_tsa`` (to float re-association) and the
+  only extra manager-level charge is the explicit recovery cost;
+* each round is recorded as a :class:`~repro.core.decision.ManagerDecision`
+  — the per-shard tuple of :class:`~repro.core.decision.FleetDecision`s
+  plus the round's :class:`~repro.core.decision.PlacementAction`s — the
+  fleet decision generalized one tier up.
+
+Degeneracy contract, continuing PRs 4–5: a **1-shard FleetManager is
+bit-identical to a bare FleetSession** (same records, timelines, ledger;
+both dispatch modes) — the manager opens the shard's run through the same
+:meth:`~repro.core.fleet.FleetSession.open_run` path ``run()`` uses, and
+checkpointing is side-effect free on live lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.decision import ManagerDecision, PlacementAction
+from repro.core.fleet import (
+    FleetResult,
+    FleetRun,
+    FleetSession,
+    FleetSpec,
+    LaneSnapshot,
+)
+from repro.core.session import CLResult
+from repro.data.pipeline import FramePipeline
+from repro.runtime.fault import FailureInjector
+
+
+# --------------------------------------------------------------- shard views
+@dataclasses.dataclass(frozen=True)
+class ShardView:
+    """Frozen per-shard stats a placement policy conditions on."""
+
+    index: int
+    alive: bool
+    done: bool
+    n_lanes: int
+    clock: float
+    t_tsa: float  # accumulated T-SA seconds on this shard
+    recent_t_tsa: float  # last phase's T-SA seconds (headroom proxy)
+    drifted_lanes: int  # lanes whose latest phase fired drift
+
+    @property
+    def placeable(self) -> bool:
+        return self.alive and not self.done
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneView:
+    """Frozen per-lane stats for migration decisions."""
+
+    shard: int
+    index: int
+    key: object
+    drifted: bool  # latest phase fired drift
+    drift_events: int
+
+
+# --------------------------------------------------------- placement policies
+class PlacementPolicy:
+    """Pluggable lane-placement policy: where admitted/re-homed lanes land
+    and which lanes migrate, mirroring the
+    :class:`~repro.core.decision.FleetRowPolicy` registry pattern —
+    ``PlacementPolicy("headroom", **kwargs)`` dispatches through
+    :data:`PLACEMENT_POLICIES` (subclasses construct directly), unknown
+    kwargs are rejected, :meth:`reset` is called once per manager run.
+    """
+
+    name = "base"
+
+    def __new__(cls, spec: Optional[str] = None, **kwargs):
+        if cls is PlacementPolicy:
+            key = spec or "headroom"
+            try:
+                sub = PLACEMENT_POLICIES[key]
+            except KeyError:
+                raise KeyError(
+                    f"unknown placement policy {key!r}; "
+                    f"known: {sorted(PLACEMENT_POLICIES)}") from None
+            return super().__new__(sub)
+        return super().__new__(cls)
+
+    def __init__(self, spec: Optional[str] = None, **kwargs):
+        # ``spec`` is the registry key consumed by __new__; unknown kwargs
+        # are rejected, not swallowed — a typo'd knob must not silently
+        # measure default behavior.
+        del spec
+        if kwargs:
+            raise TypeError(
+                f"{type(self).__name__} got unexpected keyword "
+                f"arguments: {sorted(kwargs)}")
+
+    def reset(self, n_shards: int) -> None:
+        """Fresh per-run state (cursors etc.)."""
+
+    def place(self, views: Sequence[ShardView]) -> int:
+        """Shard index for a new or re-homed lane. At least one view is
+        guaranteed placeable."""
+        raise NotImplementedError
+
+    def migrate(self, views: Sequence[ShardView],
+                lanes: Sequence[LaneView]
+                ) -> Optional[Tuple[LaneView, int]]:
+        """Propose at most one migration: (lane, target shard index), or
+        None. Default: placement-only policies never migrate."""
+        return None
+
+
+class StaticPlacementPolicy(PlacementPolicy):
+    """Round-robin admission over placeable shards, never migrates — the
+    no-elasticity baseline the manager bench compares against."""
+
+    name = "static"
+
+    def __init__(self, spec: Optional[str] = None):
+        super().__init__(spec)
+        self._cursor = 0
+
+    def reset(self, n_shards: int) -> None:
+        self._cursor = 0
+
+    def place(self, views: Sequence[ShardView]) -> int:
+        order = [v for v in views if v.placeable]
+        pick = order[self._cursor % len(order)]
+        self._cursor += 1
+        return pick.index
+
+
+class HeadroomPlacementPolicy(PlacementPolicy):
+    """Admit onto the shard with the most T-SA headroom (fewest lanes,
+    then least recent T-SA time); migrate a drifted lane off an
+    oversubscribed shard when a strictly less-loaded shard exists.
+
+    The migration trigger is the DaCapo contention story one tier up: a
+    drifting lane means an N_ldd labeling burst plus buffer-refill
+    retraining on its shard's single T-SA — if another shard's T-SA is
+    sitting idle, moving the hot lane buys recovery time on the target
+    *and* serving time back on the source. ``min_gap`` is the load gap
+    (in lanes) required before a move fires (hysteresis against
+    ping-ponging)."""
+
+    name = "headroom"
+
+    def __init__(self, spec: Optional[str] = None, *, min_gap: int = 2):
+        super().__init__(spec)
+        self.min_gap = min_gap
+
+    def place(self, views: Sequence[ShardView]) -> int:
+        order = sorted((v for v in views if v.placeable),
+                       key=lambda v: (v.n_lanes, v.recent_t_tsa, v.index))
+        return order[0].index
+
+    def migrate(self, views, lanes):
+        placeable = [v for v in views if v.placeable]
+        if len(placeable) < 2:
+            return None
+        # Busiest shard that has a drifted lane and >= 2 lanes.
+        sources = sorted(
+            (v for v in placeable
+             if v.n_lanes >= 2 and v.drifted_lanes > 0),
+            key=lambda v: (-v.recent_t_tsa, -v.n_lanes, v.index))
+        for src in sources:
+            targets = sorted(
+                (v for v in placeable if v.index != src.index),
+                key=lambda v: (v.n_lanes, v.recent_t_tsa, v.index))
+            tgt = targets[0]
+            if src.n_lanes - tgt.n_lanes < self.min_gap:
+                continue  # not oversubscribed enough to pay a move
+            for lane in lanes:
+                if lane.shard == src.index and lane.drifted:
+                    return lane, tgt.index
+        return None
+
+
+class DriftPackPlacementPolicy(PlacementPolicy):
+    """Consolidate drifting lanes onto one shard: admissions land on the
+    *quietest* shard (fewest drifted lanes), and a drifted lane migrates
+    onto the shard already owning the most drifted lanes — packing the
+    retraining-heavy lanes so their N_ldd bursts share one T-SA while the
+    other shards' B-SAs serve healthy lanes undisturbed."""
+
+    name = "drift-pack"
+
+    def place(self, views: Sequence[ShardView]) -> int:
+        order = sorted((v for v in views if v.placeable),
+                       key=lambda v: (v.drifted_lanes, v.n_lanes, v.index))
+        return order[0].index
+
+    def migrate(self, views, lanes):
+        placeable = [v for v in views if v.placeable]
+        if len(placeable) < 2:
+            return None
+        hot = sorted(placeable,
+                     key=lambda v: (-v.drifted_lanes, v.n_lanes, v.index))[0]
+        if hot.drifted_lanes == 0:
+            return None  # nothing drifting anywhere
+        for lane in lanes:
+            if lane.drifted and lane.shard != hot.index:
+                src = next(v for v in placeable if v.index == lane.shard)
+                if src.n_lanes >= 2:
+                    return lane, hot.index
+        return None
+
+
+PLACEMENT_POLICIES: Dict[str, Type[PlacementPolicy]] = {
+    "static": StaticPlacementPolicy,
+    "headroom": HeadroomPlacementPolicy,
+    "drift-pack": DriftPackPlacementPolicy,
+}
+
+
+def make_placement_policy(policy, **kwargs) -> PlacementPolicy:
+    """Resolve a placement policy from a registry name, class, or ready
+    instance."""
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    if isinstance(policy, str):
+        return PlacementPolicy(policy, **kwargs)
+    return policy(**kwargs)
+
+
+# ------------------------------------------------------ durable lane snapshot
+def snapshot_to_state(snap: LaneSnapshot) -> Dict[str, object]:
+    """Encode a :class:`LaneSnapshot` as the flat array tree
+    :class:`~repro.checkpoint.CheckpointManager` persists: the large
+    arrays (params / opt / buffer samples) as npz leaves, everything else
+    — RNG states, the pickled lane policy, records, timeline — as one
+    opaque ``aux`` uint8 blob, so the checkpoint round-trips bit-exactly
+    without ``allow_pickle`` on the array file."""
+    bx, by = snap.buffer["x"], snap.buffer["y"]
+    aux = {
+        "key": snap.key,
+        "rng_state": snap.rng_state,
+        "policy": snap.policy,
+        "lane_state": snap.lane_state,
+        "decision": snap.decision,
+        "eval_cursor": snap.eval_cursor,
+        "retrain_time": snap.retrain_time,
+        "label_time": snap.label_time,
+        "drift_events": snap.drift_events,
+        "records": snap.records,
+        "timeline": snap.timeline,
+        "clock": snap.clock,
+        "buffer_meta": {"capacity": snap.buffer["capacity"],
+                        "rng_state": snap.buffer["rng_state"]},
+    }
+    blob = np.frombuffer(pickle.dumps(aux), dtype=np.uint8).copy()
+    return {
+        "params": snap.params,
+        "opt": snap.opt,
+        "buffer_x": bx if bx is not None else np.zeros((0,), np.float32),
+        "buffer_y": by if by is not None else np.zeros((0,), np.int64),
+        "aux": blob,
+    }
+
+
+def state_to_snapshot(state: Dict[str, object]) -> LaneSnapshot:
+    """Decode :func:`snapshot_to_state` (the exact inverse)."""
+    aux = pickle.loads(np.asarray(state["aux"]).tobytes())
+    bx = np.asarray(state["buffer_x"])
+    by = np.asarray(state["buffer_y"])
+    meta = aux["buffer_meta"]
+    return LaneSnapshot(
+        key=aux["key"],
+        params=state["params"],
+        opt=state["opt"],
+        buffer={"x": None if bx.size == 0 else bx,
+                "y": None if by.size == 0 else by,
+                "capacity": meta["capacity"],
+                "rng_state": meta["rng_state"]},
+        rng_state=aux["rng_state"],
+        policy=aux["policy"],
+        lane_state=aux["lane_state"],
+        decision=aux["decision"],
+        eval_cursor=aux["eval_cursor"],
+        retrain_time=aux["retrain_time"],
+        label_time=aux["label_time"],
+        drift_events=aux["drift_events"],
+        records=aux["records"],
+        timeline=aux["timeline"],
+        clock=aux["clock"],
+    )
+
+
+# ---------------------------------------------------------------- the manager
+@dataclasses.dataclass
+class ManagerEvent:
+    """One entry of the manager's re-homing/recovery timeline."""
+
+    round: int
+    t: float  # manager virtual clock (fleet frontier) at the event
+    kind: str  # "admit" | "migrate" | "fail" | "recover" | "checkpoint"
+    shard: int
+    key: object = None
+    to_shard: Optional[int] = None
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class _Shard:
+    index: int
+    session: FleetSession
+    run: Optional[FleetRun] = None
+    alive: bool = True
+    t_tsa: float = 0.0
+    t_bsa: float = 0.0
+    recent_t_tsa: float = 0.0
+    phases: int = 0
+
+
+@dataclasses.dataclass
+class ManagerResult:
+    """One manager run: per-shard fleet results, flat per-lane lanes, the
+    conserved two-level ledger, and the event/decision timelines."""
+
+    name: str
+    shard_results: List[Optional[FleetResult]]  # None for dead shards
+    lane_results: Dict[object, CLResult]  # key -> final lane result
+    fleet_avg_accuracy: float  # mean over all surviving lanes
+    ledger: Dict[str, float]  # manager level: t_tsa/t_bsa/recovery_cost
+    shard_ledgers: List[Dict[str, float]]
+    events: List[ManagerEvent]
+    decisions: List[ManagerDecision]
+    rounds: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_results)
+
+    def conservation_gap(self) -> float:
+        """|manager T-SA ledger − Σ shard T-SA ledgers| — zero modulo
+        float re-association; recovery cost is charged only at manager
+        level, on top (``ledger['total']``)."""
+        return abs(self.ledger["t_tsa"]
+                   - sum(s["t_tsa"] for s in self.shard_ledgers))
+
+
+class FleetManager:
+    """Owns N shards and runs the fleet-of-fleets phase loop above them.
+
+    ``spec`` is the :class:`~repro.core.fleet.FleetSpec` every shard is
+    built from (one independent :class:`FleetSession` — its own mesh/
+    sub-accelerator — per shard). The manager acts only at phase
+    boundaries: admission, migration, per-lane checkpointing, and
+    fault recovery all happen between :meth:`FleetRun.step` calls.
+
+    ``checkpoint_dir=None`` disables durable checkpoints (recovery then
+    restarts lost lanes fresh from the pretrained student);
+    ``failure_injector`` is probed once per shard per round with
+    ``key=shard_index``; ``recovery_cost_s`` is the explicit manager-level
+    charge per re-homed lane (checkpoint read + re-home + re-jit, in
+    virtual seconds).
+    """
+
+    def __init__(self, spec: FleetSpec, n_shards: int = 2,
+                 placement="headroom",
+                 placement_kwargs: Optional[dict] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1,
+                 migration: bool = True,
+                 migration_cooldown: int = 2,
+                 failure_injector: Optional[FailureInjector] = None,
+                 recovery_cost_s: float = 0.0):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.spec = spec
+        self.placement = make_placement_policy(placement,
+                                               **(placement_kwargs or {}))
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = max(1, checkpoint_every)
+        self.migration = migration
+        self.migration_cooldown = max(0, migration_cooldown)
+        self.failure_injector = failure_injector
+        self.recovery_cost_s = recovery_cost_s
+        self.shards: List[_Shard] = [
+            _Shard(index=i, session=spec.build()) for i in range(n_shards)]
+        self.name = f"manager-{self.placement.name}x{n_shards}"
+        self.events: List[ManagerEvent] = []
+        self.decisions: List[ManagerDecision] = []
+        self.ledger: Dict[str, float] = {
+            "t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0}
+        self._streams: Dict[object, object] = {}  # key -> source stream
+        self._ckpts: Dict[object, CheckpointManager] = {}
+        self._round = 0
+        self._last_migration = -(10 ** 9)
+
+    # ----------------------------------------------------------- pretrained
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def set_pretrained(self, teacher_params, student_params) -> None:
+        """Install the shared pretrained teacher/student on every shard."""
+        for shard in self.shards:
+            shard.session.set_pretrained(teacher_params, student_params)
+
+    # -------------------------------------------------------------- views
+    def _views(self) -> List[ShardView]:
+        views = []
+        for shard in self.shards:
+            run = shard.run
+            drifted = 0
+            if run is not None:
+                drifted = sum(1 for lane in run.lanes
+                              if lane.records and lane.records[-1].drift)
+            views.append(ShardView(
+                index=shard.index, alive=shard.alive,
+                done=(run.done if run is not None else True),
+                n_lanes=(len(run.lanes) if run is not None else 0),
+                clock=(run.clock if run is not None else 0.0),
+                t_tsa=shard.t_tsa, recent_t_tsa=shard.recent_t_tsa,
+                drifted_lanes=drifted))
+        return views
+
+    def _lane_views(self) -> List[LaneView]:
+        lanes = []
+        for shard in self.shards:
+            if not shard.alive or shard.run is None:
+                continue
+            for lane in shard.run.lanes:
+                lanes.append(LaneView(
+                    shard=shard.index, index=lane.index, key=lane.key,
+                    drifted=bool(lane.records and lane.records[-1].drift),
+                    drift_events=lane.drift_events))
+        return lanes
+
+    def _frontier(self) -> float:
+        live = [s.run.clock for s in self.shards
+                if s.alive and s.run is not None and not s.run.done
+                and s.run.lanes]
+        if live:
+            return min(live)
+        any_run = [s.run.clock for s in self.shards if s.run is not None]
+        return max(any_run) if any_run else 0.0
+
+    # ------------------------------------------------------------- ledger
+    def _charge(self, shard: _Shard) -> None:
+        """Charge any newly-logged phases to both ledgers — once to the
+        shard, once to the manager, same numbers: conservation by
+        construction."""
+        log = shard.run.fleet_phase_log
+        for entry in log[shard.phases:]:
+            shard.t_tsa += entry["t_tsa"]
+            shard.t_bsa += entry["t_bsa"]
+            shard.recent_t_tsa = entry["t_tsa"]
+            self.ledger["t_tsa"] += entry["t_tsa"]
+            self.ledger["t_bsa"] += entry["t_bsa"]
+        shard.phases = len(log)
+
+    # -------------------------------------------------------- checkpoints
+    def _ckpt_for(self, key: object) -> Optional[CheckpointManager]:
+        if self.checkpoint_dir is None:
+            return None
+        if key not in self._ckpts:
+            self._ckpts[key] = CheckpointManager(
+                os.path.join(self.checkpoint_dir, f"lane_{key}"),
+                max_to_keep=2)
+        return self._ckpts[key]
+
+    def _checkpoint_lanes(self) -> None:
+        for shard in self.shards:
+            if not shard.alive or shard.run is None or shard.run.done:
+                continue
+            for i, lane in enumerate(shard.run.lanes):
+                mgr = self._ckpt_for(lane.key)
+                if mgr is None:
+                    continue
+                snap = shard.run.snapshot_lane(i)
+                mgr.save(self._round, snapshot_to_state(snap),
+                         metadata={"key": str(lane.key),
+                                   "shard": shard.index,
+                                   "clock": snap.clock})
+        if self.checkpoint_dir is not None:
+            self.events.append(ManagerEvent(
+                round=self._round, t=self._frontier(), kind="checkpoint",
+                shard=-1, detail=f"round {self._round}"))
+
+    def _restore_snapshot(self, key: object) -> Optional[LaneSnapshot]:
+        mgr = self._ckpt_for(key)
+        if mgr is None:
+            return None
+        mgr.wait()  # join any in-flight async save before reading
+        step = mgr.latest_step()
+        if step is None:
+            return None
+        shard = next(s for s in self.shards if s.alive)
+        like = snapshot_to_state(_template_snapshot(shard.session))
+        state, _ = mgr.restore(step, like)
+        return state_to_snapshot(state)
+
+    # ----------------------------------------------------------- recovery
+    def _fail_shard(self, shard: _Shard, reason: str,
+                    placements: List[PlacementAction]) -> None:
+        """Accelerator loss on ``shard``: mark it dead (its accumulated
+        ledger stays — that work happened), restore every lane from its
+        last durable checkpoint (fresh from the pretrained student if it
+        never checkpointed), and re-home across survivors; each re-homed
+        lane costs ``recovery_cost_s`` on the manager ledger."""
+        shard.alive = False
+        t = self._frontier()
+        self.events.append(ManagerEvent(
+            round=self._round, t=t, kind="fail", shard=shard.index,
+            detail=reason))
+        lost = [(lane.key, lane.index) for lane in shard.run.lanes]
+        shard.run.close()
+        shard.run = None
+        survivors = [s for s in self.shards
+                     if s.alive and s.run is not None and not s.run.done]
+        if not survivors:
+            raise RuntimeError(
+                f"shard {shard.index} failed with no surviving shards")
+        for key, _ in lost:
+            snap = self._restore_snapshot(key)
+            views = self._views()
+            target = next(s for s in self.shards
+                          if s.index == self.placement.place(views))
+            # A recovered lane gets a FRESH pipeline over the source
+            # stream — the dead shard's speculation state died with it.
+            pipe = FramePipeline(
+                self._streams[key],
+                speculative=target.session.speculative_frames)
+            target.run.attach_lane(pipe, key=key, snapshot=snap, own=True)
+            self.ledger["recovery_cost"] += self.recovery_cost_s
+            detail = ("restored from checkpoint" if snap is not None
+                      else "no checkpoint; restarted fresh")
+            placements.append(PlacementAction(
+                kind="recover", key=key, to_shard=target.index,
+                from_shard=shard.index, reason=detail))
+            self.events.append(ManagerEvent(
+                round=self._round, t=t, kind="recover", shard=shard.index,
+                key=key, to_shard=target.index, detail=detail))
+
+    # ---------------------------------------------------------- migration
+    def _maybe_migrate(self, placements: List[PlacementAction]) -> None:
+        if not self.migration:
+            return
+        if self._round - self._last_migration < self.migration_cooldown:
+            return
+        proposal = self.placement.migrate(self._views(), self._lane_views())
+        if proposal is None:
+            return
+        lane_view, target_idx = proposal
+        src = self.shards[lane_view.shard]
+        tgt = self.shards[target_idx]
+        snap, pipe = src.run.detach_lane(lane_view.index)
+        tgt.run.attach_lane(pipe, snapshot=snap, own=True)
+        self._last_migration = self._round
+        placements.append(PlacementAction(
+            kind="migrate", key=lane_view.key, to_shard=target_idx,
+            from_shard=src.index, reason="placement-policy migration"))
+        self.events.append(ManagerEvent(
+            round=self._round, t=self._frontier(), kind="migrate",
+            shard=src.index, key=lane_view.key, to_shard=target_idx,
+            detail=f"lane {lane_view.key}: shard {src.index} -> "
+                   f"{target_idx}"))
+
+    # ---------------------------------------------------------------- run
+    def run(self, streams: Union[Sequence, Dict[object, object]],
+            duration: Optional[float] = None,
+            admissions: Sequence[Tuple[float, object, object]] = (),
+            observers: Sequence = ()) -> ManagerResult:
+        """Run the fleet-of-fleets to ``duration``.
+
+        ``streams``: the initial cameras — a sequence of streams/pipelines
+        (keys auto-assigned ``cam0..``) or a dict ``key -> stream``.
+        Initial placement groups them shard-by-shard via the placement
+        policy, then opens each shard's run through
+        :meth:`FleetSession.open_run` — a 1-shard manager therefore takes
+        the exact code path of :meth:`FleetSession.run` (the degeneracy
+        golden). ``admissions`` is a sequence of ``(t, key, stream)``:
+        each camera joins at the first phase boundary where the fleet
+        frontier has reached ``t``.
+        """
+        if isinstance(streams, dict):
+            items = list(streams.items())
+        else:
+            items = [(f"cam{i}", s) for i, s in enumerate(streams)]
+        self.placement.reset(len(self.shards))
+        self.events, self.decisions = [], []
+        self.ledger = {"t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0}
+        self._round = 0
+        self._last_migration = -(10 ** 9)
+
+        # Initial placement: policy-placed, then one open_run per shard so
+        # the per-shard loop is the exact FleetSession.run code path.
+        groups: List[List[Tuple[object, object]]] = [
+            [] for _ in self.shards]
+        for key, stream in items:
+            views = [ShardView(index=i, alive=True, done=False,
+                               n_lanes=len(groups[i]), clock=0.0,
+                               t_tsa=0.0, recent_t_tsa=0.0,
+                               drifted_lanes=0)
+                     for i in range(len(self.shards))]
+            groups[self.placement.place(views)].append((key, stream))
+            self._streams[key] = stream
+        for shard, group in zip(self.shards, groups):
+            shard.run = shard.session.open_run(
+                [s for _, s in group], duration=duration,
+                observers=observers)
+            for lane, (key, _) in zip(shard.run.lanes, group):
+                lane.key = key
+        pending = sorted(admissions, key=lambda a: a[0])
+        pending = list(pending)
+
+        # ------------------------------------------------ the round loop
+        while any(s.alive and s.run is not None and not s.run.done
+                  and s.run.lanes for s in self.shards):
+            placements: List[PlacementAction] = []
+            for shard in self.shards:
+                if not shard.alive or shard.run is None or shard.run.done:
+                    continue
+                if not shard.run.lanes:
+                    continue  # idle shard: stays open for placement
+                try:
+                    if self.failure_injector is not None:
+                        self.failure_injector.maybe_fail(
+                            self._round, key=shard.index)
+                    shard.run.step()
+                except RuntimeError as e:
+                    self._fail_shard(shard, str(e), placements)
+                    continue
+                self._charge(shard)
+            live = [s for s in self.shards
+                    if s.alive and s.run is not None and not s.run.done]
+            # An idle (empty) shard's virtual clock tracks the fleet
+            # frontier — it sits ready; time passes. A lane attached to
+            # it later starts scoring from the join point, not t=0.
+            frontier = self._frontier()
+            for shard in live:
+                if not shard.run.lanes:
+                    shard.run.clock = max(shard.run.clock, frontier)
+            if live:
+                # Per-lane checkpoints every checkpoint_every rounds
+                # (side-effect free on the live lanes).
+                if (self._round + 1) % self.checkpoint_every == 0:
+                    self._checkpoint_lanes()
+                # Due admissions: cameras whose join time the fleet
+                # frontier has passed.
+                frontier = self._frontier()
+                while pending and pending[0][0] <= frontier:
+                    t_at, key, stream = pending.pop(0)
+                    self._streams[key] = stream
+                    views = self._views()
+                    target = next(s for s in self.shards
+                                  if s.index == self.placement.place(views))
+                    target.run.attach_lane(stream, key=key)
+                    placements.append(PlacementAction(
+                        kind="admit", key=key, to_shard=target.index,
+                        reason=f"admission due at t={t_at:g}"))
+                    self.events.append(ManagerEvent(
+                        round=self._round, t=frontier, kind="admit",
+                        shard=target.index, key=key,
+                        detail=f"due t={t_at:g}"))
+                self._maybe_migrate(placements)
+            self.decisions.append(ManagerDecision(
+                shards=tuple(
+                    (s.run.fleet_dec
+                     if s.alive and s.run is not None and not s.run.done
+                     else None)
+                    for s in self.shards),
+                placements=tuple(placements)))
+            self._round += 1
+
+        # ------------------------------------------------------ finalize
+        for mgr in self._ckpts.values():
+            mgr.close()  # flush any in-flight async saves
+        shard_results: List[Optional[FleetResult]] = []
+        lane_results: Dict[object, CLResult] = {}
+        for shard in self.shards:
+            if not shard.alive:
+                shard_results.append(None)
+                continue
+            result = shard.run.finalize()
+            shard_results.append(result)
+            for lane, lane_result in zip(shard.run.lanes, result.streams):
+                lane_results[lane.key] = lane_result
+            shard.run.close()
+        accs = [r.avg_accuracy for r in lane_results.values()]
+        return ManagerResult(
+            name=self.name,
+            shard_results=shard_results,
+            lane_results=lane_results,
+            fleet_avg_accuracy=float(np.mean(accs)) if accs else 0.0,
+            ledger={**self.ledger,
+                    "total": self.ledger["t_tsa"]
+                    + self.ledger["recovery_cost"]},
+            shard_ledgers=[{"t_tsa": s.t_tsa, "t_bsa": s.t_bsa}
+                           for s in self.shards],
+            events=self.events,
+            decisions=self.decisions,
+            rounds=self._round,
+        )
+
+
+def _template_snapshot(session: FleetSession) -> LaneSnapshot:
+    """A structure-only :class:`LaneSnapshot` used as the ``like`` tree
+    for :meth:`CheckpointManager.restore` — array *structures* must match
+    the saved state (shapes are immaterial to npz restore; the aux blob
+    and buffer arrays are single leaves)."""
+    params = session.student_params
+    return LaneSnapshot(
+        key=None, params=params,
+        opt=session.retrain.init_state(params),
+        buffer={"x": np.zeros((0,), np.float32),
+                "y": np.zeros((0,), np.int64),
+                "capacity": session.hp.c_b, "rng_state": {}},
+        rng_state={}, policy=None, lane_state=(), decision=None,
+        eval_cursor=0.0, retrain_time=0.0, label_time=0.0,
+        drift_events=0, records=[], timeline=[], clock=0.0)
+
+
+@dataclasses.dataclass
+class ManagerSpec:
+    """Declarative front door for the manager tier, mirroring
+    :class:`~repro.core.fleet.FleetSpec`: one fleet spec for every shard
+    plus the manager surface (shard count, placement policy and knobs,
+    checkpointing, migration, failure injection, recovery cost)."""
+
+    fleet: FleetSpec
+    n_shards: int = 2
+    placement: object = "headroom"  # name, class, or ready instance
+    placement_kwargs: Optional[dict] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+    migration: bool = True
+    migration_cooldown: int = 2
+    failure_injector: Optional[FailureInjector] = None
+    recovery_cost_s: float = 0.0
+
+    def build(self) -> FleetManager:
+        return FleetManager(
+            self.fleet, n_shards=self.n_shards, placement=self.placement,
+            placement_kwargs=self.placement_kwargs,
+            checkpoint_dir=self.checkpoint_dir,
+            checkpoint_every=self.checkpoint_every,
+            migration=self.migration,
+            migration_cooldown=self.migration_cooldown,
+            failure_injector=self.failure_injector,
+            recovery_cost_s=self.recovery_cost_s)

@@ -23,6 +23,20 @@ def reshard_tree(tree, new_shardings):
         lambda x, s: jax.device_put(x, s), tree, new_shardings)
 
 
+def rehome_tree(tree, mesh: Mesh = None, spec_tree=None):
+    """Land a host-restored pytree on a (possibly shrunken) target mesh —
+    the restore half of an elastic shrink: checkpointed lane state comes
+    back as host numpy arrays and is device_put onto the surviving shard's
+    devices. With no mesh (single-device shards, the default here) this is
+    a plain device_put of every leaf, which normalizes numpy leaves to jax
+    arrays so restored lanes compute exactly like live ones."""
+    import jax.numpy as jnp
+
+    if mesh is not None and spec_tree is not None:
+        return reshard_tree(tree, shardings_for(mesh, spec_tree))
+    return jax.tree_util.tree_map(jnp.asarray, tree)
+
+
 def elastic_data_axis(mesh: Mesh, lost_rows: int) -> tuple:
     """Shrink the data axis by ``lost_rows`` (failed hosts) — returns the new
     mesh built from surviving devices, keeping the model axis intact."""

@@ -49,8 +49,6 @@ class StragglerDetector:
         self.events: List[Dict] = []
 
     def observe(self, step: int, duration: float, median: float) -> bool:
-        if median <= 0 or len(self.events) < 0:
-            pass
         is_straggler = (median > 0 and duration > self.factor * median)
         if is_straggler:
             self.events.append(
@@ -59,16 +57,26 @@ class StragglerDetector:
 
 
 class FailureInjector:
-    """Deterministic failure injection for restart tests."""
+    """Deterministic failure injection for restart/recovery tests.
+
+    ``fail_at_steps`` entries are either bare step numbers (fail whoever
+    probes that step first — the ``resilient_loop`` contract) or
+    ``(step, key)`` pairs targeting one probe site: the fleet manager
+    probes with ``key=shard_index`` each round, so ``(3, 1)`` kills shard 1
+    at round 3 and nobody else. Each entry fires exactly once."""
 
     def __init__(self, fail_at_steps=()):
         self.fail_at = set(fail_at_steps)
         self.failed = set()
 
-    def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at and step not in self.failed:
-            self.failed.add(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+    def maybe_fail(self, step: int, key=None) -> None:
+        probe = step if key is None else (step, key)
+        for entry in (step, probe) if key is not None else (step,):
+            if entry in self.fail_at and entry not in self.failed:
+                self.failed.add(entry)
+                where = f" (key={key})" if key is not None else ""
+                raise RuntimeError(
+                    f"injected node failure at step {step}{where}")
 
 
 @dataclasses.dataclass

@@ -1,4 +1,6 @@
-"""Checkpointing: atomic roundtrip, retention, async, resilient restart."""
+"""Checkpointing: atomic roundtrip, retention, async, torn-write
+invisibility, context-manager flush, SampleBuffer state round-trip,
+resilient restart."""
 import os
 
 import jax
@@ -7,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.core.sample_buffer import SampleBuffer
 from repro.runtime.fault import (
     FailureInjector,
     Heartbeat,
@@ -52,6 +55,78 @@ def test_no_tmp_dirs_left_behind(tmp_path):
     mgr.save(1, _state())
     leftovers = [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
     assert leftovers == []
+
+
+def test_close_flushes_inflight_async_save(tmp_path):
+    """close() (and the ``with`` form) joins the background writer, so a
+    process exiting right after a non-blocking save cannot drop it."""
+    with CheckpointManager(str(tmp_path), async_save=True) as mgr:
+        mgr.save(9, _state(9.0))
+    assert mgr.latest_step() == 9  # committed by __exit__ -> close()
+    restored, m = mgr.restore(None, _state())  # manager usable after close
+    assert m["step"] == 9
+    assert float(restored["params"]["w"][0, 0]) == 9.0
+
+
+def test_incomplete_manifest_is_invisible(tmp_path):
+    """A step directory without a committed manifest.json (torn write) is
+    skipped by all_steps/latest_step, and restore falls back to the last
+    complete checkpoint instead of crashing."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _state(1.0))
+    mgr.save(2, _state(2.0))
+    # Simulate a torn step-3: directory exists, manifest never committed.
+    torn = tmp_path / "step_0000000003"
+    torn.mkdir()
+    (torn / "shard_0.npz").write_bytes(b"garbage")
+    assert mgr.all_steps() == [1, 2]
+    assert mgr.latest_step() == 2
+    restored, m = mgr.restore(None, _state())
+    assert m["step"] == 2
+    assert float(restored["params"]["w"][0, 0]) == 2.0
+    # A manifest that exists as a *directory* is equally invisible.
+    (torn / "manifest.json").mkdir()
+    assert mgr.latest_step() == 2
+
+
+def test_sample_buffer_state_roundtrip():
+    """state_dict/load_state_dict round-trips contents AND the draw RNG's
+    bit-generator state: the restored buffer makes bit-identical future
+    get_data permutations."""
+    rng = np.random.default_rng(0)
+    a = SampleBuffer(capacity=8, seed=11)
+    for _ in range(5):  # overflow capacity -> eviction path exercised
+        a.update(rng.normal(size=(4, 3)).astype(np.float32),
+                 rng.integers(0, 10, size=4))
+    a.get_data(4, 2)  # advance the RNG so its state is mid-stream
+    state = a.state_dict()
+    b = SampleBuffer(capacity=1, seed=99)  # wrong capacity/seed on purpose
+    b.load_state_dict(state)
+    np.testing.assert_array_equal(a._x, b._x)
+    np.testing.assert_array_equal(a._y, b._y)
+    assert b.capacity == a.capacity
+    for _ in range(3):  # future draws bit-identical
+        da, db = a.get_data(6, 2), b.get_data(6, 2)
+        for arr_a, arr_b in zip(da, db):
+            np.testing.assert_array_equal(arr_a, arr_b)
+
+
+def test_sample_buffer_state_dict_is_a_snapshot():
+    """Mutating the buffer after state_dict() must not alter the captured
+    state (the checkpoint writer may serialize it later, off-thread) —
+    and an empty buffer round-trips too."""
+    a = SampleBuffer(capacity=4, seed=3)
+    a.update(np.ones((2, 3), np.float32), np.zeros(2, np.int64))
+    state = a.state_dict()
+    a.update(np.full((2, 3), 7.0, np.float32), np.ones(2, np.int64))
+    assert state["x"].shape[0] == 2  # unchanged by the later update
+    b = SampleBuffer(capacity=4, seed=5)
+    b.load_state_dict(state)
+    assert b._x.shape[0] == 2
+    a.reset()
+    empty = a.state_dict()
+    b.load_state_dict(empty)
+    assert len(b) == 0 and b._x is None
 
 
 def test_resilient_loop_survives_injected_failures(tmp_path):

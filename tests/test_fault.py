@@ -1,0 +1,145 @@
+"""Direct unit tests for repro.runtime.fault: FailureInjector semantics
+(bare-step and (step, key)-targeted entries, fire-exactly-once),
+StragglerDetector.observe, and the resilient_loop restart/resume and
+checkpoint-cadence contracts. The fleet-manager tier builds on exactly
+these semantics (it probes ``maybe_fail(round, key=shard_index)`` each
+round), so they are pinned here independently of the manager tests."""
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault import (
+    FailureInjector,
+    Heartbeat,
+    StragglerDetector,
+    resilient_loop,
+)
+
+
+# ------------------------------------------------------- FailureInjector
+def test_injector_bare_step_fires_once():
+    inj = FailureInjector(fail_at_steps=(3,))
+    inj.maybe_fail(0)
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError, match="step 3"):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)  # each entry fires exactly once
+    assert inj.failed == {3}
+
+
+def test_injector_keyed_entry_targets_one_probe_site():
+    """(step, key) kills only the matching key's probe at that step —
+    the manager's per-shard probe contract."""
+    inj = FailureInjector(fail_at_steps=[(3, 1)])
+    for step in range(3):
+        inj.maybe_fail(step, key=0)
+        inj.maybe_fail(step, key=1)
+    inj.maybe_fail(3, key=0)  # other shard unharmed
+    with pytest.raises(RuntimeError, match=r"step 3 \(key=1\)"):
+        inj.maybe_fail(3, key=1)
+    inj.maybe_fail(3, key=1)  # fired once, never again
+    inj.maybe_fail(4, key=1)
+    assert inj.failed == {(3, 1)}
+
+
+def test_injector_bare_entry_hits_any_keyed_probe():
+    """A bare step entry fails whichever probe reaches that step first,
+    keyed or not (the resilient_loop contract is a special case)."""
+    inj = FailureInjector(fail_at_steps=(5,))
+    with pytest.raises(RuntimeError, match=r"step 5 \(key=2\)"):
+        inj.maybe_fail(5, key=2)
+    inj.maybe_fail(5, key=0)  # consumed by the first prober
+    assert inj.failed == {5}
+
+
+def test_injector_mixed_entries():
+    inj = FailureInjector(fail_at_steps=[2, (2, "a")])
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(2)  # consumes the bare entry
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(2, key="a")  # keyed entry still pending
+    inj.maybe_fail(2, key="a")
+    assert inj.failed == {2, (2, "a")}
+
+
+# ----------------------------------------------------- StragglerDetector
+def test_straggler_observe_needs_positive_median():
+    sd = StragglerDetector(factor=2.0)
+    assert not sd.observe(0, 10.0, 0.0)  # no median yet -> never flags
+    assert not sd.observe(1, 0.19, 0.1)  # under factor x median
+    assert sd.observe(2, 0.21, 0.1)
+    assert sd.events == [{"step": 2, "duration": 0.21, "median": 0.1}]
+
+
+def test_heartbeat_feeds_detector_rolling_median():
+    hb = Heartbeat(window=4)
+    for d in (1.0, 2.0, 3.0, 4.0, 5.0):
+        hb.durations.append(d)
+    assert len(hb.durations) == 5  # window enforced by beat(), not append
+    hb2 = Heartbeat(window=4)
+    hb2.beat()
+    for _ in range(6):
+        hb2.beat()
+    assert len(hb2.durations) <= 4
+
+
+# -------------------------------------------------------- resilient_loop
+def _counting_step():
+    calls = []
+
+    def step_fn(state, step):
+        calls.append(step)
+        return {"w": state["w"] + 1.0}
+
+    return step_fn, calls
+
+
+def test_resilient_loop_restores_and_replays(tmp_path):
+    """Failure at step 7 with checkpoint_every=5: restore at step 5,
+    replay 5 and 6 — final state counts exactly num_steps effective
+    steps."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    step_fn, calls = _counting_step()
+    inj = FailureInjector(fail_at_steps=(7,))
+    final, report = resilient_loop(
+        step_fn, {"w": jnp.zeros(())}, num_steps=10,
+        checkpoint_manager=mgr, checkpoint_every=5, failure_injector=inj)
+    assert report.final_step == 10
+    assert report.restarts == 1
+    assert float(final["w"]) == 10.0
+    assert calls == [0, 1, 2, 3, 4, 5, 6, 5, 6, 7, 8, 9]  # replay from 5
+    assert report.checkpointed_steps == [5, 10]
+
+
+def test_resilient_loop_failure_before_first_checkpoint(tmp_path):
+    """A failure before any checkpoint restarts from step 0 (nothing to
+    restore), still converging to num_steps effective steps."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    step_fn, calls = _counting_step()
+    inj = FailureInjector(fail_at_steps=(2,))
+    final, report = resilient_loop(
+        step_fn, {"w": jnp.zeros(())}, num_steps=6,
+        checkpoint_manager=mgr, checkpoint_every=4, failure_injector=inj)
+    assert report.restarts == 1
+    assert calls[:2] == [0, 1] and calls[2] == 0  # restarted from scratch
+    # NOTE the loop restarts with the *current* in-memory state when no
+    # checkpoint exists, so the counter keeps the pre-failure increments:
+    # 2 lost-step increments + 6 effective steps.
+    assert float(final["w"]) == 8.0
+    assert report.final_step == 6
+
+
+def test_resilient_loop_resumes_from_existing_checkpoint(tmp_path):
+    """A fresh loop over a directory holding step-4's checkpoint resumes
+    at step 4 instead of recomputing from scratch."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    step_fn, _ = _counting_step()
+    resilient_loop(step_fn, {"w": jnp.zeros(())}, num_steps=4,
+                   checkpoint_manager=mgr, checkpoint_every=4)
+    step_fn2, calls2 = _counting_step()
+    final, report = resilient_loop(
+        step_fn2, {"w": jnp.zeros(())}, num_steps=8,
+        checkpoint_manager=mgr, checkpoint_every=4)
+    assert calls2 == [4, 5, 6, 7]  # steps 0-3 never re-run
+    assert float(final["w"]) == 8.0
+    assert report.final_step == 8

@@ -1,0 +1,355 @@
+"""FleetManager tier tests: the 1-shard degeneracy golden (a 1-shard
+manager — checkpointing on — is bit-identical to a bare FleetSession in
+both dispatch modes), fault-injected shard loss with checkpoint recovery
+and manager/shard ledger conservation, mid-run lane admission, live lane
+migration (bit-identical resume from a LaneSnapshot), the durable
+snapshot encode/decode round-trip, and the PlacementPolicy registry."""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.allocation import CLHyperParams
+from repro.core.decision import ManagerDecision
+from repro.core.fleet import FleetSpec
+from repro.core.manager import (
+    PLACEMENT_POLICIES,
+    DriftPackPlacementPolicy,
+    FleetManager,
+    HeadroomPlacementPolicy,
+    ManagerSpec,
+    PlacementPolicy,
+    ShardView,
+    StaticPlacementPolicy,
+    make_placement_policy,
+    snapshot_to_state,
+    state_to_snapshot,
+)
+from repro.core.session import pretrain_model
+from repro.data.stream import DriftStream, scenario
+from repro.models.registry import make_vision_model
+from repro.runtime.fault import FailureInjector
+
+_RECORD_FIELDS = ("index", "t", "acc_valid", "acc_label", "drift",
+                  "retrain_time", "label_time", "phase_start", "t_tsa",
+                  "t_bsa", "spec_hits", "spec_misses", "stream")
+
+
+def _assert_records_identical(recs_a, recs_b):
+    assert len(recs_a) == len(recs_b)
+    for a, b in zip(recs_a, recs_b):
+        for field in _RECORD_FIELDS:
+            assert getattr(a, field) == getattr(b, field), field
+        assert a.decision == b.decision
+        assert a.next_decision == b.next_decision
+
+
+@pytest.fixture(scope="module")
+def pretrained():
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    hp = CLHyperParams(n_t=32, n_l=16, c_b=128, epochs=1)
+    rng = np.random.default_rng(0)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        10, 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream, 8,
+                        32, rng, segments=stream.segments[:1], seed=8)
+    return hp, tp, sp
+
+
+def _streams(n):
+    return [DriftStream(scenario(name, 2), seed=seed, img=24)
+            for name, seed in [("S1", 5), ("S3", 6), ("ES1", 7)][:n]]
+
+
+def _fleet_spec(hp, dispatch="sequential"):
+    return FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                     fleet_mode="drift-weighted", apply_mx=False, seed=0,
+                     eval_fps=0.5, dispatch=dispatch)
+
+
+# ------------------------------------------------------ degeneracy golden
+@pytest.mark.parametrize("dispatch", ["sequential", "concurrent"])
+def test_one_shard_manager_is_bit_identical_to_fleet_session(
+        pretrained, dispatch, tmp_path):
+    """A 1-shard FleetManager — per-lane checkpointing ON — reproduces a
+    bare FleetSession bit-for-bit: phase log, per-lane records and
+    accuracy timelines; and the manager ledger equals the shard ledger
+    equals the fleet_phase_log sum exactly."""
+    hp, tp, sp = pretrained
+    bare = _fleet_spec(hp, dispatch).build()
+    bare.set_pretrained(tp, sp)
+    ref = bare.run(_streams(2), duration=40.0)
+
+    mgr = FleetManager(_fleet_spec(hp, dispatch), n_shards=1,
+                       checkpoint_dir=str(tmp_path / dispatch),
+                       checkpoint_every=1)
+    mgr.set_pretrained(tp, sp)
+    res = mgr.run(_streams(2), duration=40.0)
+
+    assert res.n_shards == 1
+    got = res.shard_results[0]
+    assert got.fleet_phase_log == ref.fleet_phase_log
+    assert got.fleet_avg_accuracy == ref.fleet_avg_accuracy
+    for lane, lane_ref in zip(got.streams, ref.streams):
+        assert lane.accuracy_timeline == lane_ref.accuracy_timeline
+        _assert_records_identical(lane.records, lane_ref.records)
+    exact = sum(e["t_tsa"] for e in ref.fleet_phase_log)
+    assert res.ledger["t_tsa"] == exact  # same accumulation order
+    assert res.shard_ledgers[0]["t_tsa"] == exact
+    assert res.conservation_gap() == 0.0
+    assert res.ledger["recovery_cost"] == 0.0
+    assert all(isinstance(d, ManagerDecision) for d in res.decisions)
+
+
+# ------------------------------------------------- fault-injected recovery
+def test_shard_loss_recovers_from_checkpoints(pretrained, tmp_path):
+    """Kill shard 1 mid-run: its lanes restore from their last per-lane
+    checkpoint and re-home onto the survivor; the manager ledger stays
+    conserved (sum of shard ledgers + explicit recovery cost) and the
+    fleet finishes with every lane scored to the duration, at accuracy
+    within tolerance of the no-fault run."""
+    hp, tp, sp = pretrained
+    inj = FailureInjector(fail_at_steps=[(3, 1)])
+    mgr = FleetManager(_fleet_spec(hp), n_shards=2,
+                       checkpoint_dir=str(tmp_path),
+                       checkpoint_every=2, failure_injector=inj,
+                       recovery_cost_s=2.0, migration=False)
+    mgr.set_pretrained(tp, sp)
+    res = mgr.run(_streams(3), duration=40.0)
+
+    kinds = [e.kind for e in res.events]
+    assert "fail" in kinds and "recover" in kinds
+    assert res.shard_results[1] is None  # the dead shard
+    assert res.shard_results[0] is not None
+    # Every camera still reaches the finish line on the survivor.
+    assert set(res.lane_results) == {"cam0", "cam1", "cam2"}
+    for lane_res in res.lane_results.values():
+        assert lane_res.records, "lane lost by recovery"
+    # Recovery placements are first-class ManagerDecision actions.
+    recoveries = [p for d in res.decisions for p in d.placements
+                  if p.kind == "recover"]
+    assert recoveries and all(p.from_shard == 1 and p.to_shard == 0
+                              for p in recoveries)
+    # Ledger conservation: manager T-SA == sum of shard T-SA (the dead
+    # shard keeps what it accrued), recovery charged explicitly on top.
+    assert res.ledger["t_tsa"] == pytest.approx(
+        sum(s["t_tsa"] for s in res.shard_ledgers), rel=1e-9)
+    assert res.ledger["recovery_cost"] == 2.0 * len(recoveries)
+    assert res.ledger["total"] == pytest.approx(
+        res.ledger["t_tsa"] + res.ledger["recovery_cost"], rel=1e-12)
+
+    nofault = FleetManager(_fleet_spec(hp), n_shards=2, migration=False)
+    nofault.set_pretrained(tp, sp)
+    ref = nofault.run(_streams(3), duration=40.0)
+    assert res.fleet_avg_accuracy == pytest.approx(
+        ref.fleet_avg_accuracy, abs=0.15)
+
+
+# -------------------------------------------------------------- admission
+def test_lane_admission_mid_run(pretrained):
+    """A camera joining at t=10 lands on the headroom shard at the first
+    phase boundary past its due time and is scored from the join point,
+    not from t=0."""
+    hp, tp, sp = pretrained
+    mgr = FleetManager(_fleet_spec(hp), n_shards=2, migration=False)
+    mgr.set_pretrained(tp, sp)
+    late = DriftStream(scenario("ES1", 2), seed=9, img=24)
+    res = mgr.run(_streams(2), duration=40.0,
+                  admissions=[(10.0, "late", late)])
+    assert "late" in res.lane_results
+    admits = [e for e in res.events if e.kind == "admit"]
+    assert len(admits) == 1 and admits[0].key == "late"
+    assert admits[0].t >= 10.0
+    lane = res.lane_results["late"]
+    assert lane.records
+    assert lane.records[0].phase_start >= 10.0  # no phases before joining
+    assert all(t >= 10.0 for t, _ in lane.accuracy_timeline)
+    assert any(p.kind == "admit" and p.key == "late"
+               for d in res.decisions for p in d.placements)
+
+
+# -------------------------------------------------------------- migration
+def test_detach_attach_resumes_bit_identically(pretrained):
+    """The migration primitive: detach a lane into a LaneSnapshot at a
+    phase boundary and re-attach it (weights, optimizer, buffer, RNG,
+    policy state, pipeline) — the remaining run is bit-identical to one
+    that was never interrupted."""
+    hp, tp, sp = pretrained
+    sess_a = _fleet_spec(hp).build()
+    sess_a.set_pretrained(tp, sp)
+    ref = sess_a.run(_streams(1), duration=40.0)
+
+    sess_b = _fleet_spec(hp).build()
+    sess_b.set_pretrained(tp, sp)
+    run = sess_b.open_run(_streams(1), duration=40.0)
+    for _ in range(3):
+        assert run.step()
+    snap, pipe = run.detach_lane(0)
+    assert run.n_lanes == 0
+    run.attach_lane(pipe, snapshot=snap, own=True)
+    while run.step():
+        pass
+    got = run.finalize()
+    run.close()
+    assert got.fleet_phase_log == ref.fleet_phase_log
+    for lane, lane_ref in zip(got.streams, ref.streams):
+        assert lane.accuracy_timeline == lane_ref.accuracy_timeline
+        _assert_records_identical(lane.records, lane_ref.records)
+
+
+def test_manager_migration_via_custom_policy(pretrained):
+    """A pluggable policy that forces one migration: the lane moves
+    between shards mid-run (a 'migrate' event and PlacementAction), keeps
+    its record history, and the ledger stays conserved."""
+    hp, tp, sp = pretrained
+
+    class _MigrateOnce(PlacementPolicy):
+        name = "migrate-once"
+
+        def __init__(self, spec=None):
+            super().__init__(spec)
+            self.fired = False
+
+        def place(self, views):
+            order = sorted((v for v in views if v.placeable),
+                           key=lambda v: (v.n_lanes, v.index))
+            return order[0].index
+
+        def migrate(self, views, lanes):
+            if self.fired or not lanes:
+                return None
+            lane = lanes[0]
+            targets = [v for v in views
+                       if v.placeable and v.index != lane.shard]
+            if not targets:
+                return None
+            self.fired = True
+            return lane, targets[0].index
+
+    policy = _MigrateOnce()
+    mgr = FleetManager(_fleet_spec(hp), n_shards=2, placement=policy,
+                       migration=True, migration_cooldown=0)
+    mgr.set_pretrained(tp, sp)
+    res = mgr.run(_streams(2), duration=40.0)
+    migs = [e for e in res.events if e.kind == "migrate"]
+    assert len(migs) == 1
+    moved = res.lane_results[migs[0].key]
+    # History crosses the move: phases from before AND after the event.
+    assert moved.records[0].phase_start < migs[0].t
+    assert moved.records[-1].phase_start >= migs[0].t - 1e-6
+    assert any(p.kind == "migrate" for d in res.decisions
+               for p in d.placements)
+    assert res.conservation_gap() == pytest.approx(0.0, abs=1e-9)
+    assert set(res.lane_results) == {"cam0", "cam1"}
+
+
+# --------------------------------------------- durable snapshot round-trip
+def test_snapshot_state_roundtrip_through_checkpoint(pretrained, tmp_path):
+    """snapshot_to_state/state_to_snapshot invert each other through a
+    real CheckpointManager save/restore — including the empty-buffer
+    sentinel and the pickled aux blob."""
+    hp, tp, sp = pretrained
+    sess = _fleet_spec(hp).build()
+    sess.set_pretrained(tp, sp)
+    run = sess.open_run(_streams(1), duration=40.0)
+    run.step()
+    run.step()
+    snap = run.snapshot_lane(0)
+    run.close()
+
+    state = snapshot_to_state(snap)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, state)
+    restored_state, manifest = mgr.restore(3, state)
+    back = state_to_snapshot(restored_state)
+    assert manifest["step"] == 3
+    for tree_name in ("params", "opt"):
+        a = getattr(snap, tree_name)
+        b = getattr(back, tree_name)
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert back.rng_state == snap.rng_state
+    assert back.buffer["capacity"] == snap.buffer["capacity"]
+    assert back.buffer["rng_state"] == snap.buffer["rng_state"]
+    if snap.buffer["x"] is None:
+        assert back.buffer["x"] is None
+    else:
+        np.testing.assert_array_equal(back.buffer["x"], snap.buffer["x"])
+        np.testing.assert_array_equal(back.buffer["y"], snap.buffer["y"])
+    assert back.records == snap.records
+    assert back.timeline == snap.timeline
+    assert back.decision == snap.decision
+    assert back.lane_state == snap.lane_state
+    assert back.clock == snap.clock
+
+
+def test_empty_buffer_snapshot_roundtrip():
+    """The zeros((0,)) sentinel: a never-filled buffer survives the npz
+    encoding (None is not a pytree leaf)."""
+    from repro.core.fleet import LaneSnapshot
+    snap = LaneSnapshot(
+        key="k", params={"w": np.ones((2, 2), np.float32)},
+        opt={"m": np.zeros((2, 2), np.float32)},
+        buffer={"x": None, "y": None, "capacity": 16, "rng_state": {}},
+        rng_state={}, policy=None, lane_state=(), decision=None,
+        eval_cursor=1.0, retrain_time=0.0, label_time=0.0,
+        drift_events=0, records=[], timeline=[], clock=2.0)
+    back = state_to_snapshot(snapshot_to_state(snap))
+    assert back.buffer["x"] is None and back.buffer["y"] is None
+    assert back.key == "k" and back.clock == 2.0
+
+
+# ----------------------------------------------------------- the registry
+def test_placement_policy_registry():
+    assert set(PLACEMENT_POLICIES) == {"static", "headroom", "drift-pack"}
+    assert isinstance(PlacementPolicy("static"), StaticPlacementPolicy)
+    assert isinstance(PlacementPolicy("drift-pack"),
+                      DriftPackPlacementPolicy)
+    assert isinstance(make_placement_policy("headroom", min_gap=3),
+                      HeadroomPlacementPolicy)
+    assert make_placement_policy("headroom", min_gap=3).min_gap == 3
+    inst = StaticPlacementPolicy()
+    assert make_placement_policy(inst) is inst
+    with pytest.raises(KeyError, match="unknown placement policy"):
+        PlacementPolicy("nope")
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        PlacementPolicy("static", bogus=1)
+
+
+def test_headroom_policy_places_and_migrates():
+    def view(i, n, recent, drifted=0, alive=True, done=False):
+        return ShardView(index=i, alive=alive, done=done, n_lanes=n,
+                         clock=0.0, t_tsa=0.0, recent_t_tsa=recent,
+                         drifted_lanes=drifted)
+
+    pol = HeadroomPlacementPolicy(min_gap=2)
+    # Fewest lanes wins; recent T-SA breaks ties.
+    assert pol.place([view(0, 2, 1.0), view(1, 1, 9.0)]) == 1
+    assert pol.place([view(0, 1, 5.0), view(1, 1, 2.0)]) == 1
+    # Dead/done shards are never placement targets.
+    assert pol.place([view(0, 0, 0.0, alive=False), view(1, 3, 9.0)]) == 1
+    # Migration needs a drifted lane on an oversubscribed shard.
+    from repro.core.manager import LaneView
+    lanes = [LaneView(shard=0, index=0, key="a", drifted=True,
+                      drift_events=2),
+             LaneView(shard=0, index=1, key="b", drifted=False,
+                      drift_events=0)]
+    got = pol.migrate([view(0, 3, 9.0, drifted=1), view(1, 1, 1.0)], lanes)
+    assert got is not None and got[0].key == "a" and got[1] == 1
+    # Gap below min_gap: hysteresis holds the lane in place.
+    assert pol.migrate([view(0, 2, 9.0, drifted=1), view(1, 1, 1.0)],
+                       lanes) is None
+
+
+def test_manager_spec_builds(pretrained):
+    hp, _, _ = pretrained
+    spec = ManagerSpec(fleet=_fleet_spec(hp), n_shards=3,
+                       placement="drift-pack", migration=False)
+    mgr = spec.build()
+    assert mgr.n_shards == 3
+    assert isinstance(mgr.placement, DriftPackPlacementPolicy)
+    assert not mgr.migration
+    with pytest.raises(ValueError):
+        FleetManager(_fleet_spec(hp), n_shards=0)
