@@ -14,6 +14,16 @@ first entry of the bench trajectory):
   ``predict_batched`` call, with frames produced through the prefetching
   window iterator (`DriftStream.windows`) so host-side frame synthesis
   overlaps device work. Acceptance: fused issues fewer jitted calls.
+* **fused** (PR 7) — the MX hot path itself: ``ops.mx_matmul_fused`` (the
+  whole quantize→matmul chain as ONE program) against the unfused
+  ``ops.mx_quantize``→``ops.mx_matmul`` pipeline (three programs with MX
+  tensors materialized between them), measured in the container's serving
+  kernel mode at the repo's hot-path GEMM sizes, bit-identity asserted per
+  shape; plus the version-keyed serving-copy cache on repeated teacher
+  labeling bursts (cached vs ``maxsize=0``). Headlines:
+  ``fused_wall_speedup`` (geomean), ``fused_op_reduction`` (jitted
+  programs per GEMM: 3 → 1), ``label_cache_speedup``. Acceptance: the op
+  reduction is >= 2x (deterministic) and fused is never slower.
 
 Run:  PYTHONPATH=src python benchmarks/bench_dispatch.py [--smoke] [--out F]
 """
@@ -151,6 +161,99 @@ def bench_scoring_fusion(smoke: bool) -> dict:
     }
 
 
+def _wall_us(fn, reps: int) -> float:
+    fn()  # warm (jit compile / trace)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_fused(smoke: bool) -> dict:
+    from repro.kernels import ops
+
+    # The repo's hot-path GEMM sizes (img=24 models: small M, modest K/N —
+    # where per-program dispatch overhead is a real fraction of the GEMM).
+    shapes = ([(16, 432, 64), (32, 128, 64)] if smoke
+              else [(16, 432, 64), (32, 128, 64), (64, 256, 128)])
+    reps = 5 if smoke else 30
+    per_shape = {}
+    speedups = []
+    for m, k, n in shapes:
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        # Bit-identity first: fused must equal the unfused chain exactly.
+        fused0 = np.asarray(ops.mx_matmul_fused(a, b, "mx6", "mx6"))
+        unfused0 = np.asarray(ops.mx_matmul(a, b, "mx6", "mx6"))
+        assert np.array_equal(fused0, unfused0), \
+            f"fused != unfused at {(m, k, n)}"
+        ops.reset_kernel_stats()
+        wall_u = _wall_us(lambda: jax.block_until_ready(
+            ops.mx_matmul(a, b, "mx6", "mx6")), reps)
+        stats = ops.kernel_stats()
+        ops_unfused = sum(sum(p.values()) for op, p in stats.items()
+                          if op != "mx_matmul_fused") / (reps + 1)
+        ops.reset_kernel_stats()
+        wall_f = _wall_us(lambda: jax.block_until_ready(
+            ops.mx_matmul_fused(a, b, "mx6", "mx6")), reps)
+        ops_fused = sum(
+            ops.kernel_stats()["mx_matmul_fused"].values()) / (reps + 1)
+        ops.reset_kernel_stats()
+        speedup = wall_u / wall_f
+        speedups.append(speedup)
+        per_shape[f"{m}x{k}x{n}"] = {
+            "unfused_us": round(wall_u, 1), "fused_us": round(wall_f, 1),
+            "wall_speedup": round(speedup, 2),
+            "ops_per_gemm_unfused": ops_unfused,
+            "ops_per_gemm_fused": ops_fused,
+        }
+    op_reduction = (per_shape[next(iter(per_shape))]["ops_per_gemm_unfused"]
+                    / per_shape[next(iter(per_shape))]["ops_per_gemm_fused"])
+    assert op_reduction >= 2.0, \
+        f"fused must at least halve the jitted-op count ({op_reduction})"
+    return {
+        "kernel_mode": ops.kernel_mode(),
+        "shapes": per_shape,
+        "fused_wall_speedup": round(
+            float(np.exp(np.mean(np.log(speedups)))), 2),
+        "fused_op_reduction": round(op_reduction, 2),
+    }
+
+
+def bench_label_cache(smoke: bool) -> dict:
+    """Repeated teacher labeling bursts, apply_mx=True: the version-keyed
+    serving cache quantizes the teacher tree ONCE; the ``maxsize=0``
+    baseline re-quantizes it every burst (the pre-PR behavior)."""
+    from repro.configs.dacapo_pairs import WIDERESNET50
+    from repro.core.estimator import DaCapoEstimator
+    from repro.core.kernel import LabelingKernel, ServingParamsCache
+    from repro.models.registry import make_vision_model
+
+    burst, reps = 4, (5 if smoke else 20)
+    model = make_vision_model(WIDERESNET50.reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                     (burst, 24, 24, 3)), np.float32)
+    cached = LabelingKernel(model, WIDERESNET50, DaCapoEstimator(),
+                            apply_mx=True)
+    uncached = LabelingKernel(model, WIDERESNET50, DaCapoEstimator(),
+                              apply_mx=True)
+    uncached.serving_cache = ServingParamsCache(maxsize=0)
+    y_c = cached.label(params, x, "mx6")  # warm both paths
+    y_u = uncached.label(params, x, "mx6")
+    assert np.array_equal(y_c, y_u), "cache changed the labels"
+    wall_c = _wall_us(lambda: cached.label(params, x, "mx6"), reps)
+    wall_u = _wall_us(lambda: uncached.label(params, x, "mx6"), reps)
+    stats = cached.serving_cache.stats()
+    assert stats["misses"] == 1 and stats["hits"] >= reps, stats
+    return {
+        "burst_frames": burst,
+        "cached_us": round(wall_c, 1), "uncached_us": round(wall_u, 1),
+        "label_cache_speedup": round(wall_u / wall_c, 2),
+        "cache_stats": stats,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -158,11 +261,18 @@ def main():
     ap.add_argument("--out", default="BENCH_dispatch.json")
     args = ap.parse_args()
 
+    fused = bench_fused(args.smoke)
+    label_cache = bench_label_cache(args.smoke)
     result = {
         "bench": "dispatch",
         "mode": "smoke" if args.smoke else "full",
         "backend": jax.default_backend(),
         "scoring_fusion": bench_scoring_fusion(args.smoke),
+        "fused": fused,
+        "label_cache": label_cache,
+        "fused_wall_speedup": fused["fused_wall_speedup"],
+        "fused_op_reduction": fused["fused_op_reduction"],
+        "label_cache_speedup": label_cache["label_cache_speedup"],
         "session": bench_session(args.smoke),
     }
     with open(args.out, "w") as f:
@@ -175,10 +285,18 @@ def main():
 def run():
     """Registry entry (benchmarks/run.py): smoke measurements as CSV rows."""
     fusion = bench_scoring_fusion(True)
+    fused = bench_fused(True)
+    cache = bench_label_cache(True)
     session = bench_session(True)
     return [
         ("dispatch/scoring_fused", fusion["fused"]["wall_s"] * 1e6,
          f"call_reduction={fusion['call_reduction']}"),
+        ("dispatch/mx_fused",
+         next(iter(fused["shapes"].values()))["fused_us"],
+         f"wall_speedup={fused['fused_wall_speedup']}"
+         f";op_reduction={fused['fused_op_reduction']}"),
+        ("dispatch/label_cache", cache["cached_us"],
+         f"speedup={cache['label_cache_speedup']}"),
         ("dispatch/session_sequential",
          session["sequential"]["wall_s"] * 1e6,
          f"phase_dt={session['sequential']['mean_phase_dt_s']}"),

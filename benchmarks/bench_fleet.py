@@ -29,7 +29,10 @@ per-stream accuracies/drifts, fleet phases executed, the per-phase shared
 T-SA time (the equal-budget check: uniform and drift-weighted spend ~one
 session's T-SA budget per phase, isolated ~N×), speculation counters, and
 host wall time; and per row policy: mean fleet accuracy, fleet phases,
-rows-over-time stats (mean/max T-SA rows, spatial re-allocations).
+rows-over-time stats (mean/max T-SA rows, spatial re-allocations); plus
+the batched B-SA serve microbench (PR 7: every lane's score windows in
+ONE vmapped program per phase — headline
+``fleet_batched_serve_speedup``, the per-phase program reduction).
 
 Acceptance (asserted after the JSON is written): the drift-weighted fleet
 beats BOTH uniform and isolated on mean fleet accuracy, and the best
@@ -242,6 +245,71 @@ def bench_row_policies(n_streams: int, smoke: bool,
     return out
 
 
+def bench_batched_serve(smoke: bool) -> dict:
+    """Batched fleet serving (PR 7): L lanes' score windows through ONE
+    vmapped B-SA program (``InferenceKernel.predict_fleet_async``) vs one
+    fused predict per lane. The headline ``fleet_batched_serve_speedup``
+    is the per-phase B-SA *program* reduction (L programs → 1) — the
+    device-dispatch metric the fused serve targets; host wall times for
+    both paths are reported alongside (on a CPU host the vmapped stacked
+    apply is not wall-faster — there is no second sub-accelerator to
+    overlap with)."""
+    from repro.configs.dacapo_pairs import RESNET18
+    from repro.core.estimator import DaCapoEstimator
+    from repro.core.kernel import InferenceKernel
+    from repro.models.registry import make_vision_model
+
+    n_lanes = 3 if smoke else 4
+    frames = 16 if smoke else 24
+    reps = 5 if smoke else 15
+    model = make_vision_model(RESNET18.reduced())
+    trees = [model.init(jax.random.PRNGKey(i)) for i in range(n_lanes)]
+    rngs = [jax.random.PRNGKey(100 + i) for i in range(n_lanes)]
+    wins = [np.asarray(jax.random.normal(r, (frames, 24, 24, 3)),
+                       np.float32) for r in rngs]
+    kernel = InferenceKernel(model, RESNET18, DaCapoEstimator(),
+                             apply_mx=False)
+
+    def per_lane():
+        outs = [kernel.predict_async(t, w) for t, w in zip(trees, wins)]
+        jax.block_until_ready(outs)
+        return outs
+
+    def batched():
+        outs = kernel.predict_fleet_async(trees, wins)
+        jax.block_until_ready(outs)
+        return outs
+
+    preds_pl = [np.asarray(p) for p in per_lane()]  # warm both jit paths
+    preds_b = [np.asarray(p) for p in batched()]
+    acc_gap = max(float((a != b).mean())
+                  for a, b in zip(preds_pl, preds_b))
+
+    kernel.n_apply_calls = 0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        per_lane()
+    wall_pl = (time.perf_counter() - t0) / reps
+    calls_pl = kernel.n_apply_calls / reps
+
+    kernel.n_apply_calls = 0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        batched()
+    wall_b = (time.perf_counter() - t0) / reps
+    calls_b = kernel.n_apply_calls / reps
+
+    assert calls_b < calls_pl, "batched serve must issue fewer programs"
+    return {
+        "n_lanes": n_lanes,
+        "frames_per_lane": frames,
+        "per_lane": {"programs": calls_pl, "wall_s": round(wall_pl, 4)},
+        "batched": {"programs": calls_b, "wall_s": round(wall_b, 4)},
+        "prediction_disagreement": acc_gap,  # vmapped apply ulp drift
+        "fleet_batched_serve_speedup": round(calls_pl / calls_b, 2),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -261,6 +329,7 @@ def main(argv=None):
              if args.row_policy is None else {})
     row_policies = bench_row_policies(args.streams, args.smoke,
                                       only=args.row_policy)
+    batched_serve = bench_batched_serve(args.smoke)
     result = {
         "bench": "fleet",
         "mode": "smoke" if args.smoke else "full",
@@ -268,6 +337,9 @@ def main(argv=None):
         "n_streams": args.streams,
         "modes": modes,
         "row_policies": row_policies,
+        "batched_serve": batched_serve,
+        "fleet_batched_serve_speedup":
+            batched_serve["fleet_batched_serve_speedup"],
     }
     if modes:
         result["fleet_accuracy_gain_vs_uniform"] = round(

@@ -53,6 +53,26 @@ def run():
                      f"tpu_roofline_us={max(t_c, t_m)*1e6:.2f} "
                      f"bound={'compute' if t_c > t_m else 'memory'}"))
 
+    # Fused quantize->matmul (PR 7) vs the 3-jit unfused chain, at the
+    # repo's hot-path (small-M) GEMM sizes where the per-program dispatch
+    # overhead the fusion removes is a real fraction of the GEMM.
+    for fm, fk, fn in [(16, 432, 64), (32, 128, 64), (64, 256, 128)]:
+        fa_ = jax.random.normal(jax.random.PRNGKey(4), (fm, fk))
+        fb_ = jax.random.normal(jax.random.PRNGKey(5), (fk, fn))
+        qfn = jax.jit(lambda x: ref.mx_quantize_ref(x, "mx6"))
+        mmr = jax.jit(ref.mx_matmul_ref)
+        ffn = jax.jit(
+            lambda a, b: ref.mx_matmul_fused_ref(a, b, "mx6", "mx6"))
+
+        def unfused_chain(a=fa_, b=fb_):
+            return mmr(qfn(a), qfn(b.T))  # 3 programs, MX tensors between
+
+        us_u = _time(unfused_chain, reps=20)
+        us_f = _time(ffn, fa_, fb_, reps=20)
+        rows.append((f"kernels/mx_fused_{fm}x{fk}x{fn}", us_f,
+                     f"unfused_3jit_us={us_u:.1f} "
+                     f"wall_speedup={us_u / us_f:.2f}x"))
+
     q = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 8, 64))
     kk = jax.random.normal(jax.random.PRNGKey(3), (1, 1024, 2, 64))
     from repro.models.attention import flash_attention as fa

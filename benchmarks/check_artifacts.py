@@ -23,11 +23,15 @@ import sys
 # wrote them conditionally (see OPTIONAL_EMPTY).
 HEADLINE_KEYS = {
     "dispatch": [("session", "sequential", "avg_accuracy"),
-                 ("session", "concurrent", "avg_accuracy")],
+                 ("session", "concurrent", "avg_accuracy"),
+                 ("fused_wall_speedup",),
+                 ("fused_op_reduction",),
+                 ("label_cache_speedup",)],
     "reallocation": [("scenarios", "*", "*", "avg_accuracy"),
                      ("speculation_hit_rate",)],
     "fleet": [("modes", "*", "fleet_avg_accuracy"),
-              ("row_policies", "*", "fleet_avg_accuracy")],
+              ("row_policies", "*", "fleet_avg_accuracy"),
+              ("fleet_batched_serve_speedup",)],
     "manager": [("recovery", "no_fault", "fleet_avg_accuracy"),
                 ("recovery", "fault", "fleet_avg_accuracy"),
                 ("recovery", "fault", "conservation_gap"),

@@ -257,7 +257,9 @@ class KernelDispatcher:
     One dispatcher lives on a :class:`~repro.core.session.CLSession`; its
     mode decides the clock semantics of every :class:`PhasePlan` it opens
     (see module docstring). ``phases_dispatched`` / ``programs_dispatched``
-    are cumulative counters for benchmarks and tests.
+    are cumulative counters for benchmarks and tests;
+    ``programs_by_label`` breaks the program count down by dispatch label
+    (e.g. one batched ``"acc_label"`` program per fleet labeling burst).
     """
 
     def __init__(self, mode: str = SEQUENTIAL):
@@ -268,6 +270,7 @@ class KernelDispatcher:
         self.phases_dispatched = 0
         self.programs_dispatched = 0
         self.windows_fetched = 0
+        self.programs_by_label: Dict[str, int] = {}
 
     @property
     def concurrent(self) -> bool:
@@ -322,6 +325,8 @@ class _TrackedPlan(PhasePlan):
                  cost_s: float = 0.0,
                  lane: Optional[int] = None) -> ProgramHandle:
         self._dispatcher.programs_dispatched += 1
+        by_label = self._dispatcher.programs_by_label
+        by_label[label] = by_label.get(label, 0) + 1
         return super().dispatch(role, label, issue, cost_s, lane=lane)
 
     def dispatch_multi(self, role: str, label: str,
@@ -329,6 +334,8 @@ class _TrackedPlan(PhasePlan):
                        costs: Sequence[float],
                        lanes: Sequence[int]) -> List[ProgramHandle]:
         self._dispatcher.programs_dispatched += 1
+        by_label = self._dispatcher.programs_by_label
+        by_label[label] = by_label.get(label, 0) + 1
         return super().dispatch_multi(role, label, issue, costs, lanes)
 
     def fetch(self, t0: float, t1: float, max_frames: int = 0,

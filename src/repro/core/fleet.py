@@ -74,6 +74,7 @@ from repro.core.session import (
     PhaseObserver,
     PhaseRecord,
     _ScoreSink,
+    flush_sinks_batched,
 )
 from repro.data.pipeline import FramePipeline
 from repro.data.stream import DriftStream
@@ -180,7 +181,8 @@ class FleetSession(CLSession):
                  fleet_mode: str = "drift-weighted",
                  fleet_budget_streams: float = 1.0,
                  fleet_row_policy="resolve-max",
-                 fleet_kwargs: Optional[dict] = None, **kwargs):
+                 fleet_kwargs: Optional[dict] = None,
+                 fleet_serve_batched: bool = False, **kwargs):
         hp = hp or CLHyperParams()
         if not isinstance(allocator, FleetAllocator):
             allocator = FleetAllocator(
@@ -190,6 +192,12 @@ class FleetSession(CLSession):
         super().__init__(student_cfg, teacher_cfg, hp=hp,
                          estimator=estimator, allocator=allocator, **kwargs)
         self.fleet_allocator: FleetAllocator = self.allocator
+        # Opt-in: serve every lane's queued score windows through ONE
+        # vmapped B-SA program per phase (InferenceKernel.
+        # predict_fleet_async) instead of one fused predict per lane.
+        # Default OFF: the vmapped apply can differ from per-lane applies
+        # in float ulps, and the degeneracy goldens pin per-lane numerics.
+        self.fleet_serve_batched = fleet_serve_batched
 
     # ------------------------------------------------------------ fleet run
     def run(self, streams: Union[DriftStream, FramePipeline,
@@ -492,6 +500,7 @@ class FleetRun:
             # ---- Collect: the fleet phase-end barrier. ----
             clock = plan.finish()
             self.clock = clock
+            serve_batched = session.fleet_serve_batched
             for lane in lanes:
                 self._score_lane_until(lane, min(clock, duration),
                                        lane.serving, None)
@@ -502,7 +511,13 @@ class FleetRun:
                 lane.acc_l = float(
                     (lane.pred_l_h.collect() == y_l).mean())
                 lane.buffer.update(lane.x_l, y_l)  # line 14
-                lane.sink.flush()
+                if not serve_batched:
+                    lane.sink.flush()
+            if serve_batched:
+                # One vmapped B-SA program serves every lane's queued
+                # score windows (ledger already charged per window).
+                flush_sinks_batched(session.inference,
+                                    [ln.sink for ln in lanes])
 
             # -------- Next decisions (lines 11-13), fleet-proportioned ----
             # Per-lane engine-side drift verdicts: computed once here (by
@@ -562,6 +577,10 @@ class FleetRun:
         results = []
         for lane in self.lanes:
             self._score_lane_until(lane, self.duration, lane.serving, None)
+        if session.fleet_serve_batched:
+            flush_sinks_batched(session.inference,
+                                [ln.sink for ln in self.lanes])
+        for lane in self.lanes:
             acc_timeline = lane.timeline_prefix + lane.sink.timeline()
             accs = [a for _, a in acc_timeline]
             results.append(CLResult(
@@ -735,6 +754,7 @@ class FleetSpec(CLSystemSpec):
     budget_streams: float = 1.0
     row_policy: object = "resolve-max"  # name, class, or ready instance
     fleet_kwargs: Optional[dict] = None
+    serve_batched: bool = False  # one vmapped B-SA program per phase
 
     def build(self) -> FleetSession:
         return FleetSession(
@@ -742,5 +762,6 @@ class FleetSpec(CLSystemSpec):
             fleet_budget_streams=self.budget_streams,
             fleet_row_policy=self.row_policy,
             fleet_kwargs=self.fleet_kwargs,
+            fleet_serve_batched=self.serve_batched,
             **self._session_kwargs(),
         )

@@ -25,6 +25,7 @@ Every jitted apply invocation bumps ``n_apply_calls`` (bench/test counter).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
@@ -34,6 +35,69 @@ import numpy as np
 from repro.configs.dacapo_pairs import VisionConfig
 from repro.core import mx as mx_lib
 from repro.core.partition import SpatialPartition
+
+
+class ServingParamsCache:
+    """Version-keyed cache of quantized serving copies.
+
+    ``quantize_tree`` fake-quants every weight of a tree — one jitted call
+    per leaf — yet between retrain steps the source tree is the same
+    immutable object (JAX never mutates arrays in place; ``fit`` returns a
+    fresh tree), and the teacher tree never changes at all: before this
+    cache, every labeling burst re-quantized the whole teacher from
+    scratch. Entries key on (source-tree identity, precision); the entry
+    holds a strong reference to the source tree, pinning its ``id`` for
+    the entry's lifetime, which makes identity a sound version key — a
+    retrained tree is a NEW object, so its serving copy can never be
+    served stale. :meth:`RetrainKernel.fit` additionally invalidates the
+    tree it supersedes explicitly. ``maxsize=0`` disables caching (the
+    benches' uncached baseline); eviction is LRU.
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        # id(source tree) -> (source tree, {precision: quantized tree})
+        self._entries: "OrderedDict[int, tuple]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, params, precision: str, quantize=mx_lib.quantize_tree):
+        key = id(params)
+        entry = self._entries.get(key)
+        if entry is not None and entry[0] is params:
+            cached = entry[1].get(precision)
+            if cached is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return cached
+        self.misses += 1
+        quantized = quantize(params, precision)
+        if self.maxsize <= 0:
+            return quantized
+        if entry is None or entry[0] is not params:
+            entry = (params, {})
+            self._entries[key] = entry
+        entry[1][precision] = quantized
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return quantized
+
+    def invalidate(self, params=None) -> None:
+        """Drop the entries of ``params`` — or everything when ``None``."""
+        if params is None:
+            self._entries.clear()
+            return
+        entry = self._entries.get(id(params))
+        if entry is not None and entry[0] is params:
+            del self._entries[id(params)]
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
 
 
 @runtime_checkable
@@ -118,12 +182,16 @@ class InferenceKernel(_PlacedKernel):
         self.estimator = estimator
         self.apply_mx = apply_mx
         self._apply = jax.jit(model.apply)
+        self._apply_fleet = None  # lazily-built vmapped multi-lane apply
+        self.serving_cache = ServingParamsCache()
 
     def serving_params(self, params, precision: str):
         """UpdateWeight (Alg. 1 line 6): fake-quant the serving copy to the
-        inference precision; the retraining master stays fp32."""
+        inference precision; the retraining master stays fp32. Served from
+        the version-keyed :class:`ServingParamsCache` — re-requesting the
+        serving copy of an unchanged tree is a hit, not a re-quantize."""
         if self.apply_mx:
-            return mx_lib.quantize_tree(params, precision)
+            return self.serving_cache.get(params, precision)
         return params
 
     def predict_async(self, params, x) -> jax.Array:
@@ -155,6 +223,41 @@ class InferenceKernel(_PlacedKernel):
             out.append(fused[off: off + size])
             off += size
         return out
+
+    def predict_fleet_async(self, params_list: Sequence,
+                            windows: Sequence[np.ndarray]
+                            ) -> List[jax.Array]:
+        """Serve several lanes' frame windows in ONE device program — the
+        B-SA mirror of :meth:`LabelingKernel.label_fleet_async`.
+
+        Each fleet lane serves its own (quantized) student tree, so a
+        single fused batch is not enough: the per-lane trees are stacked on
+        a new leading axis, the windows zero-padded to the longest lane and
+        stacked likewise, and one jitted ``vmap``-ped apply serves the
+        whole fleet; per-lane predictions split back out as device-side
+        slices (still async), pad rows dropped. A single lane takes the
+        exact ``predict_async`` path. Note the vmapped apply may differ
+        from per-lane applies in float ulps (different XLA lowering), which
+        is why fleet batched serving is an opt-in knob — see
+        ``FleetSpec.serve_batched``."""
+        if not windows:
+            return []
+        if len(windows) == 1:
+            return [self.predict_async(params_list[0], windows[0])]
+        sizes = [len(w) for w in windows]
+        n_max = max(sizes)
+        padded = np.stack([
+            w if len(w) == n_max else np.concatenate(
+                [w, np.zeros((n_max - len(w),) + w.shape[1:], w.dtype)])
+            for w in windows])
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *params_list)
+        if self._apply_fleet is None:
+            self._apply_fleet = jax.jit(jax.vmap(self.model.apply))
+        self.n_apply_calls += 1
+        logits = self._apply_fleet(stacked, self._put(padded))
+        preds = jnp.argmax(logits, -1)
+        return [preds[i, :size] for i, size in enumerate(sizes)]
 
     def time_per_sample(self, rows: int, precision: str) -> float:
         return self.estimator.forward_time(self.full_cfg, rows, precision,
@@ -190,15 +293,19 @@ class LabelingKernel(_PlacedKernel):
         self.estimator = estimator
         self.apply_mx = apply_mx
         self._apply = jax.jit(model.apply)
+        self.serving_cache = ServingParamsCache()
 
     def label_async(self, params, x, precision: str,
                     microbatch: Optional[int] = None) -> jax.Array:
         """Pseudo-labels as a device array (no host sync). With
         ``microbatch``, large labeling bursts (N_ldd on drift) are split into
         chunks so each starts executing on the T-SA while the next is staged
-        — per-sample models make the result equal to one full-batch call."""
+        — per-sample models make the result equal to one full-batch call.
+        The teacher's quantized copy comes from the version-keyed serving
+        cache: the tree never changes, so every burst after the first is a
+        hit instead of a whole-tree re-quantize."""
         if self.apply_mx:
-            params = mx_lib.quantize_tree(params, precision)
+            params = self.serving_cache.get(params, precision)
         if microbatch and len(x) > microbatch:
             parts = [jnp.argmax(self._run_apply(params, x[i: i + microbatch]),
                                 -1)
@@ -259,6 +366,9 @@ class RetrainKernel(_PlacedKernel):
         self.estimator = estimator
         self.hp = hp
         self._step = jax.jit(self._sgd_step)
+        # Serving caches to invalidate when retraining supersedes a tree
+        # (the session wires the inference kernel's cache in here).
+        self.invalidates: Tuple[ServingParamsCache, ...] = ()
 
     def _sgd_step(self, params, opt, x, y):
         def loss_fn(p):
@@ -285,7 +395,12 @@ class RetrainKernel(_PlacedKernel):
         exactly the number of SGD steps executed (a D_t smaller than one
         SGD batch runs — and charges — zero steps). ``epochs`` overrides
         the hyper-parameter default — the knob cross-stream allocators use
-        to proportion retraining depth per stream."""
+        to proportion retraining depth per stream. Retraining supersedes
+        the incoming tree: its cached serving copies are invalidated on
+        every registered :class:`ServingParamsCache` (identity keys make
+        stale hits impossible anyway — this reclaims the entries)."""
+        for cache in self.invalidates:
+            cache.invalidate(params)
         hp = self.hp
         n_batches = 0
         for _ in range(epochs if epochs is not None else hp.epochs):

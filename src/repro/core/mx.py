@@ -2,8 +2,14 @@
 
 ``mx_dense`` is a drop-in matmul whose forward runs at a configurable MX
 precision (MX6 for inference/labeling, MX9 for retraining — the paper's §IV
-operating points) with a straight-through-estimator backward at MX9. Model
-quantization helpers fake-quant whole parameter trees for MX inference.
+operating points) with a straight-through-estimator backward at MX9. The
+forward AND both gradient GEMMs route through the FUSED quantize→matmul
+entry (``ops.mx_matmul_fused``): one program per GEMM, quantization happens
+inside the matmul (in VMEM on the Pallas path, in one jit on CPU hosts) —
+MX mantissas/scales never materialize between ops. Model quantization
+helpers fake-quant whole parameter trees for MX inference; the per-kernel
+serving-copy *cache* over those trees lives in core/kernel.py
+(``ServingParamsCache``).
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ DEFAULT_POLICY = PrecisionPolicy()
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def mx_dense(x: jax.Array, w: jax.Array, fwd_prec: str = "mx9",
              bwd_prec: str = "mx9") -> jax.Array:
-    """x [..., K] @ w [K, N] with MX quantization of both operands.
+    """x [..., K] @ w [K, N] with MX quantization of both operands, fused
+    into the matmul (one program per GEMM — ``ops.mx_matmul_fused``).
 
     Differentiable: backward quantizes the incoming cotangent and the saved
     operands at ``bwd_prec`` (straight-through estimator), mirroring the
@@ -42,7 +49,7 @@ def mx_dense(x: jax.Array, w: jax.Array, fwd_prec: str = "mx9",
     """
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    y = ops.mx_matmul(x2, w, fwd_prec, fwd_prec)
+    y = ops.mx_matmul_fused(x2, w, fwd_prec, fwd_prec)
     return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
 
 
@@ -55,9 +62,9 @@ def _mx_dense_bwd(fwd_prec, bwd_prec, res, g):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    # dX = g @ W^T ; dW = X^T @ g — both through MX at bwd_prec.
-    dx = ops.mx_matmul(g2, w.T, bwd_prec, bwd_prec)
-    dw = ops.mx_matmul(x2.T, g2, bwd_prec, bwd_prec)
+    # dX = g @ W^T ; dW = X^T @ g — both through fused MX at bwd_prec.
+    dx = ops.mx_matmul_fused(g2, w.T, bwd_prec, bwd_prec)
+    dw = ops.mx_matmul_fused(x2.T, g2, bwd_prec, bwd_prec)
     return dx.reshape(shape).astype(x.dtype), dw.astype(w.dtype)
 
 

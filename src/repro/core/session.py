@@ -178,6 +178,32 @@ class _ScoreSink:
                 for t_end, pred, y, kf in self._entries]
 
 
+def flush_sinks_batched(kernel: InferenceKernel,
+                        sinks: Sequence[_ScoreSink]) -> None:
+    """Flush several lanes' score sinks through ONE vmapped fleet program
+    (:meth:`InferenceKernel.predict_fleet_async`) instead of one fused
+    predict per lane — the fleet's B-SA serves every lane's queued score
+    windows in a single program per phase. Each live sink's windows are
+    concatenated into that lane's batch; predictions split back per window
+    device-side. Empty sinks are skipped and a single pending lane takes
+    its sink's own fused flush path (exactly ``_ScoreSink.flush``)."""
+    live = [s for s in sinks if s._pending]
+    if len(live) <= 1:
+        for sink in live:
+            sink.flush()
+        return
+    lane_windows = [np.concatenate([x for _, x, _, _ in s._pending], axis=0)
+                    for s in live]
+    preds = kernel.predict_fleet_async([s._params for s in live],
+                                       lane_windows)
+    for sink, pred in zip(live, preds):
+        off = 0
+        for t_end, x, y, kf in sink._pending:
+            sink._entries.append((t_end, pred[off: off + len(x)], y, kf))
+            off += len(x)
+        sink._pending.clear()
+
+
 class CLSession:
     """Executes allocation decisions phase-by-phase against the kernels."""
 
@@ -254,6 +280,9 @@ class CLSession:
         self.retrain = RetrainKernel(
             self.student, self.full_student, self.estimator, self.hp)
         self.kernels = (self.inference, self.labeling, self.retrain)
+        # Retraining supersedes the student tree: drop its cached serving
+        # copy from the inference kernel's version-keyed cache.
+        self.retrain.invalidates = (self.inference.serving_cache,)
 
         # Spatial partition: fission the mesh if one is given.
         self.mesh = mesh

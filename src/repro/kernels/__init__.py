@@ -1,3 +1,15 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# This repo's hot-spots (DaCapo's MX pipeline + attention):
+#   mx_quantize.py / mx_matmul.py — the unfused MX kernels (quantize to
+#     MXTensor, matmul over MXTensors)
+#   mx_fused.py — the fused quantize→matmul kernel: both operands
+#     quantized per-16-block in VMEM inside the matmul grid, ONE program
+#     per GEMM, bit-identical to the unfused chain
+#   flash_attention.py — chunked online-softmax attention
+#   ref.py — pure-jnp oracles (bit-exact ground truth for all of the
+#     above; also the serving path under REPRO_KERNEL_MODE=ref)
+#   ops.py — the only public entry: mode routing (pallas/interpret/ref),
+#     tile-alignment padding (no silent ref fallbacks), kernel_stats().

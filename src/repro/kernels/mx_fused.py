@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: FUSED MX quantize→matmul (precision-conversion unit
+feeding the DPE arrays directly, paper §V-C → §V-B).
+
+The unfused pipeline materializes ``MXTensor``s in HBM between the quantize
+kernel (mx_quantize.py) and the matmul kernel (mx_matmul.py). This kernel
+takes the fp32/bf16 operands themselves: each [bm, bk] / [bk, bn] tile is
+quantized per-16-block *in VMEM inside the matmul grid* — shared exponents,
+micro-exponent bits and sign-magnitude mantissas are computed, applied and
+discarded on-chip — and the dequantized tiles hit the MXU as fp32 dot
+products with fp32 accumulation in a VMEM scratch accumulator. MX mantissas
+and scales never touch HBM.
+
+Bit-identity contract: the quantize math below is element-for-element the
+``_quantize_kernel`` of mx_quantize.py (including the float→int8→float
+mantissa round trip, which zero-blocks rely on), the dequant scales are the
+same integer effective exponents, and the k-grid accumulation order matches
+``_matmul_kernel`` of mx_matmul.py for equal tile sizes — so the fused
+output is bitwise equal to quantize→matmul (tests/test_mx.py pins this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import BLOCK, EXP_MIN, MANTISSA_BITS, SUBBLOCK
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _exponent(x):
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    return jnp.where(x == 0.0, EXP_MIN, e)
+
+
+def _quant_dequant_lhs(x, mb: int):
+    """Fake-quant a [bm, bk] tile per 16-block along the LAST axis, fully
+    in registers/VMEM — the values the unfused dequant would reload."""
+    bm, bk = x.shape
+    nb = bk // BLOCK
+    xb = x.reshape(bm, nb, BLOCK)
+    e = _exponent(xb)
+    e_shared = jnp.max(e, axis=-1)  # [bm, nb]
+    e_sub = jnp.max(e.reshape(bm, nb, BLOCK // SUBBLOCK, SUBBLOCK), axis=-1)
+    mx = (e_sub < e_shared[..., None]).astype(jnp.int32)  # [bm, nb, 8]
+    e_eff = e_shared[..., None] - mx
+    qscale = jnp.exp2(jnp.float32(mb - 1) - e_eff.astype(jnp.float32))
+    xs = xb.reshape(bm, nb, BLOCK // SUBBLOCK, SUBBLOCK)
+    m = jnp.clip(jnp.round(jnp.abs(xs) * qscale[..., None]), 0, 2 ** mb - 1)
+    # int8 round trip: NOT redundant — all-zero blocks produce an inf
+    # quantize scale whose 0*inf=nan mantissa the int cast flushes to 0,
+    # exactly as the unfused quantize kernel stores it.
+    m = (m * jnp.sign(xs)).astype(jnp.int8).astype(jnp.float32)
+    dscale = jnp.exp2(e_eff.astype(jnp.float32) - (mb - 1))
+    return (m * dscale[..., None]).reshape(bm, bk)
+
+
+def _quant_dequant_rhs(x, mb: int):
+    """Fake-quant a [bk, bn] tile per 16-block along the FIRST axis (the
+    contraction axis of the rhs) without transposing the tile."""
+    bk, bn = x.shape
+    nb = bk // BLOCK
+    xb = x.reshape(nb, BLOCK, bn)
+    e = _exponent(xb)
+    e_shared = jnp.max(e, axis=1)  # [nb, bn]
+    e_sub = jnp.max(e.reshape(nb, BLOCK // SUBBLOCK, SUBBLOCK, bn), axis=2)
+    mx = (e_sub < e_shared[:, None, :]).astype(jnp.int32)  # [nb, 8, bn]
+    e_eff = e_shared[:, None, :] - mx
+    qscale = jnp.exp2(jnp.float32(mb - 1) - e_eff.astype(jnp.float32))
+    xs = xb.reshape(nb, BLOCK // SUBBLOCK, SUBBLOCK, bn)
+    m = jnp.clip(jnp.round(jnp.abs(xs) * qscale[:, :, None, :]),
+                 0, 2 ** mb - 1)
+    m = (m * jnp.sign(xs)).astype(jnp.int8).astype(jnp.float32)
+    dscale = jnp.exp2(e_eff.astype(jnp.float32) - (mb - 1))
+    return (m * dscale[:, :, None, :]).reshape(bk, bn)
+
+
+def _fused_kernel(a_ref, b_ref, out_ref, acc_ref, *, mb_lhs: int,
+                  mb_rhs: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _quant_dequant_lhs(a_ref[...].astype(jnp.float32), mb_lhs)
+    b = _quant_dequant_rhs(b_ref[...].astype(jnp.float32), mb_rhs)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("precision_a", "precision_b",
+                                             "bm", "bn", "bk", "interpret"))
+def mx_matmul_fused(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
+                    precision_b: str = "mx6", *, bm: int = DEFAULT_BM,
+                    bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jax.Array:
+    """a [M, K] fp32/bf16 @ b [K, N] → fp32 [M, N], both operands quantized
+    per-16-block on the fly inside the matmul grid. ONE program for the
+    whole quantize→matmul chain."""
+    m_dim, k_dim = a.shape
+    k2, n_dim = b.shape
+    assert k_dim == k2, (k_dim, k2)
+    bm, bn, bk = min(bm, m_dim), min(bn, n_dim), min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0
+    assert bk % BLOCK == 0
+    nk = k_dim // bk
+    grid = (m_dim // bm, n_dim // bn, nk)
+    kernel = functools.partial(
+        _fused_kernel, mb_lhs=MANTISSA_BITS[precision_a],
+        mb_rhs=MANTISSA_BITS[precision_b], nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

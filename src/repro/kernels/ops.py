@@ -2,22 +2,65 @@
 
 On TPU backends the kernels lower natively; everywhere else (this CPU
 container, the dry-run host platform) they execute in ``interpret=True`` mode
-or fall back to the pure-jnp oracle — selected automatically, overridable via
+or use the pure-jnp oracle — selected automatically, overridable via
 ``REPRO_KERNEL_MODE`` in {"pallas", "interpret", "ref"}.
+
+Two hot-path properties this layer guarantees (PR 7):
+
+* **No silent fallbacks.** Odd shapes used to drop quietly onto the ref
+  oracle (``m % 8 or n % 128 or k % 128``); now every Pallas entry pads
+  M/N/K up to its tile alignment with zeros and slices the result back —
+  exact, because all-zero 16-blocks quantize to zero mantissas and add
+  nothing to the dot product. ``kernel_stats()`` records which path served
+  every call so benches/tests can assert the dispatch.
+* **A fused entry.** ``mx_matmul_fused`` runs the whole quantize→matmul
+  chain as ONE program — the fused Pallas kernel (mx_fused.py: MX data
+  never leaves VMEM) on pallas/interpret, the single-jit fused oracle
+  (ref.mx_matmul_fused_ref) on ref — bit-identical to
+  ``mx_quantize``→``mx_matmul`` in every mode.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
+import threading
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import mx_fused as _mf
 from repro.kernels import mx_matmul as _mm
 from repro.kernels import mx_quantize as _mq
 from repro.kernels import ref as _ref
 from repro.kernels.ref import BLOCK, MXTensor
+
+# Pallas tile alignments: fp32 rows to the 8-sublane tile, matmul N/K to
+# the 128-lane tile.
+ROW_ALIGN = 8
+LANE_ALIGN = 128
+
+_stats_lock = threading.Lock()
+_kernel_stats: Dict[str, Dict[str, int]] = {}
+
+
+def _count(op: str, path: str) -> None:
+    with _stats_lock:
+        by_path = _kernel_stats.setdefault(op, {})
+        by_path[path] = by_path.get(path, 0) + 1
+
+
+def kernel_stats() -> Dict[str, Dict[str, int]]:
+    """Per-op dispatch counters since the last reset: ``{op: {path: n}}``
+    where ``path`` is the mode that actually served the call ("pallas",
+    "interpret", "ref"). Lets benches/tests assert which path ran."""
+    with _stats_lock:
+        return {op: dict(paths) for op, paths in _kernel_stats.items()}
+
+
+def reset_kernel_stats() -> None:
+    with _stats_lock:
+        _kernel_stats.clear()
 
 
 def kernel_mode() -> str:
@@ -35,16 +78,66 @@ def _pad_last(x, multiple):
     return x, pad
 
 
+def _pad_dim(x, axis, multiple):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x
+
+
+def _row_tile(m: int) -> int:
+    """Largest ≤128 row tile dividing ``m`` (``m % 8 == 0`` after padding).
+    Keeps the historical tile for shapes the kernels already served, so
+    their accumulation pattern — and bit pattern — is unchanged."""
+    t = min(128, m)
+    return t if m % t == 0 else ROW_ALIGN
+
+
+def _k_tile(k: int) -> int:
+    """Contraction tile for the matmul grids (``k % 128 == 0`` after
+    padding): the historical min(512, k) when it divides, else the largest
+    power-of-two tile that does."""
+    t = min(_mm.DEFAULT_BK, k)
+    if k % t == 0:
+        return t
+    return 256 if k % 256 == 0 else LANE_ALIGN
+
+
+def _quant_k_tile(k: int) -> int:
+    """Contraction tile for the quantize grid (K padded to 16 only)."""
+    if k <= _mq.DEFAULT_BK:
+        return k
+    for t in (512, 256, 128, 64, 32, 16):
+        if k % t == 0:
+            return t
+    return BLOCK
+
+
 def mx_quantize(x: jax.Array, precision: str) -> MXTensor:
-    """Quantize along the last axis (auto-padded to a multiple of 16)."""
+    """Quantize along the last axis (auto-padded to a multiple of 16).
+
+    The Pallas path pads the flattened row count up to the 8-row sublane
+    alignment and slices the result back — odd batch sizes no longer fall
+    back silently to the ref oracle."""
     mode = kernel_mode()
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
-    x2, pad = _pad_last(x2, BLOCK)
-    if mode == "ref" or x2.shape[0] % 8:
-        q = _ref.mx_quantize_ref(x2, precision)
-    else:
-        q = _mq.mx_quantize(x2, precision, interpret=(mode == "interpret"))
+    x2, _ = _pad_last(x2, BLOCK)
+    if mode == "ref":
+        _count("mx_quantize", "ref")
+        return _ref.mx_quantize_ref(x2, precision)
+    rows = x2.shape[0]
+    x2p = _pad_dim(x2, 0, ROW_ALIGN)
+    q = _mq.mx_quantize(x2p, precision, bm=_row_tile(x2p.shape[0]),
+                        bk=_quant_k_tile(x2p.shape[1]),
+                        interpret=(mode == "interpret"))
+    _count("mx_quantize", mode)
+    if x2p.shape[0] != rows:
+        q = MXTensor(q.mantissa[:rows], q.exponent[:rows],
+                     q.mx_bits[:rows], q.precision)
     return q
 
 
@@ -63,27 +156,71 @@ def mx_quant_dequant(x: jax.Array, precision: str) -> jax.Array:
     return y.reshape(shape).astype(x.dtype)
 
 
+def _pad_matmul_operands(a: jax.Array, b: jax.Array):
+    """Zero-pad a [M, K] / b [K, N] to the Pallas matmul tile alignments.
+    Exact: zero rows/columns only produce output entries that are sliced
+    off, and all-zero K-blocks quantize to zero mantissas, contributing
+    nothing to the kept dot products."""
+    a = _pad_dim(_pad_dim(a, 0, ROW_ALIGN), 1, LANE_ALIGN)
+    b = _pad_dim(_pad_dim(b, 0, LANE_ALIGN), 1, LANE_ALIGN)
+    return a, b
+
+
 def mx_matmul(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
               precision_b: str = "mx6") -> jax.Array:
-    """a [M, K] @ b [K, N] with both operands MX-quantized along K."""
+    """a [M, K] @ b [K, N] with both operands MX-quantized along K — the
+    UNFUSED pipeline: quantized operands materialize as ``MXTensor``s
+    between the quantize and matmul programs. Prefer :func:`mx_matmul_fused`
+    on the hot path."""
     mode = kernel_mode()
     if mode == "ref":
         # Pad K to a block multiple exactly like the kernel path does
         # (zero pads quantize to zero and add nothing to the dot product).
+        _count("mx_matmul", "ref")
         a, pad = _pad_last(a, BLOCK)
         if pad:
             b = jnp.pad(b, [(0, pad), (0, 0)])
         return _ref.mx_matmul_fp_ref(a, b, precision_a, precision_b)
-    qa = mx_quantize(a, precision_a)
-    qb_t = mx_quantize(b.T, precision_b)
+    m, n = a.shape[0], b.shape[1]
+    ap, bp = _pad_matmul_operands(a, b)
+    qa = mx_quantize(ap, precision_a)
+    qb_t = mx_quantize(bp.T, precision_b)
     qb = MXTensor(qb_t.mantissa.T, qb_t.exponent.T, qb_t.mx_bits.T,
                   qb_t.precision)
-    m, k = qa.mantissa.shape
-    n = qb.mantissa.shape[1]
-    if m % 8 or n % 128 or k % 128:
-        return _ref.mx_matmul_ref(qa, MXTensor(
-            qb.mantissa.T, qb.exponent.T, qb.mx_bits.T, qb.precision))
-    return _mm.mx_matmul(qa, qb, interpret=(mode == "interpret"))
+    out = _mm.mx_matmul(qa, qb, bm=_row_tile(ap.shape[0]),
+                        bn=_row_tile(bp.shape[1]), bk=_k_tile(ap.shape[1]),
+                        interpret=(mode == "interpret"))
+    _count("mx_matmul", mode)
+    if out.shape[0] != m or out.shape[1] != n:
+        out = out[:m, :n]
+    return out
+
+
+def mx_matmul_fused(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
+                    precision_b: str = "mx6") -> jax.Array:
+    """Fused quantize→matmul: a [M, K] fp32/bf16 @ b [K, N] → fp32 [M, N],
+    both operands quantized per-16-block along K *inside* the matmul — ONE
+    program for the whole chain (mx_fused.py in pallas/interpret modes, the
+    single-jit ``mx_matmul_fused_ref`` oracle in ref mode). Bit-identical
+    to ``mx_quantize`` → ``mx_matmul`` in every kernel mode."""
+    mode = kernel_mode()
+    if mode == "ref":
+        _count("mx_matmul_fused", "ref")
+        a, pad = _pad_last(a, BLOCK)
+        if pad:
+            b = jnp.pad(b, [(0, pad), (0, 0)])
+        return _ref.mx_matmul_fused_ref(a, b, precision_a, precision_b)
+    m, n = a.shape[0], b.shape[1]
+    ap, bp = _pad_matmul_operands(a, b)
+    out = _mf.mx_matmul_fused(ap, bp, precision_a, precision_b,
+                              bm=_row_tile(ap.shape[0]),
+                              bn=_row_tile(bp.shape[1]),
+                              bk=_k_tile(ap.shape[1]),
+                              interpret=(mode == "interpret"))
+    _count("mx_matmul_fused", mode)
+    if out.shape[0] != m or out.shape[1] != n:
+        out = out[:m, :n]
+    return out
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -94,8 +231,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
     """Flash attention; q [B,Sq,H,D], k/v [B,Skv,Kv,D]."""
     mode = kernel_mode()
     if mode == "ref":
+        _count("flash_attention", "ref")
         return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                         softcap=softcap, scale=scale)
+    _count("flash_attention", mode)
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale, q_offset=q_offset,
                                interpret=(mode == "interpret"))

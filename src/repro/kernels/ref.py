@@ -12,6 +12,7 @@ MX (micro-exponent block floating point) semantics, faithful to the paper's
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -93,6 +94,18 @@ def mx_matmul_fp_ref(a: jax.Array, b: jax.Array, precision_a: str,
     qa = mx_quantize_ref(a, precision_a)
     qb = mx_quantize_ref(b.T, precision_b)
     return mx_matmul_ref(qa, qb)
+
+
+@functools.partial(jax.jit, static_argnames=("precision_a", "precision_b"))
+def mx_matmul_fused_ref(a: jax.Array, b: jax.Array, precision_a: str,
+                        precision_b: str) -> jax.Array:
+    """Single-jit fused quantize→matmul for CPU/interpret hosts: the whole
+    quantize-both-operands-then-matmul chain compiles (and dispatches) as
+    ONE program, mirroring the fused Pallas kernel (mx_fused.py) where MX
+    data never leaves VMEM. Numerically it IS ``mx_matmul_fp_ref`` — the
+    ops are elementwise-exact (bitcast exponents, power-of-two scales,
+    round/clip, int8 casts) plus one dot, so jitting changes nothing."""
+    return mx_matmul_fp_ref(a, b, precision_a, precision_b)
 
 
 # -------------------------------------------------------- flash attention ---

@@ -285,6 +285,48 @@ def test_snapshot_state_roundtrip_through_checkpoint(pretrained, tmp_path):
     assert back.clock == snap.clock
 
 
+def test_snapshot_restore_requantizes_serving_copy(pretrained, tmp_path):
+    """A LaneSnapshot restore freshly quantizes the restored tree: the
+    serving cache (PR 7) can never hand a restored lane a stale quantized
+    copy — snapshot params are host-copied, so the restored tree is a new
+    object and identity keying forces a miss."""
+    from repro.core import mx as mx_lib
+
+    hp, tp, sp = pretrained
+    spec = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                     fleet_mode="drift-weighted", apply_mx=True, seed=0,
+                     eval_fps=0.5)
+    sess = spec.build()
+    sess.set_pretrained(tp, sp)
+    run = sess.open_run(_streams(1), duration=40.0)
+    run.step()
+    snap = run.snapshot_lane(0)
+    run.close()
+    cache = sess.inference.serving_cache
+    misses_before = cache.stats()["misses"]
+
+    state = snapshot_to_state(snap)
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    ckpt.save(1, state)
+    restored_state, _ = ckpt.restore(1, state)
+    back = state_to_snapshot(restored_state)
+
+    run2 = sess.open_run(None, duration=40.0)
+    lane = run2.attach_lane(_streams(1)[0], key="cam0", snapshot=back)
+    # New tree object -> cache MISS, never a stale hit.
+    assert cache.stats()["misses"] == misses_before + 1
+    entry = cache._entries[id(lane.params)]
+    assert entry[0] is lane.params
+    (prec, qtree), = entry[1].items()
+    assert lane.serving is qtree
+    # And the serving copy is exactly quantize_tree(restored params).
+    expect = mx_lib.quantize_tree(lane.params, prec)
+    for la, lb in zip(jax.tree_util.tree_leaves(lane.serving),
+                      jax.tree_util.tree_leaves(expect)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    run2.close()
+
+
 def test_empty_buffer_snapshot_roundtrip():
     """The zeros((0,)) sentinel: a never-filled buffer survives the npz
     encoding (None is not a pytree leaf)."""

@@ -136,3 +136,105 @@ def test_quantize_tree_only_touches_matrices():
     np.testing.assert_array_equal(q["b"], params["b"])
     np.testing.assert_array_equal(q["step"], params["step"])
     assert q["w"].shape == params["w"].shape
+
+
+# ------------------------------------------------- fused hot path (PR 7) --
+# Aligned, odd/ragged (exercises the M/N/K padding), and a large mixed case.
+FUSED_SHAPES = [(8, 128, 128), (5, 48, 33), (64, 512, 384)]
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("mnk", FUSED_SHAPES)
+@pytest.mark.parametrize("pa,pb", [("mx4", "mx4"), ("mx6", "mx6"),
+                                   ("mx9", "mx6")])
+def test_fused_matches_unfused_bitwise(monkeypatch, mode, mnk, pa, pb):
+    """``mx_matmul_fused`` (one program) is bit-identical to the unfused
+    ``mx_quantize``→``mx_matmul`` chain in every kernel mode — including
+    odd shapes served through the zero-pad + slice path."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+    m, k, n = mnk
+    a = jax.random.normal(jax.random.PRNGKey(10), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(11), (k, n))
+    fused = np.asarray(ops.mx_matmul_fused(a, b, pa, pb))
+    unfused = np.asarray(ops.mx_matmul(a, b, pa, pb))
+    np.testing.assert_array_equal(fused, unfused)
+    assert fused.shape == (m, n)
+
+
+def test_fused_handles_zero_blocks(monkeypatch):
+    """All-zero 16-blocks hit the inf-quantize-scale edge (0 * inf = nan
+    mantissa); the fused kernel must flush it to zero exactly like the
+    unfused int8 mantissa cast does."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    a = jax.random.normal(jax.random.PRNGKey(12), (8, 128))
+    a = a.at[:, 32:64].set(0.0)  # two all-zero blocks per row
+    a = a.at[2].set(0.0)  # one all-zero row
+    b = jax.random.normal(jax.random.PRNGKey(13), (128, 128))
+    for prec in PRECISIONS:
+        fused = np.asarray(ops.mx_matmul_fused(a, b, prec, prec))
+        unfused = np.asarray(ops.mx_matmul(a, b, prec, prec))
+        assert np.all(np.isfinite(fused)), prec
+        np.testing.assert_array_equal(fused, unfused)
+        np.testing.assert_array_equal(fused[2], np.zeros(128))
+
+
+def test_fused_kernel_direct_vs_separate_kernels():
+    """Kernel-level check (no ops routing): the fused Pallas kernel equals
+    quantize-kernel → matmul-kernel composition at the SAME tile sizes."""
+    from repro.kernels.mx_fused import mx_matmul_fused as fused_kernel
+
+    m, k, n = 16, 256, 128
+    a = jax.random.normal(jax.random.PRNGKey(14), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(15), (k, n))
+    out_f = fused_kernel(a, b, "mx6", "mx6", bm=8, bn=128, bk=128,
+                         interpret=True)
+    qa = mx_quantize_kernel(a, "mx6", interpret=True)
+    qbt = mx_quantize_kernel(b.T, "mx6", interpret=True)
+    qb = MXTensor(qbt.mantissa.T, qbt.exponent.T, qbt.mx_bits.T, "mx6")
+    out_u = mx_matmul_kernel(qa, qb, bm=8, bn=128, bk=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_mx_dense_vjp_matches_unfused(monkeypatch, mode):
+    """The fused-path ``mx_dense`` VJP is bitwise the manual unfused
+    composition of the two gradient GEMMs."""
+    from repro.core.mx import mx_dense
+
+    monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+    x = jax.random.normal(jax.random.PRNGKey(16), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(17), (64, 32))
+
+    def loss(x, w):
+        return jnp.sum(mx_dense(x, w, "mx6", "mx9") ** 2)
+
+    y = ops.mx_matmul_fused(x, w, "mx6", "mx6")
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    g2 = np.asarray(2.0 * y, np.float32)
+    gx_manual = ops.mx_matmul(jnp.asarray(g2), w.T, "mx9", "mx9")
+    gw_manual = ops.mx_matmul(x.T, jnp.asarray(g2), "mx9", "mx9")
+    np.testing.assert_array_equal(np.asarray(gx), np.asarray(gx_manual))
+    np.testing.assert_array_equal(np.asarray(gw), np.asarray(gw_manual))
+
+
+def test_kernel_stats_no_silent_ref_fallback(monkeypatch):
+    """Odd shapes must be served by the requested kernel path (padded), not
+    silently dropped onto the ref oracle; ``kernel_stats`` proves it."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    ops.reset_kernel_stats()
+    try:
+        x = jax.random.normal(jax.random.PRNGKey(18), (5, 33))
+        q = ops.mx_quantize(x, "mx6")
+        assert q.mantissa.shape[0] == 5
+        a = jax.random.normal(jax.random.PRNGKey(19), (5, 48))
+        b = jax.random.normal(jax.random.PRNGKey(20), (48, 33))
+        out = ops.mx_matmul(a, b, "mx6", "mx6")
+        assert out.shape == (5, 33)
+        out_f = ops.mx_matmul_fused(a, b, "mx6", "mx6")
+        assert out_f.shape == (5, 33)
+        stats = ops.kernel_stats()
+        for op in ("mx_quantize", "mx_matmul", "mx_matmul_fused"):
+            assert "ref" not in stats[op], (op, stats)
+            assert stats[op]["interpret"] >= 1, (op, stats)
+    finally:
+        ops.reset_kernel_stats()

@@ -175,6 +175,81 @@ def test_retrain_kernel(kernel_setup):
         3.0 * est.forward_time(RESNET18, 8, "mx9", hp.sgd_batch))
 
 
+# --------------------------------------------- serving-copy cache (PR 7) --
+def test_serving_cache_hits_and_misses(kernel_setup):
+    est, hp, model, params, x = kernel_setup
+    k = InferenceKernel(model, RESNET18, est, apply_mx=True)
+    q1 = k.serving_params(params, "mx6")
+    assert k.serving_cache.stats() == {"hits": 0, "misses": 1, "entries": 1}
+    # Same tree, same precision -> hit, SAME quantized object.
+    q2 = k.serving_params(params, "mx6")
+    assert q2 is q1
+    assert k.serving_cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    # Same tree, other precision -> miss, shares the entry.
+    k.serving_params(params, "mx9")
+    assert k.serving_cache.stats() == {"hits": 1, "misses": 2, "entries": 1}
+    # A fresh tree (what fit returns) -> miss under a new entry.
+    params2 = jax.tree_util.tree_map(lambda p: p + 0, params)
+    k.serving_params(params2, "mx6")
+    assert k.serving_cache.stats() == {"hits": 1, "misses": 3, "entries": 2}
+    # apply_mx=False bypasses the cache entirely.
+    k_raw = InferenceKernel(model, RESNET18, est, apply_mx=False)
+    assert k_raw.serving_params(params, "mx6") is params
+    assert k_raw.serving_cache.stats()["misses"] == 0
+
+
+def test_serving_cache_maxsize_zero_disables(kernel_setup):
+    from repro.core.kernel import ServingParamsCache
+
+    est, hp, model, params, x = kernel_setup
+    cache = ServingParamsCache(maxsize=0)
+    q1 = cache.get(params, "mx6")
+    q2 = cache.get(params, "mx6")
+    assert q1 is not q2  # re-quantized every call
+    assert cache.stats() == {"hits": 0, "misses": 2, "entries": 0}
+    # LRU eviction at maxsize=1: the older tree's entry is dropped.
+    small = ServingParamsCache(maxsize=1)
+    params2 = jax.tree_util.tree_map(lambda p: p + 0, params)
+    small.get(params, "mx6")
+    small.get(params2, "mx6")
+    assert len(small) == 1
+    small.get(params, "mx6")
+    assert small.stats()["misses"] == 3  # evicted -> re-quantize
+
+
+def test_labeling_cache_repeated_bursts_hit(kernel_setup):
+    est, hp, model, params, x = kernel_setup
+    k = LabelingKernel(model, WIDERESNET50, est, apply_mx=True)
+    y1 = k.label(params, x, "mx6")
+    y2 = k.label(params, x, "mx6")
+    np.testing.assert_array_equal(y1, y2)
+    # One quantize for N bursts: the teacher tree never changes.
+    assert k.serving_cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+
+
+def test_retrain_fit_invalidates_serving_caches(kernel_setup):
+    est, hp, model, params, x = kernel_setup
+    inf = InferenceKernel(model, RESNET18, est, apply_mx=True)
+    ret = RetrainKernel(model, RESNET18, est, hp)
+    ret.invalidates = (inf.serving_cache,)
+    inf.serving_params(params, "mx6")
+    assert len(inf.serving_cache) == 1
+    y = np.zeros((12,), np.int32)
+    new_params, _, _ = ret.fit(params, ret.init_state(params), x, y,
+                               np.random.default_rng(0))
+    # The superseded tree's entry is reclaimed; the new tree misses fresh.
+    assert len(inf.serving_cache) == 0
+    inf.serving_params(new_params, "mx6")
+    assert inf.serving_cache.stats()["misses"] == 2
+    assert inf.serving_cache.stats()["hits"] == 0
+
+
+def test_session_wires_retrain_invalidation(golden_setup):
+    stream, hp, tp, sp = golden_setup
+    session = _build(hp, "dacapo-spatiotemporal", apply_mx=True)
+    assert session.inference.serving_cache in session.retrain.invalidates
+
+
 # ------------------------------------------------------- policy contract --
 @pytest.mark.parametrize("name", sorted(ALLOCATORS))
 def test_allocation_policy_contract(name):
