@@ -37,7 +37,13 @@ HEADLINE_KEYS = {
                 ("recovery", "fault", "conservation_gap"),
                 ("recovery", "recovery_overhead_s"),
                 ("migration", "off", "fleet_avg_accuracy"),
-                ("migration", "on", "fleet_avg_accuracy")],
+                ("migration", "on", "fleet_avg_accuracy"),
+                ("manager_parallel_speedup",),
+                ("parallel", "manager_parallel_speedup"),
+                ("parallel", "4_shards", "wall_speedup"),
+                ("placement", "headroom", "fleet_avg_accuracy"),
+                ("placement", "estimator", "fleet_avg_accuracy"),
+                ("placement", "migration_divergence")],
 }
 # Mappings a bench may legitimately leave empty (e.g. a --row-policy matrix
 # run skips the temporal-mode sweep).

@@ -23,10 +23,14 @@ prints the manager's re-homing/recovery timeline (admissions,
 migrations, the failure, each lane's checkpoint restore) and the
 conserved manager/shard virtual-clock ledgers.
 
+``--parallel N`` steps the manager's shards on an N-worker pool each
+round (overlapped stepping) — the printed results are bit-identical to
+the serial run; only host scheduling changes.
+
 Run:  PYTHONPATH=src python examples/fleet_drive.py [--fast] [--streams 3]
           [--mode drift-weighted] [--row-policy resolve-max]
           [--dispatch sequential|concurrent]
-          [--shards 2] [--fail-at 4]
+          [--shards 2] [--fail-at 4] [--parallel 2]
 """
 import argparse
 import os
@@ -55,7 +59,13 @@ def main():
     ap.add_argument("--fail-at", type=int, default=None, metavar="PHASE",
                     help="kill the last shard's accelerator at this fleet "
                          "phase (implies the manager tier)")
+    ap.add_argument("--parallel", type=int, default=0, metavar="N",
+                    help="overlapped shard stepping: N pool workers step "
+                         "the shards concurrently each round (0 = serial; "
+                         "the ManagerResult is bit-identical either way)")
     args = ap.parse_args()
+    if args.parallel > 1 and args.shards < 2:
+        args.shards = 2  # overlap needs more than one shard to step
     if args.fail_at is not None and args.shards < 2:
         args.shards = 2  # a failure needs a survivor to recover onto
 
@@ -153,12 +163,17 @@ def run_manager(args, spec, streams, tp, sp, duration):
                            placement_kwargs={"min_gap": 1},
                            checkpoint_dir=ckpt, checkpoint_every=2,
                            migration=True, migration_cooldown=2,
-                           failure_injector=injector, recovery_cost_s=2.0)
+                           failure_injector=injector, recovery_cost_s=2.0,
+                           parallel_shards=args.parallel)
         mgr.set_pretrained(tp, sp)
         res = mgr.run(streams, duration=duration)
 
+    stepping = (f"overlapped x{args.parallel} "
+                f"({res.parallel_rounds}/{res.rounds} pooled rounds)"
+                if args.parallel > 1 else "serial")
     print(f"\nmanager: {args.shards} shards, mode={args.mode}, "
-          f"{duration:.0f} virtual seconds, {res.rounds} rounds"
+          f"{duration:.0f} virtual seconds, {res.rounds} rounds, "
+          f"stepping {stepping}"
           + (f", shard {victim} killed at phase {args.fail_at}"
              if args.fail_at is not None else ""))
     print("re-homing / recovery timeline:")

@@ -176,12 +176,15 @@ class FleetDecision:
 @dataclasses.dataclass(frozen=True)
 class PlacementAction:
     """One lane-placement act in a manager round: an admission, a live
-    migration, or a fault-recovery re-home. ``key`` is the lane's stable
-    camera id; ``from_shard`` is ``None`` for admissions."""
+    migration, a fault-recovery re-home, or an admission *rejection*
+    (the placement policy judged every shard oversubscribed — the camera
+    is turned away rather than degrading the whole fleet). ``key`` is the
+    lane's stable camera id; ``from_shard`` is ``None`` for admissions
+    and rejections, ``to_shard`` is ``None`` for rejections only."""
 
-    kind: str  # "admit" | "migrate" | "recover"
+    kind: str  # "admit" | "migrate" | "recover" | "reject"
     key: object
-    to_shard: int
+    to_shard: Optional[int]
     from_shard: Optional[int] = None
     reason: str = ""
 

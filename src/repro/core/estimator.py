@@ -140,6 +140,63 @@ class TPUEstimator:
         return 1.0 / self.forward_time(cfg, rows, precision, batch=1)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlacementCostModel:
+    """Manager-tier placement economics on the overlapped execution model.
+
+    With overlapped shard stepping (``FleetManager(parallel_shards=N)``)
+    the manager's wall per round is ``max`` over shards of the per-shard
+    phase load — not the sum — so placement quality is measured in seconds
+    shaved off that max:
+
+    * a candidate **migration**'s value is the per-round reduction of the
+      load maximum it buys, amortized over ``horizon_rounds`` (a lane's
+      cost is its last phase's T-SA seconds); the move itself costs
+      ``migration_cost_s`` (snapshot + re-home + re-jit, in virtual
+      seconds — the same figure the manager charges its ledger);
+    * **admission** control compares a shard's predicted T-SA
+      *utilization* — T-SA seconds per phase over the phase's modeled
+      wall — against ``oversub_limit``: above it, the shard's T-SA cannot
+      keep up with real time and a new lane would degrade every tenant,
+      so the fleet turns the camera away instead
+      (``PlacementAction(kind="reject")``).
+    """
+
+    migration_cost_s: float = 0.0
+    horizon_rounds: int = 4
+    oversub_limit: float = 1.5
+
+    @staticmethod
+    def round_time_s(loads: Sequence[float]) -> float:
+        """Modeled manager wall per round: the slowest shard's load."""
+        return max(loads) if len(loads) else 0.0
+
+    def migration_gain_s(self, loads: Sequence[float], src: int, dst: int,
+                         lane_cost_s: float) -> float:
+        """T-SA seconds the move saves over ``horizon_rounds`` rounds."""
+        after = list(loads)
+        after[src] -= lane_cost_s
+        after[dst] += lane_cost_s
+        return (self.round_time_s(loads)
+                - self.round_time_s(after)) * self.horizon_rounds
+
+    def worth_migrating(self, loads: Sequence[float], src: int, dst: int,
+                        lane_cost_s: float) -> bool:
+        return (self.migration_gain_s(loads, src, dst, lane_cost_s)
+                > self.migration_cost_s)
+
+    @staticmethod
+    def utilization(t_tsa_s: float, phase_s: float) -> float:
+        """T-SA occupancy of one phase window (>1: can't keep up)."""
+        return t_tsa_s / phase_s if phase_s > 0 else 0.0
+
+    def admits(self, t_tsa_s: float, phase_s: float,
+               lane_cost_s: float) -> bool:
+        """Would a shard at (t_tsa_s, phase_s) absorb one more lane?"""
+        return (self.utilization(t_tsa_s + lane_cost_s, phase_s)
+                <= self.oversub_limit)
+
+
 def spatial_allocation(estimator, student: VisionConfig, fps: float,
                        precision: str) -> Tuple[int, int]:
     """GetSpatialAllocation (Alg. 1 line 1): minimum B-SA rows sustaining the

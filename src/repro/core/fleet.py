@@ -267,6 +267,17 @@ class FleetRun:
     bit-for-bit — the degeneracy goldens of tests/test_fleet.py pin that
     — because the loop body below *is* the old loop body, with locals
     hoisted to attributes in the same accumulation order.
+
+    Thread-independence contract (what lets the manager overlap shards,
+    ``FleetManager(parallel_shards=N)``): :meth:`step` reads and writes
+    only this run's state — its session (own kernels, allocator, RNGs),
+    its lanes, its pipelines — never another run's; the only process-
+    global state a phase touches is append-only jit caches (no numeric
+    effect) and the locked kernel-stat counters / serving caches.
+    Concurrent :meth:`step` calls on *different* runs are therefore safe
+    and bit-identical to stepping them in any serial order. Membership
+    mutations (attach/detach/snapshot) are NOT part of that contract —
+    the manager calls them only at its barrier, single-threaded.
     """
 
     def __init__(self, session: FleetSession, pipes: List[FramePipeline],

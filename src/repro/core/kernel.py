@@ -25,6 +25,7 @@ Every jitted apply invocation bumps ``n_apply_calls`` (bench/test counter).
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
@@ -52,52 +53,64 @@ class ServingParamsCache:
     served stale. :meth:`RetrainKernel.fit` additionally invalidates the
     tree it supersedes explicitly. ``maxsize=0`` disables caching (the
     benches' uncached baseline); eviction is LRU.
+
+    All bookkeeping — hit/miss counters, the LRU order, entry insertion
+    and eviction — runs under a per-cache lock, held across the fill too:
+    under overlapped shard stepping (``FleetManager(parallel_shards=N)``)
+    kernels on different worker threads may share a cache, and the lock
+    both keeps the counters exact and guarantees at most one quantization
+    per (tree, precision) key however many threads race on it.
     """
 
     def __init__(self, maxsize: int = 8):
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self._lock = threading.RLock()
         # id(source tree) -> (source tree, {precision: quantized tree})
         self._entries: "OrderedDict[int, tuple]" = OrderedDict()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def get(self, params, precision: str, quantize=mx_lib.quantize_tree):
         key = id(params)
-        entry = self._entries.get(key)
-        if entry is not None and entry[0] is params:
-            cached = entry[1].get(precision)
-            if cached is not None:
-                self.hits += 1
-                self._entries.move_to_end(key)
-                return cached
-        self.misses += 1
-        quantized = quantize(params, precision)
-        if self.maxsize <= 0:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and entry[0] is params:
+                cached = entry[1].get(precision)
+                if cached is not None:
+                    self.hits += 1
+                    self._entries.move_to_end(key)
+                    return cached
+            self.misses += 1
+            quantized = quantize(params, precision)
+            if self.maxsize <= 0:
+                return quantized
+            if entry is None or entry[0] is not params:
+                entry = (params, {})
+                self._entries[key] = entry
+            entry[1][precision] = quantized
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
             return quantized
-        if entry is None or entry[0] is not params:
-            entry = (params, {})
-            self._entries[key] = entry
-        entry[1][precision] = quantized
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return quantized
 
     def invalidate(self, params=None) -> None:
         """Drop the entries of ``params`` — or everything when ``None``."""
-        if params is None:
-            self._entries.clear()
-            return
-        entry = self._entries.get(id(params))
-        if entry is not None and entry[0] is params:
-            del self._entries[id(params)]
+        with self._lock:
+            if params is None:
+                self._entries.clear()
+                return
+            entry = self._entries.get(id(params))
+            if entry is not None and entry[0] is params:
+                del self._entries[id(params)]
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries)}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._entries)}
 
 
 @runtime_checkable

@@ -19,8 +19,29 @@ Architecture (see ROADMAP.md):
   executes one fleet phase; between rounds the manager checkpoints lanes
   (per-lane :class:`~repro.checkpoint.CheckpointManager` directories),
   admits due cameras, and migrates lanes per its placement policy;
+* **overlapped rounds** — with ``parallel_shards > 1`` the live shards'
+  phases run concurrently on a ``ThreadPoolExecutor`` (shards model
+  disjoint sub-accelerators; the wall should pay ``max`` over shards,
+  not ``sum``) and meet at a phase-boundary **barrier**, where all
+  bookkeeping — ledger charges, checkpointing, admission, migration,
+  failure recovery — happens in shard-index order.  The overlapped loop
+  is **bit-identical to serial stepping**: shard phases touch only
+  shard-private state (the process-global kernel-stats counters and
+  serving caches are locked), the failure injector is probed with
+  deterministic ``(round, shard)`` keys, and the barrier fixes the order
+  of every charge, event and :class:`PlacementAction` regardless of
+  worker completion order;
 * **lane admission** — a camera joining mid-run is placed on the shard
   the :class:`PlacementPolicy` picks (``headroom``: most T-SA headroom);
+  a policy may instead *reject* the camera when every shard is
+  oversubscribed (``admit()`` returning ``None``, surfaced as a
+  ``PlacementAction(kind="reject")`` — degraded service is an explicit
+  decision, never a silent drop);
+* **estimator-driven placement** — the ``estimator`` policy scores
+  moves with :class:`~repro.core.estimator.PlacementCostModel` on the
+  overlap model: a migration fires only when the T-SA seconds it shaves
+  off the per-round load maximum, amortized over a horizon, exceed the
+  explicit ``migration_cost_s`` the manager charges its ledger per move;
 * **live lane migration** — a lane that drifts hot on an oversubscribed
   shard is frozen into a :class:`~repro.core.fleet.LaneSnapshot` (student
   weights + optimizer + :class:`~repro.core.sample_buffer.SampleBuffer` +
@@ -38,7 +59,8 @@ Architecture (see ROADMAP.md):
 * the **virtual-clock ledger is conserved**: every phase's T-SA/B-SA
   seconds are charged once to the owning shard and once to the manager,
   so ``manager.t_tsa == Σ shard.t_tsa`` (to float re-association) and the
-  only extra manager-level charge is the explicit recovery cost;
+  only extra manager-level charges are the explicit recovery and
+  migration costs;
 * each round is recorded as a :class:`~repro.core.decision.ManagerDecision`
   — the per-shard tuple of :class:`~repro.core.decision.FleetDecision`s
   plus the round's :class:`~repro.core.decision.PlacementAction`s — the
@@ -55,12 +77,15 @@ from __future__ import annotations
 import dataclasses
 import os
 import pickle
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.decision import ManagerDecision, PlacementAction
+from repro.core.estimator import PlacementCostModel
 from repro.core.fleet import (
     FleetResult,
     FleetRun,
@@ -86,6 +111,7 @@ class ShardView:
     t_tsa: float  # accumulated T-SA seconds on this shard
     recent_t_tsa: float  # last phase's T-SA seconds (headroom proxy)
     drifted_lanes: int  # lanes whose latest phase fired drift
+    recent_phase_s: float = 0.0  # last phase's wall (t - phase_start)
 
     @property
     def placeable(self) -> bool:
@@ -101,6 +127,7 @@ class LaneView:
     key: object
     drifted: bool  # latest phase fired drift
     drift_events: int
+    recent_t_tsa: float = 0.0  # last phase's T-SA seconds for this lane
 
 
 # --------------------------------------------------------- placement policies
@@ -144,6 +171,14 @@ class PlacementPolicy:
         """Shard index for a new or re-homed lane. At least one view is
         guaranteed placeable."""
         raise NotImplementedError
+
+    def admit(self, views: Sequence[ShardView]) -> Optional[int]:
+        """Shard index for a *mid-run* admission, or ``None`` to reject
+        the camera (every shard oversubscribed — surfaced by the manager
+        as ``PlacementAction(kind="reject")``). Default: admission is
+        just placement, never rejected. Initial placement and fault
+        recovery go through :meth:`place` and cannot reject."""
+        return self.place(views)
 
     def migrate(self, views: Sequence[ShardView],
                 lanes: Sequence[LaneView]
@@ -249,10 +284,95 @@ class DriftPackPlacementPolicy(PlacementPolicy):
         return None
 
 
+class EstimatorPlacementPolicy(PlacementPolicy):
+    """Placement scored by :class:`~repro.core.estimator
+    .PlacementCostModel` instead of lane counts.
+
+    Under overlapped rounds the manager's wall per round is the *maximum*
+    of the per-shard T-SA loads, so this policy reasons in seconds on
+    that maximum (the Ekya-style microprofiled-placement idea one tier
+    up): admissions land on the shard with the least recent T-SA load;
+    a lane migrates only when the load-max seconds it saves, amortized
+    over ``horizon_rounds``, exceed ``migration_cost_s`` — the same
+    figure the manager charges its ledger per move, so a migration that
+    fires has, by construction, already paid for itself in the model;
+    and a mid-run admission is **rejected** when every warm shard's
+    predicted T-SA utilization (T-SA seconds per phase over the phase
+    wall) would exceed ``oversub_limit`` with one more lane aboard.
+    """
+
+    name = "estimator"
+
+    def __init__(self, spec: Optional[str] = None, *,
+                 migration_cost_s: float = 2.0,
+                 horizon_rounds: int = 4,
+                 oversub_limit: float = 1.5):
+        super().__init__(spec)
+        self.model = PlacementCostModel(
+            migration_cost_s=migration_cost_s,
+            horizon_rounds=horizon_rounds,
+            oversub_limit=oversub_limit)
+
+    def place(self, views: Sequence[ShardView]) -> int:
+        order = sorted((v for v in views if v.placeable),
+                       key=lambda v: (v.recent_t_tsa, v.n_lanes, v.index))
+        return order[0].index
+
+    def admit(self, views: Sequence[ShardView]) -> Optional[int]:
+        placeable = [v for v in views if v.placeable]
+        warm = [v for v in placeable if v.recent_phase_s > 0]
+        if not warm:
+            return self.place(views)  # no utilization signal yet
+        lanes = sum(v.n_lanes for v in placeable)
+        # The incoming camera's cost is unknown until it runs; predict it
+        # as the fleet-mean per-lane T-SA load.
+        lane_cost = (sum(v.recent_t_tsa for v in placeable) / lanes
+                     if lanes else 0.0)
+        fits = [v for v in warm
+                if self.model.admits(v.recent_t_tsa, v.recent_phase_s,
+                                     lane_cost)]
+        # An idle shard (no phase yet) always has room.
+        fits += [v for v in placeable if v.recent_phase_s <= 0]
+        if not fits:
+            return None
+        order = sorted(fits,
+                       key=lambda v: (v.recent_t_tsa, v.n_lanes, v.index))
+        return order[0].index
+
+    def migrate(self, views, lanes):
+        placeable = sorted((v for v in views if v.placeable),
+                           key=lambda v: v.index)
+        if len(placeable) < 2:
+            return None
+        pos = {v.index: i for i, v in enumerate(placeable)}
+        loads = [v.recent_t_tsa for v in placeable]
+        lanes_per = {v.index: v.n_lanes for v in placeable}
+        best = None  # (gain, lane, target shard index)
+        for lane in sorted(lanes, key=lambda l: (l.shard, l.index)):
+            if lane.shard not in pos or lane.recent_t_tsa <= 0:
+                continue
+            if lanes_per[lane.shard] < 2:
+                continue  # never drain a shard's last lane
+            for tgt in placeable:
+                if tgt.index == lane.shard:
+                    continue
+                gain = self.model.migration_gain_s(
+                    loads, pos[lane.shard], pos[tgt.index],
+                    lane.recent_t_tsa)
+                # Strictly-greater keeps the first (lowest shard/lane
+                # index) candidate on ties — deterministic proposals.
+                if best is None or gain > best[0]:
+                    best = (gain, lane, tgt.index)
+        if best is None or best[0] <= self.model.migration_cost_s:
+            return None
+        return best[1], best[2]
+
+
 PLACEMENT_POLICIES: Dict[str, Type[PlacementPolicy]] = {
     "static": StaticPlacementPolicy,
     "headroom": HeadroomPlacementPolicy,
     "drift-pack": DriftPackPlacementPolicy,
+    "estimator": EstimatorPlacementPolicy,
 }
 
 
@@ -336,7 +456,7 @@ class ManagerEvent:
 
     round: int
     t: float  # manager virtual clock (fleet frontier) at the event
-    kind: str  # "admit" | "migrate" | "fail" | "recover" | "checkpoint"
+    kind: str  # "admit"|"reject"|"migrate"|"fail"|"recover"|"checkpoint"
     shard: int
     key: object = None
     to_shard: Optional[int] = None
@@ -352,6 +472,7 @@ class _Shard:
     t_tsa: float = 0.0
     t_bsa: float = 0.0
     recent_t_tsa: float = 0.0
+    recent_phase_s: float = 0.0
     phases: int = 0
 
 
@@ -369,6 +490,7 @@ class ManagerResult:
     events: List[ManagerEvent]
     decisions: List[ManagerDecision]
     rounds: int
+    parallel_rounds: int = 0  # rounds stepped on the worker pool
 
     @property
     def n_shards(self) -> int:
@@ -376,8 +498,8 @@ class ManagerResult:
 
     def conservation_gap(self) -> float:
         """|manager T-SA ledger − Σ shard T-SA ledgers| — zero modulo
-        float re-association; recovery cost is charged only at manager
-        level, on top (``ledger['total']``)."""
+        float re-association; recovery and migration costs are charged
+        only at manager level, on top (``ledger['total']``)."""
         return abs(self.ledger["t_tsa"]
                    - sum(s["t_tsa"] for s in self.shard_ledgers))
 
@@ -396,7 +518,31 @@ class FleetManager:
     ``failure_injector`` is probed once per shard per round with
     ``key=shard_index``; ``recovery_cost_s`` is the explicit manager-level
     charge per re-homed lane (checkpoint read + re-home + re-jit, in
-    virtual seconds).
+    virtual seconds), and ``migration_cost_s`` the analogous charge per
+    policy migration (``ledger['migration_cost']``, included in
+    ``ledger['total']`` — a move is never free; the ``estimator`` policy
+    additionally *decides* with the same figure, so set both from one
+    number).
+
+    ``parallel_shards > 1`` steps the live shards' phases concurrently on
+    a ``ThreadPoolExecutor`` of that many workers; ``0``/``1`` (default)
+    keeps the serial loop. Either way every round ends at a barrier that
+    charges ledgers, recovers failures, checkpoints, admits and migrates
+    in shard-index order, so the overlapped loop is **bit-identical** to
+    serial stepping: same records, same ``ManagerDecision`` stream, same
+    two-level ledger (shard phases touch only shard-private state; the
+    process-global kernel-stat counters and serving caches are locked;
+    the failure injector is probed with deterministic ``(round, shard)``
+    keys).
+
+    ``shard_pace`` emulates each shard's own sub-accelerator executing in
+    real time: after a shard's phase its worker blocks ``shard_pace``
+    host-seconds per modeled phase-second before the barrier. On a host
+    with fewer cores than shards this device-wait is what overlapped
+    stepping actually hides (the host waits on N devices concurrently
+    instead of one after another) and is what ``bench_manager``'s
+    ``parallel`` section measures; pacing sleeps touch no state, so paced
+    and unpaced, serial and parallel all produce the same result stream.
     """
 
     def __init__(self, spec: FleetSpec, n_shards: int = 2,
@@ -406,8 +552,11 @@ class FleetManager:
                  checkpoint_every: int = 1,
                  migration: bool = True,
                  migration_cooldown: int = 2,
+                 migration_cost_s: float = 0.0,
                  failure_injector: Optional[FailureInjector] = None,
-                 recovery_cost_s: float = 0.0):
+                 recovery_cost_s: float = 0.0,
+                 parallel_shards: int = 0,
+                 shard_pace: float = 0.0):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.spec = spec
@@ -417,15 +566,20 @@ class FleetManager:
         self.checkpoint_every = max(1, checkpoint_every)
         self.migration = migration
         self.migration_cooldown = max(0, migration_cooldown)
+        self.migration_cost_s = migration_cost_s
         self.failure_injector = failure_injector
         self.recovery_cost_s = recovery_cost_s
+        self.parallel_shards = max(0, parallel_shards)
+        self.shard_pace = shard_pace
         self.shards: List[_Shard] = [
             _Shard(index=i, session=spec.build()) for i in range(n_shards)]
         self.name = f"manager-{self.placement.name}x{n_shards}"
         self.events: List[ManagerEvent] = []
         self.decisions: List[ManagerDecision] = []
         self.ledger: Dict[str, float] = {
-            "t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0}
+            "t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0,
+            "migration_cost": 0.0}
+        self.parallel_rounds = 0
         self._streams: Dict[object, object] = {}  # key -> source stream
         self._ckpts: Dict[object, CheckpointManager] = {}
         self._round = 0
@@ -456,7 +610,8 @@ class FleetManager:
                 n_lanes=(len(run.lanes) if run is not None else 0),
                 clock=(run.clock if run is not None else 0.0),
                 t_tsa=shard.t_tsa, recent_t_tsa=shard.recent_t_tsa,
-                drifted_lanes=drifted))
+                drifted_lanes=drifted,
+                recent_phase_s=shard.recent_phase_s))
         return views
 
     def _lane_views(self) -> List[LaneView]:
@@ -468,7 +623,9 @@ class FleetManager:
                 lanes.append(LaneView(
                     shard=shard.index, index=lane.index, key=lane.key,
                     drifted=bool(lane.records and lane.records[-1].drift),
-                    drift_events=lane.drift_events))
+                    drift_events=lane.drift_events,
+                    recent_t_tsa=(lane.records[-1].t_tsa
+                                  if lane.records else 0.0)))
         return lanes
 
     def _frontier(self) -> float:
@@ -490,6 +647,7 @@ class FleetManager:
             shard.t_tsa += entry["t_tsa"]
             shard.t_bsa += entry["t_bsa"]
             shard.recent_t_tsa = entry["t_tsa"]
+            shard.recent_phase_s = entry["t"] - entry["phase_start"]
             self.ledger["t_tsa"] += entry["t_tsa"]
             self.ledger["t_bsa"] += entry["t_bsa"]
         shard.phases = len(log)
@@ -592,6 +750,7 @@ class FleetManager:
         snap, pipe = src.run.detach_lane(lane_view.index)
         tgt.run.attach_lane(pipe, snapshot=snap, own=True)
         self._last_migration = self._round
+        self.ledger["migration_cost"] += self.migration_cost_s
         placements.append(PlacementAction(
             kind="migrate", key=lane_view.key, to_shard=target_idx,
             from_shard=src.index, reason="placement-policy migration"))
@@ -600,6 +759,25 @@ class FleetManager:
             shard=src.index, key=lane_view.key, to_shard=target_idx,
             detail=f"lane {lane_view.key}: shard {src.index} -> "
                    f"{target_idx}"))
+
+    # --------------------------------------------------------- round step
+    def _step_shard(self, shard: _Shard) -> None:
+        """One round's unit of work for one shard — the piece the worker
+        pool overlaps. Probes the failure injector (keyed by
+        ``(round, shard)``, so the outcome is deterministic whichever
+        thread runs it), executes one fleet phase, and, when
+        ``shard_pace`` is set, blocks for the phase's modeled device
+        occupancy. Touches only shard-private state: ledger charges and
+        membership changes happen at the barrier, in shard-index order."""
+        if self.failure_injector is not None:
+            self.failure_injector.maybe_fail(self._round, key=shard.index)
+        shard.run.step()
+        if self.shard_pace > 0.0:
+            busy = sum(entry["t"] - entry["phase_start"]
+                       for entry in
+                       shard.run.fleet_phase_log[shard.phases:])
+            if busy > 0.0:
+                time.sleep(self.shard_pace * busy)
 
     # ---------------------------------------------------------------- run
     def run(self, streams: Union[Sequence, Dict[object, object]],
@@ -624,7 +802,9 @@ class FleetManager:
             items = [(f"cam{i}", s) for i, s in enumerate(streams)]
         self.placement.reset(len(self.shards))
         self.events, self.decisions = [], []
-        self.ledger = {"t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0}
+        self.ledger = {"t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0,
+                       "migration_cost": 0.0}
+        self.parallel_rounds = 0
         self._round = 0
         self._last_migration = -(10 ** 9)
 
@@ -650,63 +830,16 @@ class FleetManager:
         pending = list(pending)
 
         # ------------------------------------------------ the round loop
-        while any(s.alive and s.run is not None and not s.run.done
-                  and s.run.lanes for s in self.shards):
-            placements: List[PlacementAction] = []
-            for shard in self.shards:
-                if not shard.alive or shard.run is None or shard.run.done:
-                    continue
-                if not shard.run.lanes:
-                    continue  # idle shard: stays open for placement
-                try:
-                    if self.failure_injector is not None:
-                        self.failure_injector.maybe_fail(
-                            self._round, key=shard.index)
-                    shard.run.step()
-                except RuntimeError as e:
-                    self._fail_shard(shard, str(e), placements)
-                    continue
-                self._charge(shard)
-            live = [s for s in self.shards
-                    if s.alive and s.run is not None and not s.run.done]
-            # An idle (empty) shard's virtual clock tracks the fleet
-            # frontier — it sits ready; time passes. A lane attached to
-            # it later starts scoring from the join point, not t=0.
-            frontier = self._frontier()
-            for shard in live:
-                if not shard.run.lanes:
-                    shard.run.clock = max(shard.run.clock, frontier)
-            if live:
-                # Per-lane checkpoints every checkpoint_every rounds
-                # (side-effect free on the live lanes).
-                if (self._round + 1) % self.checkpoint_every == 0:
-                    self._checkpoint_lanes()
-                # Due admissions: cameras whose join time the fleet
-                # frontier has passed.
-                frontier = self._frontier()
-                while pending and pending[0][0] <= frontier:
-                    t_at, key, stream = pending.pop(0)
-                    self._streams[key] = stream
-                    views = self._views()
-                    target = next(s for s in self.shards
-                                  if s.index == self.placement.place(views))
-                    target.run.attach_lane(stream, key=key)
-                    placements.append(PlacementAction(
-                        kind="admit", key=key, to_shard=target.index,
-                        reason=f"admission due at t={t_at:g}"))
-                    self.events.append(ManagerEvent(
-                        round=self._round, t=frontier, kind="admit",
-                        shard=target.index, key=key,
-                        detail=f"due t={t_at:g}"))
-                self._maybe_migrate(placements)
-            self.decisions.append(ManagerDecision(
-                shards=tuple(
-                    (s.run.fleet_dec
-                     if s.alive and s.run is not None and not s.run.done
-                     else None)
-                    for s in self.shards),
-                placements=tuple(placements)))
-            self._round += 1
+        pool: Optional[ThreadPoolExecutor] = None
+        if self.parallel_shards > 1 and len(self.shards) > 1:
+            pool = ThreadPoolExecutor(
+                max_workers=min(self.parallel_shards, len(self.shards)),
+                thread_name_prefix="shard-step")
+        try:
+            self._round_loop(pool, pending)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
 
         # ------------------------------------------------------ finalize
         for mgr in self._ckpts.values():
@@ -730,13 +863,109 @@ class FleetManager:
             fleet_avg_accuracy=float(np.mean(accs)) if accs else 0.0,
             ledger={**self.ledger,
                     "total": self.ledger["t_tsa"]
-                    + self.ledger["recovery_cost"]},
+                    + self.ledger["recovery_cost"]
+                    + self.ledger["migration_cost"]},
             shard_ledgers=[{"t_tsa": s.t_tsa, "t_bsa": s.t_bsa}
                            for s in self.shards],
             events=self.events,
             decisions=self.decisions,
             rounds=self._round,
+            parallel_rounds=self.parallel_rounds,
         )
+
+    def _round_loop(self, pool: Optional[ThreadPoolExecutor],
+                    pending: List[Tuple[float, object, object]]) -> None:
+        """Rounds until every shard drains. Each round has two halves:
+        the **step phase** — every live shard's :meth:`_step_shard`, on
+        the pool when one is given (overlapped) or inline (serial) — and
+        the **barrier**, which replays outcomes in shard-index order:
+        charges for survivors, recovery for failures, then checkpointing,
+        admission and migration. Joining futures in shard-index order and
+        doing ALL bookkeeping at the barrier is what makes the overlapped
+        loop bit-identical to the serial one whatever order workers
+        finish in."""
+        while any(s.alive and s.run is not None and not s.run.done
+                  and s.run.lanes for s in self.shards):
+            placements: List[PlacementAction] = []
+            stepping = [s for s in self.shards
+                        if s.alive and s.run is not None
+                        and not s.run.done and s.run.lanes]
+            failures: Dict[int, str] = {}
+            if pool is not None and len(stepping) > 1:
+                self.parallel_rounds += 1
+                futures = {s.index: pool.submit(self._step_shard, s)
+                           for s in stepping}
+                for shard in stepping:
+                    try:
+                        futures[shard.index].result()
+                    except RuntimeError as e:
+                        failures[shard.index] = str(e)
+            else:
+                for shard in stepping:
+                    try:
+                        self._step_shard(shard)
+                    except RuntimeError as e:
+                        failures[shard.index] = str(e)
+            for shard in stepping:
+                if shard.index in failures:
+                    self._fail_shard(shard, failures[shard.index],
+                                     placements)
+                else:
+                    self._charge(shard)
+            live = [s for s in self.shards
+                    if s.alive and s.run is not None and not s.run.done]
+            # An idle (empty) shard's virtual clock tracks the fleet
+            # frontier — it sits ready; time passes. A lane attached to
+            # it later starts scoring from the join point, not t=0.
+            frontier = self._frontier()
+            for shard in live:
+                if not shard.run.lanes:
+                    shard.run.clock = max(shard.run.clock, frontier)
+            if live:
+                # Per-lane checkpoints every checkpoint_every rounds
+                # (side-effect free on the live lanes).
+                if (self._round + 1) % self.checkpoint_every == 0:
+                    self._checkpoint_lanes()
+                # Due admissions: cameras whose join time the fleet
+                # frontier has passed.
+                frontier = self._frontier()
+                while pending and pending[0][0] <= frontier:
+                    t_at, key, stream = pending.pop(0)
+                    views = self._views()
+                    target_idx = self.placement.admit(views)
+                    if target_idx is None:
+                        # Every shard oversubscribed: the camera is turned
+                        # away — explicit degraded service, recorded in
+                        # the decision stream, never a silent drop.
+                        placements.append(PlacementAction(
+                            kind="reject", key=key, to_shard=None,
+                            reason=f"admission due at t={t_at:g}: "
+                                   f"fleet oversubscribed"))
+                        self.events.append(ManagerEvent(
+                            round=self._round, t=frontier, kind="reject",
+                            shard=-1, key=key,
+                            detail=f"due t={t_at:g}: oversubscribed"))
+                        continue
+                    self._streams[key] = stream
+                    target = next(s for s in self.shards
+                                  if s.index == target_idx)
+                    target.run.attach_lane(stream, key=key)
+                    placements.append(PlacementAction(
+                        kind="admit", key=key, to_shard=target.index,
+                        reason=f"admission due at t={t_at:g}"))
+                    self.events.append(ManagerEvent(
+                        round=self._round, t=frontier, kind="admit",
+                        shard=target.index, key=key,
+                        detail=f"due t={t_at:g}"))
+                self._maybe_migrate(placements)
+            self.decisions.append(ManagerDecision(
+                shards=tuple(
+                    (s.run.fleet_dec
+                     if s.alive and s.run is not None and not s.run.done
+                     else None)
+                    for s in self.shards),
+                placements=tuple(placements)))
+            self._round += 1
 
 
 def _template_snapshot(session: FleetSession) -> LaneSnapshot:
@@ -761,7 +990,11 @@ class ManagerSpec:
     """Declarative front door for the manager tier, mirroring
     :class:`~repro.core.fleet.FleetSpec`: one fleet spec for every shard
     plus the manager surface (shard count, placement policy and knobs,
-    checkpointing, migration, failure injection, recovery cost)."""
+    checkpointing, migration and its ledger cost, failure injection,
+    recovery cost, and the overlapped-stepping knobs ``parallel_shards``
+    — worker-pool size, 0/1 = serial, bit-identical either way — and
+    ``shard_pace`` — emulated device seconds of real blocking per modeled
+    phase-second; see :class:`FleetManager`)."""
 
     fleet: FleetSpec
     n_shards: int = 2
@@ -771,8 +1004,11 @@ class ManagerSpec:
     checkpoint_every: int = 1
     migration: bool = True
     migration_cooldown: int = 2
+    migration_cost_s: float = 0.0
     failure_injector: Optional[FailureInjector] = None
     recovery_cost_s: float = 0.0
+    parallel_shards: int = 0
+    shard_pace: float = 0.0
 
     def build(self) -> FleetManager:
         return FleetManager(
@@ -782,5 +1018,8 @@ class ManagerSpec:
             checkpoint_every=self.checkpoint_every,
             migration=self.migration,
             migration_cooldown=self.migration_cooldown,
+            migration_cost_s=self.migration_cost_s,
             failure_injector=self.failure_injector,
-            recovery_cost_s=self.recovery_cost_s)
+            recovery_cost_s=self.recovery_cost_s,
+            parallel_shards=self.parallel_shards,
+            shard_pace=self.shard_pace)

@@ -40,6 +40,11 @@ from repro.kernels.ref import BLOCK, MXTensor
 ROW_ALIGN = 8
 LANE_ALIGN = 128
 
+# The dispatch counters are process-global state shared by every session
+# — under overlapped shard stepping (FleetManager(parallel_shards=N))
+# kernels on different worker threads count into them concurrently, so
+# every read-modify-write below holds this lock: increments are never
+# lost and kernel_stats() snapshots are consistent.
 _stats_lock = threading.Lock()
 _kernel_stats: Dict[str, Dict[str, int]] = {}
 

@@ -9,6 +9,7 @@ continue on failure, give up after max_restarts.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -63,20 +64,27 @@ class FailureInjector:
     probes that step first — the ``resilient_loop`` contract) or
     ``(step, key)`` pairs targeting one probe site: the fleet manager
     probes with ``key=shard_index`` each round, so ``(3, 1)`` kills shard 1
-    at round 3 and nobody else. Each entry fires exactly once."""
+    at round 3 and nobody else. Each entry fires exactly once — the
+    check-then-mark is under a lock, so the exactly-once contract holds
+    when shards probe concurrently from a worker pool
+    (``FleetManager(parallel_shards=N)``); keyed ``(step, key)`` entries
+    stay fully deterministic there, while bare-step entries fire on
+    whichever probe wins the lock first."""
 
     def __init__(self, fail_at_steps=()):
         self.fail_at = set(fail_at_steps)
         self.failed = set()
+        self._lock = threading.Lock()
 
     def maybe_fail(self, step: int, key=None) -> None:
         probe = step if key is None else (step, key)
-        for entry in (step, probe) if key is not None else (step,):
-            if entry in self.fail_at and entry not in self.failed:
-                self.failed.add(entry)
-                where = f" (key={key})" if key is not None else ""
-                raise RuntimeError(
-                    f"injected node failure at step {step}{where}")
+        with self._lock:
+            for entry in (step, probe) if key is not None else (step,):
+                if entry in self.fail_at and entry not in self.failed:
+                    self.failed.add(entry)
+                    where = f" (key={key})" if key is not None else ""
+                    raise RuntimeError(
+                        f"injected node failure at step {step}{where}")
 
 
 @dataclasses.dataclass

@@ -16,8 +16,10 @@ from repro.core.fleet import FleetSpec
 from repro.core.manager import (
     PLACEMENT_POLICIES,
     DriftPackPlacementPolicy,
+    EstimatorPlacementPolicy,
     FleetManager,
     HeadroomPlacementPolicy,
+    LaneView,
     ManagerSpec,
     PlacementPolicy,
     ShardView,
@@ -198,35 +200,37 @@ def test_detach_attach_resumes_bit_identically(pretrained):
         _assert_records_identical(lane.records, lane_ref.records)
 
 
+class _MigrateOnce(PlacementPolicy):
+    """Test policy: fewest-lanes placement, exactly one forced migration."""
+
+    name = "migrate-once"
+
+    def __init__(self, spec=None):
+        super().__init__(spec)
+        self.fired = False
+
+    def place(self, views):
+        order = sorted((v for v in views if v.placeable),
+                       key=lambda v: (v.n_lanes, v.index))
+        return order[0].index
+
+    def migrate(self, views, lanes):
+        if self.fired or not lanes:
+            return None
+        lane = lanes[0]
+        targets = [v for v in views
+                   if v.placeable and v.index != lane.shard]
+        if not targets:
+            return None
+        self.fired = True
+        return lane, targets[0].index
+
+
 def test_manager_migration_via_custom_policy(pretrained):
     """A pluggable policy that forces one migration: the lane moves
     between shards mid-run (a 'migrate' event and PlacementAction), keeps
     its record history, and the ledger stays conserved."""
     hp, tp, sp = pretrained
-
-    class _MigrateOnce(PlacementPolicy):
-        name = "migrate-once"
-
-        def __init__(self, spec=None):
-            super().__init__(spec)
-            self.fired = False
-
-        def place(self, views):
-            order = sorted((v for v in views if v.placeable),
-                           key=lambda v: (v.n_lanes, v.index))
-            return order[0].index
-
-        def migrate(self, views, lanes):
-            if self.fired or not lanes:
-                return None
-            lane = lanes[0]
-            targets = [v for v in views
-                       if v.placeable and v.index != lane.shard]
-            if not targets:
-                return None
-            self.fired = True
-            return lane, targets[0].index
-
     policy = _MigrateOnce()
     mgr = FleetManager(_fleet_spec(hp), n_shards=2, placement=policy,
                        migration=True, migration_cooldown=0)
@@ -345,7 +349,8 @@ def test_empty_buffer_snapshot_roundtrip():
 
 # ----------------------------------------------------------- the registry
 def test_placement_policy_registry():
-    assert set(PLACEMENT_POLICIES) == {"static", "headroom", "drift-pack"}
+    assert set(PLACEMENT_POLICIES) == {"static", "headroom", "drift-pack",
+                                       "estimator"}
     assert isinstance(PlacementPolicy("static"), StaticPlacementPolicy)
     assert isinstance(PlacementPolicy("drift-pack"),
                       DriftPackPlacementPolicy)
@@ -388,10 +393,205 @@ def test_headroom_policy_places_and_migrates():
 def test_manager_spec_builds(pretrained):
     hp, _, _ = pretrained
     spec = ManagerSpec(fleet=_fleet_spec(hp), n_shards=3,
-                       placement="drift-pack", migration=False)
+                       placement="drift-pack", migration=False,
+                       parallel_shards=3, shard_pace=0.0,
+                       migration_cost_s=1.0)
     mgr = spec.build()
     assert mgr.n_shards == 3
     assert isinstance(mgr.placement, DriftPackPlacementPolicy)
     assert not mgr.migration
+    assert mgr.parallel_shards == 3
+    assert mgr.migration_cost_s == 1.0
     with pytest.raises(ValueError):
         FleetManager(_fleet_spec(hp), n_shards=0)
+
+
+# ------------------------------------------- overlapped (parallel) stepping
+def _assert_manager_results_identical(a, b):
+    """Full bit-identity of two ManagerResults: accuracy, two-level
+    ledgers, the decision stream, the event timeline, and every lane's
+    records."""
+    assert a.fleet_avg_accuracy == b.fleet_avg_accuracy
+    assert a.ledger == b.ledger
+    assert a.shard_ledgers == b.shard_ledgers
+    assert a.rounds == b.rounds
+    assert a.decisions == b.decisions
+    assert a.events == b.events
+    assert set(a.lane_results) == set(b.lane_results)
+    for key in a.lane_results:
+        la, lb = a.lane_results[key], b.lane_results[key]
+        assert la.accuracy_timeline == lb.accuracy_timeline
+        _assert_records_identical(la.records, lb.records)
+
+
+@pytest.mark.parametrize("dispatch", ["sequential", "concurrent"])
+def test_parallel_stepping_bit_identical_to_serial(pretrained, dispatch):
+    """The tentpole contract: a 3-shard manager stepped on the worker
+    pool produces the same ManagerResult — records, ledgers, decisions,
+    events — as serial stepping, in both dispatch modes."""
+    hp, tp, sp = pretrained
+    results = {}
+    for workers in (0, 3):
+        mgr = FleetManager(_fleet_spec(hp, dispatch), n_shards=3,
+                           placement="static", migration=False,
+                           parallel_shards=workers)
+        mgr.set_pretrained(tp, sp)
+        results[workers] = mgr.run(_streams(3), duration=40.0)
+    assert results[0].parallel_rounds == 0
+    assert results[3].parallel_rounds > 0  # the pool really stepped
+    _assert_manager_results_identical(results[0], results[3])
+
+
+def test_parallel_fault_recovery_matches_serial(pretrained, tmp_path):
+    """A shard dying mid-round UNDER THE POOL recovers exactly like the
+    serial path: same fail/recover events, same recovery placements,
+    same conserved ledger, same surviving-lane records."""
+    hp, tp, sp = pretrained
+    results = {}
+    for workers in (0, 3):
+        inj = FailureInjector(fail_at_steps=[(2, 1)])
+        mgr = FleetManager(_fleet_spec(hp), n_shards=3,
+                           placement="static", migration=False,
+                           checkpoint_dir=str(tmp_path / f"w{workers}"),
+                           checkpoint_every=2, failure_injector=inj,
+                           recovery_cost_s=2.0, parallel_shards=workers)
+        mgr.set_pretrained(tp, sp)
+        results[workers] = mgr.run(_streams(3), duration=40.0)
+    par = results[3]
+    assert par.parallel_rounds > 0
+    kinds = [e.kind for e in par.events]
+    assert kinds.count("fail") == 1
+    assert par.shard_results[1] is None
+    assert "recover" in kinds
+    assert set(par.lane_results) == {"cam0", "cam1", "cam2"}
+    _assert_manager_results_identical(results[0], par)
+
+
+def test_parallel_event_ordering_deterministic(pretrained):
+    """Two identical overlapped runs — admissions and migrations live —
+    emit identical event and decision streams: ordering never depends on
+    worker completion order."""
+    hp, tp, sp = pretrained
+    runs = []
+    for _ in range(2):
+        mgr = FleetManager(_fleet_spec(hp), n_shards=3,
+                           placement="headroom",
+                           placement_kwargs={"min_gap": 1},
+                           migration=True, migration_cooldown=1,
+                           parallel_shards=3)
+        mgr.set_pretrained(tp, sp)
+        late = DriftStream(scenario("ES1", 2), seed=9, img=24)
+        runs.append(mgr.run(_streams(3), duration=40.0,
+                            admissions=[(10.0, "late", late)]))
+    a, b = runs
+    assert a.parallel_rounds > 0
+    assert [(e.round, e.kind, e.shard, e.key, e.to_shard) for e in a.events] \
+        == [(e.round, e.kind, e.shard, e.key, e.to_shard) for e in b.events]
+    _assert_manager_results_identical(a, b)
+
+
+# ------------------------------------------------- estimator-driven placement
+def _eview(i, n, recent, phase_s=10.0, drifted=0, alive=True, done=False):
+    return ShardView(index=i, alive=alive, done=done, n_lanes=n, clock=0.0,
+                     t_tsa=0.0, recent_t_tsa=recent, drifted_lanes=drifted,
+                     recent_phase_s=phase_s)
+
+
+def test_estimator_policy_registered_with_knobs():
+    pol = PlacementPolicy("estimator", migration_cost_s=1.0,
+                          horizon_rounds=2, oversub_limit=1.2)
+    assert isinstance(pol, EstimatorPlacementPolicy)
+    assert pol.model.migration_cost_s == 1.0
+    assert pol.model.horizon_rounds == 2
+    assert pol.model.oversub_limit == 1.2
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        PlacementPolicy("estimator", bogus=1)
+
+
+def test_estimator_places_and_admits_by_seconds():
+    pol = EstimatorPlacementPolicy(oversub_limit=1.0)
+    # Placement minimizes predicted load in SECONDS, not lane count.
+    assert pol.place([_eview(0, 1, 8.0), _eview(1, 3, 2.0)]) == 1
+    # Cold start (no phase history anywhere): always admits.
+    assert pol.admit([_eview(0, 0, 0.0, phase_s=0.0),
+                      _eview(1, 0, 0.0, phase_s=0.0)]) == 0
+    # Mean lane cost (4+6)/2 = 5s: shard 0 fits ((4+5)/10 <= 1.0),
+    # shard 1 would oversubscribe ((6+5)/10 > 1.0).
+    assert pol.admit([_eview(0, 1, 4.0), _eview(1, 1, 6.0)]) == 0
+    # Every shard past the utilization limit with one more lane: reject.
+    assert pol.admit([_eview(0, 2, 9.5), _eview(1, 2, 9.0)]) is None
+
+
+def test_estimator_migrates_on_load_max_gain():
+    lanes = [LaneView(shard=0, index=0, key="a", drifted=True,
+                      drift_events=1, recent_t_tsa=6.0),
+             LaneView(shard=0, index=1, key="b", drifted=False,
+                      drift_events=0, recent_t_tsa=2.0),
+             LaneView(shard=1, index=0, key="c", drifted=False,
+                      drift_events=0, recent_t_tsa=1.0)]
+    views = [_eview(0, 2, 8.0), _eview(1, 1, 1.0)]
+    pol = EstimatorPlacementPolicy(migration_cost_s=2.0, horizon_rounds=4)
+    got = pol.migrate(views, lanes)
+    # Moving "a" (6s): loads [8,1] -> [2,7], gain (8-7)*4 = 4s.
+    # Moving "b" (2s): loads [8,1] -> [6,3], gain (8-6)*4 = 8s — best.
+    assert got is not None
+    assert got[0].key == "b" and got[1] == 1
+    # The same proposal under a prohibitive move cost does not fire.
+    dear = EstimatorPlacementPolicy(migration_cost_s=10.0, horizon_rounds=4)
+    assert dear.migrate(views, lanes) is None
+    # A shard's last lane never migrates, whatever the gain.
+    solo = [LaneView(shard=0, index=0, key="a", drifted=True,
+                     drift_events=1, recent_t_tsa=8.0)]
+    assert pol.migrate([_eview(0, 1, 8.0), _eview(1, 1, 0.5)], solo) is None
+
+
+def test_placement_cost_model_arithmetic():
+    from repro.core.estimator import PlacementCostModel
+    model = PlacementCostModel(migration_cost_s=3.0, horizon_rounds=2,
+                               oversub_limit=1.5)
+    assert model.round_time_s([4.0, 9.0, 1.0]) == 9.0
+    assert model.migration_gain_s([9.0, 1.0], 0, 1, 4.0) \
+        == pytest.approx((9.0 - 5.0) * 2)
+    assert model.worth_migrating([9.0, 1.0], 0, 1, 4.0)
+    assert not model.worth_migrating([9.0, 8.0], 0, 1, 0.5)
+    assert model.utilization(12.0, 8.0) == 1.5
+    assert model.utilization(1.0, 0.0) == 0.0
+    assert model.admits(8.0, 8.0, 4.0)       # 1.5 <= 1.5
+    assert not model.admits(8.1, 8.0, 4.0)   # just past the limit
+
+
+def test_manager_surfaces_admission_rejection(pretrained):
+    """An oversubscribed fleet turns a late camera away: the rejection is
+    a first-class PlacementAction/event and the camera never runs."""
+    hp, tp, sp = pretrained
+    mgr = FleetManager(_fleet_spec(hp), n_shards=2, placement="estimator",
+                       placement_kwargs={"oversub_limit": -1.0},
+                       migration=False)
+    mgr.set_pretrained(tp, sp)
+    late = DriftStream(scenario("ES1", 2), seed=9, img=24)
+    res = mgr.run(_streams(2), duration=40.0,
+                  admissions=[(10.0, "late", late)])
+    assert "late" not in res.lane_results
+    assert set(res.lane_results) == {"cam0", "cam1"}
+    rejects = [p for d in res.decisions for p in d.placements
+               if p.kind == "reject"]
+    assert len(rejects) == 1
+    assert rejects[0].key == "late" and rejects[0].to_shard is None
+    assert any(e.kind == "reject" and e.key == "late" for e in res.events)
+
+
+def test_migration_cost_charged_to_ledger(pretrained):
+    """Every policy migration charges migration_cost_s to the manager
+    ledger, and 'total' carries it on top of T-SA + recovery."""
+    hp, tp, sp = pretrained
+    mgr = FleetManager(_fleet_spec(hp), n_shards=2,
+                       placement=_MigrateOnce(), migration=True,
+                       migration_cooldown=0, migration_cost_s=1.5)
+    mgr.set_pretrained(tp, sp)
+    res = mgr.run(_streams(2), duration=40.0)
+    migs = [e for e in res.events if e.kind == "migrate"]
+    assert len(migs) == 1
+    assert res.ledger["migration_cost"] == 1.5
+    assert res.ledger["total"] == pytest.approx(
+        res.ledger["t_tsa"] + res.ledger["recovery_cost"] + 1.5, rel=1e-12)
+    assert res.conservation_gap() == pytest.approx(0.0, abs=1e-9)

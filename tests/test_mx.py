@@ -238,3 +238,34 @@ def test_kernel_stats_no_silent_ref_fallback(monkeypatch):
             assert stats[op]["interpret"] >= 1, (op, stats)
     finally:
         ops.reset_kernel_stats()
+
+
+def test_kernel_stats_concurrent_increments():
+    """The dispatch counters are process-global and, under overlapped
+    shard stepping, bumped from worker threads — hammer _count from 8
+    threads and require that not one increment is lost."""
+    import threading
+
+    ops.reset_kernel_stats()
+    try:
+        n_threads, per_thread = 8, 500
+        start = threading.Barrier(n_threads)
+
+        def worker(i):
+            start.wait()
+            for _ in range(per_thread):
+                ops._count("mx_matmul", "interpret")
+                ops._count(f"op{i % 2}", "ref")
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = ops.kernel_stats()
+        assert stats["mx_matmul"]["interpret"] == n_threads * per_thread
+        assert (stats["op0"]["ref"] + stats["op1"]["ref"]
+                == n_threads * per_thread)
+    finally:
+        ops.reset_kernel_stats()

@@ -27,6 +27,7 @@ from repro.core.kernel import (
     Kernel,
     LabelingKernel,
     RetrainKernel,
+    ServingParamsCache,
 )
 from repro.core.session import CLSession, CLSystemSpec, pretrain_model
 from repro.data.stream import DriftStream, scenario
@@ -215,6 +216,39 @@ def test_serving_cache_maxsize_zero_disables(kernel_setup):
     assert len(small) == 1
     small.get(params, "mx6")
     assert small.stats()["misses"] == 3  # evicted -> re-quantize
+
+
+def test_serving_cache_concurrent_gets_count_exactly(kernel_setup):
+    """Under overlapped shard stepping the cache is shared process-global
+    state: 8 threads hammering the same (tree, precision) must lose no
+    counter increments, and — because the lock is held across the fill —
+    quantize the tree exactly once."""
+    import threading
+
+    est, hp, model, params, x = kernel_setup
+    cache = ServingParamsCache(maxsize=8)
+    n_threads, per_thread = 8, 50
+    start = threading.Barrier(n_threads)
+    fills = []
+
+    def fake_quantize(tree, precision):
+        fills.append(precision)
+        return {"q": precision}
+
+    def worker():
+        start.wait()
+        for _ in range(per_thread):
+            cache.get(params, "mx9", quantize=fake_quantize)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stats = cache.stats()
+    assert stats["hits"] + stats["misses"] == n_threads * per_thread
+    assert stats["misses"] == 1 and len(fills) == 1
+    assert stats == {"hits": 399, "misses": 1, "entries": 1}
 
 
 def test_labeling_cache_repeated_bursts_hit(kernel_setup):
