@@ -26,6 +26,10 @@ HEADLINE_KEYS = {
                  ("session", "concurrent", "avg_accuracy"),
                  ("fused_wall_speedup",),
                  ("fused_op_reduction",),
+                 ("bwd_pair_speedup",),
+                 ("bwd_pair_program_reduction",),
+                 ("serve_prequant_speedup",),
+                 ("serve_prequant", "weight_quant_ops_per_window"),
                  ("label_cache_speedup",)],
     "reallocation": [("scenarios", "*", "*", "avg_accuracy"),
                      ("speculation_hit_rate",)],

@@ -38,11 +38,30 @@ from repro.core import mx as mx_lib
 from repro.core.partition import SpatialPartition
 
 
-class ServingParamsCache:
-    """Version-keyed cache of quantized serving copies.
+class _CacheSlot:
+    """One (tree, precision) cache line.
 
-    ``quantize_tree`` fake-quants every weight of a tree — one jitted call
-    per leaf — yet between retrain steps the source tree is the same
+    ``quantized`` is the RESIDENT copy — the tree with weight leaves held
+    as actual MX representations (``mx_lib.MXLeaf``: int8 mantissas +
+    shared exponents, ~3.5× smaller than fp32). ``value`` memoizes the
+    lazily-dequantized fake-quant fp32 tree legacy ``model.apply`` callers
+    consume (bit-identical to ``quantize_tree`` on the source). The
+    slot's own lock serializes the fill and the lazy dequantize for THIS
+    key only — the cache-wide lock is never held across either."""
+
+    __slots__ = ("lock", "quantized", "value")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.quantized = None
+        self.value = None
+
+
+class ServingParamsCache:
+    """Version-keyed cache of RESIDENT quantized serving copies.
+
+    Quantizing a serving tree — one jitted call per weight leaf — is the
+    expensive step, yet between retrain steps the source tree is the same
     immutable object (JAX never mutates arrays in place; ``fit`` returns a
     fresh tree), and the teacher tree never changes at all: before this
     cache, every labeling burst re-quantized the whole teacher from
@@ -54,48 +73,92 @@ class ServingParamsCache:
     tree it supersedes explicitly. ``maxsize=0`` disables caching (the
     benches' uncached baseline); eviction is LRU.
 
-    All bookkeeping — hit/miss counters, the LRU order, entry insertion
-    and eviction — runs under a per-cache lock, held across the fill too:
-    under overlapped shard stepping (``FleetManager(parallel_shards=N)``)
-    kernels on different worker threads may share a cache, and the lock
-    both keeps the counters exact and guarantees at most one quantization
-    per (tree, precision) key however many threads race on it.
+    Entries store the QUANTIZED representation (``quantize_tree_mx``), not
+    a fake-quant fp32 tree: :meth:`get_quantized` hands the resident copy
+    to weight-resident consumers (``ops.mx_matmul_prequant``), while
+    :meth:`get` lazily dequantizes — once, memoized — for legacy apply
+    paths, bit-identical to the former ``quantize_tree`` output.
+
+    Locking: the cache-wide lock covers BOOKKEEPING ONLY (hit/miss
+    counters, LRU order, slot claim/eviction) and is never held across a
+    quantization. Each slot carries its own fill lock, so under
+    overlapped shard stepping (``FleetManager(parallel_shards=N)``) a
+    slow fill of one lane's tree no longer serializes every other lane's
+    lookup; racing getters of the SAME key still produce exactly one fill
+    (``fills`` counts the whole-tree quantizations actually executed).
     """
 
     def __init__(self, maxsize: int = 8):
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self.fills = 0  # whole-tree quantizations actually executed
         self._lock = threading.RLock()
-        # id(source tree) -> (source tree, {precision: quantized tree})
+        # id(source tree) -> (source tree, {precision: _CacheSlot})
         self._entries: "OrderedDict[int, tuple]" = OrderedDict()
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
 
-    def get(self, params, precision: str, quantize=mx_lib.quantize_tree):
+    def _claim(self, params, precision: str) -> _CacheSlot:
+        """Return the slot for (params, precision), creating and publishing
+        it on a miss — bookkeeping only, constant-time under the cache
+        lock. The caller fills the slot under the slot's own lock."""
         key = id(params)
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None and entry[0] is params:
-                cached = entry[1].get(precision)
-                if cached is not None:
+                slot = entry[1].get(precision)
+                if slot is not None:
                     self.hits += 1
                     self._entries.move_to_end(key)
-                    return cached
+                    return slot
             self.misses += 1
-            quantized = quantize(params, precision)
+            slot = _CacheSlot()
             if self.maxsize <= 0:
-                return quantized
+                return slot  # unpublished: the uncached baseline refills
             if entry is None or entry[0] is not params:
                 entry = (params, {})
                 self._entries[key] = entry
-            entry[1][precision] = quantized
+            entry[1][precision] = slot
             self._entries.move_to_end(key)
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
-            return quantized
+            return slot
+
+    def _count_fill(self) -> None:
+        with self._lock:
+            self.fills += 1
+
+    def get(self, params, precision: str, quantize=None):
+        """The fake-quant fp32 serving tree for unmodified ``model.apply``
+        callers. Default path: fill the resident quantized rep (once per
+        key), lazily dequantize (once per key, memoized) — bit-identical
+        to ``quantize_tree(params, precision)``. A custom ``quantize``
+        callable stores its return value directly (test/bench hook)."""
+        slot = self._claim(params, precision)
+        with slot.lock:
+            if slot.value is None and slot.quantized is None:
+                self._count_fill()
+                if quantize is not None:
+                    slot.value = quantize(params, precision)
+                else:
+                    slot.quantized = mx_lib.quantize_tree_mx(params,
+                                                             precision)
+            if slot.value is None:
+                slot.value = mx_lib.dequantize_tree_mx(slot.quantized)
+            return slot.value
+
+    def get_quantized(self, params, precision: str):
+        """The RESIDENT copy — weight leaves as ``mx_lib.MXLeaf`` — for
+        consumers that feed quantized operands straight to the kernels."""
+        slot = self._claim(params, precision)
+        with slot.lock:
+            if slot.quantized is None:
+                self._count_fill()
+                slot.quantized = mx_lib.quantize_tree_mx(params, precision)
+            return slot.quantized
 
     def invalidate(self, params=None) -> None:
         """Drop the entries of ``params`` — or everything when ``None``."""
@@ -199,12 +262,22 @@ class InferenceKernel(_PlacedKernel):
         self.serving_cache = ServingParamsCache()
 
     def serving_params(self, params, precision: str):
-        """UpdateWeight (Alg. 1 line 6): fake-quant the serving copy to the
-        inference precision; the retraining master stays fp32. Served from
-        the version-keyed :class:`ServingParamsCache` — re-requesting the
-        serving copy of an unchanged tree is a hit, not a re-quantize."""
+        """UpdateWeight (Alg. 1 line 6): the serving copy at the inference
+        precision; the retraining master stays fp32. Served from the
+        version-keyed :class:`ServingParamsCache`, which keeps the tree
+        RESIDENT in quantized form — re-requesting the serving copy of an
+        unchanged tree is a hit, not a re-quantize, and the fp32 view the
+        apply consumes is dequantized lazily exactly once per version."""
         if self.apply_mx:
             return self.serving_cache.get(params, precision)
+        return params
+
+    def serving_quantized(self, params, precision: str):
+        """The RESIDENT quantized serving copy (weight leaves as
+        ``mx_lib.MXLeaf``) — for weight-resident consumers that feed
+        ``ops.mx_matmul_prequant`` directly instead of ``model.apply``."""
+        if self.apply_mx:
+            return self.serving_cache.get_quantized(params, precision)
         return params
 
     def predict_async(self, params, x) -> jax.Array:
@@ -314,9 +387,10 @@ class LabelingKernel(_PlacedKernel):
         ``microbatch``, large labeling bursts (N_ldd on drift) are split into
         chunks so each starts executing on the T-SA while the next is staged
         — per-sample models make the result equal to one full-batch call.
-        The teacher's quantized copy comes from the version-keyed serving
-        cache: the tree never changes, so every burst after the first is a
-        hit instead of a whole-tree re-quantize."""
+        The teacher's serving copy comes from the version-keyed cache,
+        which holds it RESIDENT in quantized form: the tree never changes,
+        so every burst after the first is a hit on the already-dequantized
+        view instead of a whole-tree re-quantize."""
         if self.apply_mx:
             params = self.serving_cache.get(params, precision)
         if microbatch and len(x) > microbatch:
@@ -329,6 +403,13 @@ class LabelingKernel(_PlacedKernel):
     def label(self, params, x, precision: str,
               microbatch: Optional[int] = None) -> np.ndarray:
         return np.asarray(self.label_async(params, x, precision, microbatch))
+
+    def serving_quantized(self, params, precision: str):
+        """The teacher's RESIDENT quantized copy (see
+        :meth:`InferenceKernel.serving_quantized`)."""
+        if self.apply_mx:
+            return self.serving_cache.get_quantized(params, precision)
+        return params
 
     def label_fleet_async(self, params, bursts: Sequence[np.ndarray],
                           precision: str,

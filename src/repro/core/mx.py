@@ -3,13 +3,27 @@
 ``mx_dense`` is a drop-in matmul whose forward runs at a configurable MX
 precision (MX6 for inference/labeling, MX9 for retraining — the paper's §IV
 operating points) with a straight-through-estimator backward at MX9. The
-forward AND both gradient GEMMs route through the FUSED quantize→matmul
-entry (``ops.mx_matmul_fused``): one program per GEMM, quantization happens
-inside the matmul (in VMEM on the Pallas path, in one jit on CPU hosts) —
-MX mantissas/scales never materialize between ops. Model quantization
-helpers fake-quant whole parameter trees for MX inference; the per-kernel
-serving-copy *cache* over those trees lives in core/kernel.py
-(``ServingParamsCache``).
+forward routes through the FUSED quantize→matmul entry
+(``ops.mx_matmul_fused``); the backward routes through the BACKWARD PAIR
+(``ops.mx_matmul_bwd_pair``): dX and dW are emitted by ONE program, the
+cotangent resident across both gradient GEMMs — the paper's §V-C
+precision-conversion unit producing transposed MX blocks so both consumers
+share it. Quantization happens inside the matmul (in VMEM on the Pallas
+path, in one jit on CPU hosts); MX mantissas/scales never materialize
+between ops, and the whole backward is one launch instead of two.
+
+Serving weights come in two resident forms:
+
+* ``quantize_tree`` — legacy fake-quant: fp32 trees carrying the MX
+  rounding, consumed by unmodified ``model.apply``.
+* ``quantize_tree_mx`` / ``dequantize_tree_mx`` — the RESIDENT form:
+  weight leaves stored as actual MX representations (int8 mantissas +
+  shared exponents, ~3.5× smaller than fp32). ``dequantize_tree_mx``
+  reproduces ``quantize_tree``'s output bit-for-bit, so legacy apply
+  paths are unchanged; ``mx_dense_prequant`` consumes rhs-layout resident
+  weights (``ops.mx_quantize_rhs``) directly with zero per-call weight
+  quantization. The per-kernel cache over these lives in core/kernel.py
+  (``ServingParamsCache``).
 """
 from __future__ import annotations
 
@@ -62,9 +76,9 @@ def _mx_dense_bwd(fwd_prec, bwd_prec, res, g):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    # dX = g @ W^T ; dW = X^T @ g — both through fused MX at bwd_prec.
-    dx = ops.mx_matmul_fused(g2, w.T, bwd_prec, bwd_prec)
-    dw = ops.mx_matmul_fused(x2.T, g2, bwd_prec, bwd_prec)
+    # dX = g @ W^T ; dW = X^T @ g — ONE backward-pair program at bwd_prec,
+    # bit-identical to the former two independent fused launches.
+    dx, dw = ops.mx_matmul_bwd_pair(g2, x2, w, bwd_prec)
     return dx.reshape(shape).astype(x.dtype), dw.astype(w.dtype)
 
 
@@ -102,6 +116,96 @@ def quantize_tree(params, precision: str, min_size: int = 1024):
         return _fake_quant(p, precision)
 
     return jax.tree_util.tree_map(q, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class MXLeaf:
+    """A weight leaf held in its RESIDENT quantized MX form.
+
+    ``q`` is the actual MX representation (int8 mantissas, shared
+    exponents, micro-exponent bits) of the leaf flattened to
+    [-1, last_dim] and padded to a 16 multiple; ``shape``/``dtype``/``k``
+    record what an exact round trip back to the fake-quant fp32 leaf
+    needs. Deliberately NOT a pytree node: tree_maps over a quantized
+    tree see it as one opaque leaf."""
+
+    q: object  # kernels.ref.MXTensor
+    shape: tuple
+    dtype: object
+    k: int
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def _quant_leaf(x, precision: str):
+    from repro.kernels import ref as _ref
+
+    flat = x.reshape(-1, x.shape[-1])
+    pad = (-flat.shape[-1]) % _ref.BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return _ref.mx_quantize_ref(flat, precision)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shape", "dtype"))
+def _dequant_leaf(q, k: int, shape, dtype):
+    from repro.kernels import ref as _ref
+
+    y = _ref.mx_dequantize_ref(q)
+    if y.shape[-1] != k:
+        y = y[:, :k]
+    return y.reshape(shape).astype(dtype)
+
+
+def _quantizable(p, min_size: int) -> bool:
+    if not isinstance(p, jax.Array) and not hasattr(p, "ndim"):
+        return False
+    return (p.ndim >= 2 and p.size >= min_size
+            and jnp.issubdtype(p.dtype, jnp.floating))
+
+
+def quantize_tree_mx(params, precision: str, min_size: int = 1024):
+    """Quantize every >=2D weight into its RESIDENT MX representation.
+
+    Same leaf predicate as :func:`quantize_tree`, but the quantized leaves
+    are stored as ``MXLeaf`` (int8 mantissas + shared exponents — the
+    ~3.5×-smaller copy ``ServingParamsCache`` keeps resident) instead of
+    being immediately dequantized back to fp32. ``dequantize_tree_mx``
+    reproduces ``quantize_tree(params, precision)`` bit-for-bit: the
+    quantize and dequantize halves here are exactly the two halves of
+    ``_fake_quant``'s round trip.
+    """
+    def q(p):
+        if not _quantizable(p, min_size):
+            return p
+        return MXLeaf(_quant_leaf(p, precision), tuple(p.shape), p.dtype,
+                      int(p.shape[-1]))
+
+    return jax.tree_util.tree_map(q, params)
+
+
+def dequantize_tree_mx(qtree):
+    """Expand a :func:`quantize_tree_mx` tree back to the fake-quant fp32
+    serving tree legacy ``model.apply`` paths consume — bit-identical to
+    ``quantize_tree`` on the source tree."""
+    def dq(p):
+        if isinstance(p, MXLeaf):
+            return _dequant_leaf(p.q, p.k, p.shape, p.dtype)
+        return p
+
+    return jax.tree_util.tree_map(
+        dq, qtree, is_leaf=lambda p: isinstance(p, MXLeaf))
+
+
+def mx_dense_prequant(x: jax.Array, qw, fwd_prec: str = "mx6") -> jax.Array:
+    """Weight-resident serving matmul: ``x [..., K]`` against a weight
+    already stored in rhs layout (``ops.mx_quantize_rhs(w, precision)``).
+    Bit-identical to ``mx_dense(x, w, fwd_prec, ...)``'s forward, with
+    zero weight-quantization work per call. Serving only — no VJP;
+    retraining goes through ``mx_dense``."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = ops.mx_matmul_prequant(x2, qw, fwd_prec)
+    return y.reshape(*shape[:-1], y.shape[-1]).astype(x.dtype)
 
 
 def activation_quant(x: jax.Array, precision: Optional[str]) -> jax.Array:

@@ -280,8 +280,10 @@ class CLSession:
         self.retrain = RetrainKernel(
             self.student, self.full_student, self.estimator, self.hp)
         self.kernels = (self.inference, self.labeling, self.retrain)
-        # Retraining supersedes the student tree: drop its cached serving
-        # copy from the inference kernel's version-keyed cache.
+        # Retraining supersedes the student tree: drop its RESIDENT
+        # quantized serving copy from the inference kernel's version-keyed
+        # cache (the teacher's cache needs no wiring — its tree never
+        # changes, so its resident copy is filled once and lives forever).
         self.retrain.invalidates = (self.inference.serving_cache,)
 
         # Spatial partition: fission the mesh if one is given.

@@ -4,10 +4,17 @@
 #
 # This repo's hot-spots (DaCapo's MX pipeline + attention):
 #   mx_quantize.py / mx_matmul.py — the unfused MX kernels (quantize to
-#     MXTensor, matmul over MXTensors)
-#   mx_fused.py — the fused quantize→matmul kernel: both operands
+#     MXTensor in K-last layout, matmul over MXTensors; the matmul's rhs
+#     streams the K-first "rhs layout" — also the weight-RESIDENT serving
+#     format ops.mx_quantize_rhs stores)
+#   mx_fused.py — the fused entries: mx_matmul_fused (both operands
 #     quantized per-16-block in VMEM inside the matmul grid, ONE program
-#     per GEMM, bit-identical to the unfused chain
+#     per GEMM), mx_matmul_bwd_pair (BOTH gradient GEMMs of a dense layer
+#     in ONE program — the cotangent quantized in VMEM and consumed by dX
+#     and dW without a second launch), and mx_matmul_prequant (serving
+#     GEMM against an already-quantized resident weight: activations
+#     quantized on the fly, zero weight-quantization work per call) — all
+#     bit-identical to their unfused chains
 #   flash_attention.py — chunked online-softmax attention
 #   ref.py — pure-jnp oracles (bit-exact ground truth for all of the
 #     above; also the serving path under REPRO_KERNEL_MODE=ref)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.mx_matmul import _dequant_rhs
 from repro.kernels.ref import BLOCK, EXP_MIN, MANTISSA_BITS, SUBBLOCK
 
 DEFAULT_BM = 128
@@ -128,3 +129,207 @@ def mx_matmul_fused(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b)
+
+
+# ----------------------------------------------------------- backward pair ---
+def _bwd_pair_kernel(g1_ref, wt_ref, xt_ref, g2_ref, dx_ref, dw_ref,
+                     acc1_ref, acc2_ref, *, mb: int, dims):
+    """Both gradient GEMMs of an MX dense layer in ONE program.
+
+    The 1-D grid covers ``S1 + S2`` steps: the first ``S1`` run GEMM 1
+    (``dX = q(g) @ q(W^T)``), the rest run GEMM 2 (``dW = q(X^T) @ q(g)``).
+    Each phase replays exactly the per-step quantize/dot/accumulate sequence
+    the standalone ``_fused_kernel`` would execute over its own 3-D grid —
+    same tiles, same k-inner order — so both outputs are bitwise equal to
+    the two independent fused launches. ``pl.when`` keeps only the active
+    phase's compute live on any step; the inactive phase's operand/output
+    index maps are clamped (see ``mx_matmul_bwd_pair``), so its blocks just
+    round-trip unmodified.
+    """
+    nm1, nn1, nk1, nm2, nn2, nk2 = dims
+    s1 = nm1 * nn1 * nk1
+    s = pl.program_id(0)
+    phase1 = s < s1
+    k1 = s % nk1
+    k2 = (s - s1) % nk2
+
+    @pl.when(phase1 & (k1 == 0))
+    def _init1():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+
+    @pl.when(phase1)
+    def _acc1():
+        a = _quant_dequant_lhs(g1_ref[...].astype(jnp.float32), mb)
+        b = _quant_dequant_rhs(wt_ref[...].astype(jnp.float32), mb)
+        acc1_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(phase1 & (k1 == nk1 - 1))
+    def _flush1():
+        dx_ref[...] = acc1_ref[...]
+
+    phase2 = jnp.logical_not(phase1)
+
+    @pl.when(phase2 & (k2 == 0))
+    def _init2():
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    @pl.when(phase2)
+    def _acc2():
+        a = _quant_dequant_lhs(xt_ref[...].astype(jnp.float32), mb)
+        b = _quant_dequant_rhs(g2_ref[...].astype(jnp.float32), mb)
+        acc2_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(phase2 & (k2 == nk2 - 1))
+    def _flush2():
+        dw_ref[...] = acc2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "precision", "bm1", "bn1", "bk1", "bm2", "bn2", "bk2", "interpret"))
+def mx_matmul_bwd_pair(g1: jax.Array, wt: jax.Array, xt: jax.Array,
+                       g2: jax.Array, precision: str = "mx9", *,
+                       bm1: int, bn1: int, bk1: int,
+                       bm2: int, bn2: int, bk2: int,
+                       interpret: bool = False):
+    """ONE Pallas program emitting both gradients of ``y = x @ w``:
+    ``dX = q(g1) @ q(wt)`` over grid 1 and ``dW = q(xt) @ q(g2)`` over
+    grid 2, fused into a single 1-D grid of ``S1 + S2`` steps. The
+    cotangent stays resident in VMEM across both consumers instead of
+    being re-streamed (and its quantization pipeline re-launched) by a
+    second program.
+
+    ``g1``/``g2`` are the same cotangent padded for each GEMM's role
+    (g1: dX's lhs [M, N]; g2: dW's rhs [M', N]) — the two GEMMs contract
+    g along different axes (N for dX, M for dW), so each consumer
+    quantizes its own per-16-block view in-program, exactly as the
+    standalone fused launches would. Outputs: ``dx [M, K]``,
+    ``dw [K', N]`` fp32.
+    """
+    m_dim, n1 = g1.shape
+    n1b, k_dim = wt.shape
+    assert n1 == n1b, (n1, n1b)
+    k2_dim, m2 = xt.shape
+    m2b, n2 = g2.shape
+    assert m2 == m2b, (m2, m2b)
+    assert m_dim % bm1 == 0 and k_dim % bn1 == 0 and n1 % bk1 == 0
+    assert k2_dim % bm2 == 0 and n2 % bn2 == 0 and m2 % bk2 == 0
+    assert bk1 % BLOCK == 0 and bk2 % BLOCK == 0
+    nm1, nn1, nk1 = m_dim // bm1, k_dim // bn1, n1 // bk1
+    nm2, nn2, nk2 = k2_dim // bm2, n2 // bn2, m2 // bk2
+    s1, s2 = nm1 * nn1 * nk1, nm2 * nn2 * nk2
+    c1, c2 = nn1 * nk1, nn2 * nk2
+    kernel = functools.partial(
+        _bwd_pair_kernel, mb=MANTISSA_BITS[precision],
+        dims=(nm1, nn1, nk1, nm2, nn2, nk2))
+
+    # Phase-aware block index maps, derived from the flat step s. During
+    # the OTHER phase each map clamps to a block that is never again
+    # flushed (GEMM 1 operands/output park on their last block, GEMM 2 on
+    # their first), so the inactive output block round-trips unchanged.
+    def g1_map(s):
+        p1 = s < s1
+        return (jnp.where(p1, s // c1, nm1 - 1),
+                jnp.where(p1, s % nk1, nk1 - 1))
+
+    def wt_map(s):
+        p1 = s < s1
+        return (jnp.where(p1, s % nk1, nk1 - 1),
+                jnp.where(p1, (s // nk1) % nn1, nn1 - 1))
+
+    def dx_map(s):
+        p1 = s < s1
+        return (jnp.where(p1, s // c1, nm1 - 1),
+                jnp.where(p1, (s // nk1) % nn1, nn1 - 1))
+
+    def xt_map(s):
+        t = jnp.maximum(s - s1, 0)
+        return t // c2, t % nk2
+
+    def g2_map(s):
+        t = jnp.maximum(s - s1, 0)
+        return t % nk2, (t // nk2) % nn2
+
+    def dw_map(s):
+        t = jnp.maximum(s - s1, 0)
+        return t // c2, (t // nk2) % nn2
+
+    return pl.pallas_call(
+        kernel,
+        grid=(s1 + s2,),
+        in_specs=[
+            pl.BlockSpec((bm1, bk1), g1_map),
+            pl.BlockSpec((bk1, bn1), wt_map),
+            pl.BlockSpec((bm2, bk2), xt_map),
+            pl.BlockSpec((bk2, bn2), g2_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm1, bn1), dx_map),
+            pl.BlockSpec((bm2, bn2), dw_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
+            jax.ShapeDtypeStruct((k2_dim, n2), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm1, bn1), jnp.float32),
+                        pltpu.VMEM((bm2, bn2), jnp.float32)],
+        interpret=interpret,
+    )(g1, wt, xt, g2)
+
+
+# ----------------------------------------------------- weight-resident GEMM --
+def _prequant_kernel(a_ref, rm_ref, re_ref, rx_ref, out_ref, acc_ref, *,
+                     mb_lhs: int, mb_rhs: int, nk: int):
+    """Serving GEMM with a RESIDENT quantized rhs: the activation tile is
+    quantized on the fly (same math as ``_fused_kernel``'s lhs), the weight
+    tile arrives as stored MX mantissas/exponents and is only dequantized
+    (``mx_matmul.py``'s rhs dequant) — zero weight-quantization work."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _quant_dequant_lhs(a_ref[...].astype(jnp.float32), mb_lhs)
+    b = _dequant_rhs(rm_ref[...], re_ref[...], rx_ref[...], mb_rhs)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("precision_a", "mb_rhs",
+                                             "bm", "bn", "bk", "interpret"))
+def mx_matmul_prequant(a: jax.Array, rm: jax.Array, re: jax.Array,
+                       rx: jax.Array, precision_a: str = "mx6",
+                       mb_rhs: int = 4, *, bm: int = DEFAULT_BM,
+                       bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                       interpret: bool = False) -> jax.Array:
+    """a [M, K] fp32/bf16 @ an ALREADY-QUANTIZED rhs in rhs layout
+    (mantissa ``rm`` [K, N] int8, exponents ``re`` / micro-exponent bits
+    ``rx`` [K/16, N]) → fp32 [M, N]. Bit-identical to ``mx_matmul_fused``
+    on the dequantized weight because MX quantization is idempotent: the
+    stored mantissas/scales ARE what the fused kernel would recompute."""
+    m_dim, k_dim = a.shape
+    k2, n_dim = rm.shape
+    assert k_dim == k2, (k_dim, k2)
+    bm, bn, bk = min(bm, m_dim), min(bn, n_dim), min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0
+    assert bk % BLOCK == 0
+    nk = k_dim // bk
+    grid = (m_dim // bm, n_dim // bn, nk)
+    kernel = functools.partial(
+        _prequant_kernel, mb_lhs=MANTISSA_BITS[precision_a],
+        mb_rhs=mb_rhs, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // BLOCK, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // BLOCK, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, rm, re, rx)

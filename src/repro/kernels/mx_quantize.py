@@ -4,6 +4,17 @@ unit of the paper, §V-C).
 Tiles [bm, bk] HBM->VMEM; per 16-element block along the contraction (last)
 axis computes the shared exponent (max-tree), per-2 sub-block micro-exponent
 bits, and sign-magnitude mantissas.
+
+Two MXTensor layouts flow out of this math (same bits, different axes):
+
+* **K-last (lhs) layout** — what this kernel emits: mantissa [M, K],
+  exponents [M, K/16]; quantized along the LAST axis. The matmul lhs.
+* **K-first (rhs) layout** — mantissa [K, N], exponents [K/16, N];
+  quantized along the FIRST axis. What ``mx_matmul.py`` streams for the
+  rhs, produced by quantizing the transpose and transposing the fields
+  back (``ops.mx_quantize_rhs``). Since PR 9 this doubles as the
+  weight-RESIDENT serving format: ``ops.mx_matmul_prequant`` consumes it
+  directly, so a cached weight is quantized once and served forever.
 """
 from __future__ import annotations
 

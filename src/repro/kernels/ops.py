@@ -18,6 +18,21 @@ Two hot-path properties this layer guarantees (PR 7):
   never leaves VMEM) on pallas/interpret, the single-jit fused oracle
   (ref.mx_matmul_fused_ref) on ref — bit-identical to
   ``mx_quantize``→``mx_matmul`` in every mode.
+
+Two more land in PR 9, closing the remaining hot-path round trips:
+
+* **The backward pair.** ``mx_matmul_bwd_pair`` emits BOTH gradients of
+  ``y = x @ w`` — ``dX = q(g) @ q(W^T)`` and ``dW = q(X^T) @ q(g)`` — as
+  ONE program (one Pallas launch / one jit), the cotangent resident in
+  VMEM across both consumers, bit-identical to the two independent fused
+  GEMMs in every mode. ``core/mx.py::_mx_dense_bwd`` routes through it.
+* **Weight-resident serving.** ``mx_quantize_rhs`` stores a weight in the
+  rhs layout the matmul kernels consume (quantized along the contraction
+  axis); ``mx_matmul_prequant`` multiplies against that resident copy with
+  ZERO weight-quantization work per call — bit-identical to
+  ``mx_matmul_fused`` on the original weight, because MX quantization is
+  idempotent. ``ServingParamsCache`` (core/kernel.py) keeps the resident
+  copies across serving windows and labeling bursts.
 """
 from __future__ import annotations
 
@@ -33,7 +48,7 @@ from repro.kernels import mx_fused as _mf
 from repro.kernels import mx_matmul as _mm
 from repro.kernels import mx_quantize as _mq
 from repro.kernels import ref as _ref
-from repro.kernels.ref import BLOCK, MXTensor
+from repro.kernels.ref import BLOCK, EXP_MIN, MANTISSA_BITS, MXTensor
 
 # Pallas tile alignments: fp32 rows to the 8-sublane tile, matmul N/K to
 # the 128-lane tile.
@@ -223,6 +238,106 @@ def mx_matmul_fused(a: jax.Array, b: jax.Array, precision_a: str = "mx6",
                               bk=_k_tile(ap.shape[1]),
                               interpret=(mode == "interpret"))
     _count("mx_matmul_fused", mode)
+    if out.shape[0] != m or out.shape[1] != n:
+        out = out[:m, :n]
+    return out
+
+
+def mx_matmul_bwd_pair(g: jax.Array, x: jax.Array, w: jax.Array,
+                       precision: str = "mx9"):
+    """Both gradients of ``y = x @ w`` in ONE program: the backward pair
+    of the paper's §V-C precision-conversion unit, which produces the
+    transposed MX blocks so both gradient GEMMs consume the same resident
+    cotangent. ``g [M, N]`` (cotangent), ``x [M, K]`` (saved input),
+    ``w [K, N]`` (weight) → ``(dx [M, K], dw [K, N])`` fp32.
+
+    Bit-identical in every kernel mode to the unfused chain
+
+        dx = mx_matmul_fused(g, w.T, precision, precision)
+        dw = mx_matmul_fused(x.T, g, precision, precision)
+
+    each phase of the pair kernel replays exactly the padding, tiling and
+    k-inner accumulation the standalone launch would use (the two GEMMs
+    quantize g along different contraction axes — N for dX, M for dW — so
+    each phase quantizes its own per-16-block view, as the standalone
+    launches do)."""
+    mode = kernel_mode()
+    m, n = g.shape
+    k = w.shape[0]
+    assert x.shape == (m, k), (x.shape, (m, k))
+    assert w.shape[1] == n, (w.shape, n)
+    if mode == "ref":
+        _count("mx_matmul_bwd_pair", "ref")
+        g1, padn = _pad_last(g, BLOCK)
+        wt = w.T
+        if padn:
+            wt = jnp.pad(wt, [(0, padn), (0, 0)])
+        xt, padm = _pad_last(x.T, BLOCK)
+        g2 = jnp.pad(g, [(0, padm), (0, 0)]) if padm else g
+        return _ref.mx_matmul_bwd_pair_ref(g1, wt, xt, g2, precision)
+    g1, wtp = _pad_matmul_operands(g, w.T)
+    xtp, g2p = _pad_matmul_operands(x.T, g)
+    dx, dw = _mf.mx_matmul_bwd_pair(
+        g1, wtp, xtp, g2p, precision,
+        bm1=_row_tile(g1.shape[0]), bn1=_row_tile(wtp.shape[1]),
+        bk1=_k_tile(g1.shape[1]),
+        bm2=_row_tile(xtp.shape[0]), bn2=_row_tile(g2p.shape[1]),
+        bk2=_k_tile(xtp.shape[1]),
+        interpret=(mode == "interpret"))
+    _count("mx_matmul_bwd_pair", mode)
+    if dx.shape != (m, k):
+        dx = dx[:m, :k]
+    if dw.shape != (k, n):
+        dw = dw[:k, :n]
+    return dx, dw
+
+
+def mx_quantize_rhs(b: jax.Array, precision: str) -> MXTensor:
+    """Quantize ``b [K, N]`` along K — the contraction axis — into the rhs
+    layout the matmul kernels stream (mantissa [K', N] with exponents /
+    micro-exponent bits [K'/16, N]; K' = K padded up to a 16 multiple).
+    This is the RESIDENT serving format: quantize a weight once, then feed
+    :func:`mx_matmul_prequant` every window with zero per-call weight
+    quantization work."""
+    q = mx_quantize(b.T, precision)
+    return MXTensor(q.mantissa.T, q.exponent.T, q.mx_bits.T, q.precision)
+
+
+def mx_matmul_prequant(a: jax.Array, qb: MXTensor,
+                       precision_a: str = "mx6") -> jax.Array:
+    """``a [M, K]`` @ an ALREADY-QUANTIZED weight ``qb`` (rhs layout, from
+    :func:`mx_quantize_rhs`) → fp32 [M, N]. The activations are quantized
+    on the fly inside the program; the weight operand is consumed straight
+    from its stored MX representation — no weight quantization per call.
+
+    Bit-identical to ``mx_matmul_fused(a, b, precision_a, qb.precision)``
+    for ``qb = mx_quantize_rhs(b, ...)``: MX quantization is idempotent,
+    so the stored mantissas and scales ARE what the fused kernel would
+    recompute from ``b`` (tests/test_mx.py pins this). Zero-padding the
+    resident operand's K'/N up to kernel tile alignment uses (mantissa 0,
+    exponent EXP_MIN, bits 0) — exactly what the fused kernel's in-flight
+    quantization produces for zero-padded regions."""
+    mode = kernel_mode()
+    m, k = a.shape
+    kq, n = qb.mantissa.shape
+    assert kq % BLOCK == 0 and k <= kq < k + BLOCK, (k, kq)
+    if mode == "ref":
+        _count("mx_matmul_prequant", "ref")
+        ap, _ = _pad_last(a, BLOCK)
+        return _ref.mx_matmul_prequant_ref(ap, qb, precision_a)
+    ap = _pad_dim(_pad_dim(a, 0, ROW_ALIGN), 1, LANE_ALIGN)
+    padk, padn = ap.shape[1] - kq, (-n) % LANE_ALIGN
+    rm, re, rx = qb.mantissa, qb.exponent, qb.mx_bits
+    if padk or padn:
+        rm = jnp.pad(rm, [(0, padk), (0, padn)])
+        re = jnp.pad(re, [(0, padk // BLOCK), (0, padn)],
+                     constant_values=EXP_MIN)
+        rx = jnp.pad(rx, [(0, padk // BLOCK), (0, padn)])
+    out = _mf.mx_matmul_prequant(
+        ap, rm, re, rx, precision_a, MANTISSA_BITS[qb.precision],
+        bm=_row_tile(ap.shape[0]), bn=_row_tile(rm.shape[1]),
+        bk=_k_tile(ap.shape[1]), interpret=(mode == "interpret"))
+    _count("mx_matmul_prequant", mode)
     if out.shape[0] != m or out.shape[1] != n:
         out = out[:m, :n]
     return out

@@ -108,6 +108,38 @@ def mx_matmul_fused_ref(a: jax.Array, b: jax.Array, precision_a: str,
     return mx_matmul_fp_ref(a, b, precision_a, precision_b)
 
 
+@functools.partial(jax.jit, static_argnames=("precision",))
+def mx_matmul_bwd_pair_ref(g1: jax.Array, wt: jax.Array, xt: jax.Array,
+                           g2: jax.Array,
+                           precision: str) -> Tuple[jax.Array, jax.Array]:
+    """Single-jit oracle for the BACKWARD PAIR (mx_fused.py's
+    ``mx_matmul_bwd_pair``): both gradient GEMMs of an MX dense layer —
+    ``dX = q(g) @ q(W^T)`` and ``dW = q(X^T) @ q(g)`` — compile (and
+    dispatch) as ONE program, so the cotangent makes one trip through the
+    precision-conversion math per consumer instead of one per launched
+    program. ``g1``/``g2`` are the cotangent padded for each GEMM's
+    contraction axis (N for dX, M for dW); numerically each output IS the
+    corresponding ``mx_matmul_fp_ref``, so jitting them together changes
+    nothing."""
+    return (mx_matmul_fp_ref(g1, wt, precision, precision),
+            mx_matmul_fp_ref(xt, g2, precision, precision))
+
+
+@functools.partial(jax.jit, static_argnames=("precision_a",))
+def mx_matmul_prequant_ref(a: jax.Array, qb: MXTensor,
+                           precision_a: str) -> jax.Array:
+    """Single-jit oracle for the WEIGHT-RESIDENT serving GEMM: the lhs is
+    quantized on the fly, the rhs arrives ALREADY quantized (rhs layout:
+    mantissa [K, N], exponents [K/16, N] — quantized along the contraction
+    axis K) and is only dequantized. Bit-identical to
+    ``mx_matmul_fp_ref(a, b, ...)`` for ``qb`` = the quantization of ``b``:
+    MX quantization is idempotent, so skipping the weight re-quantization
+    changes nothing but the work."""
+    qa = mx_quantize_ref(a, precision_a)
+    qb_t = MXTensor(qb.mantissa.T, qb.exponent.T, qb.mx_bits.T, qb.precision)
+    return mx_matmul_ref(qa, qb_t)
+
+
 # -------------------------------------------------------- flash attention ---
 def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
                         scale=None):

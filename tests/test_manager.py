@@ -321,8 +321,10 @@ def test_snapshot_restore_requantizes_serving_copy(pretrained, tmp_path):
     assert cache.stats()["misses"] == misses_before + 1
     entry = cache._entries[id(lane.params)]
     assert entry[0] is lane.params
-    (prec, qtree), = entry[1].items()
-    assert lane.serving is qtree
+    # PR 9: slots hold the RESIDENT quantized tree; .value memoizes the
+    # dequantized serving copy legacy callers (the lane apply path) read.
+    (prec, slot), = entry[1].items()
+    assert lane.serving is slot.value
     # And the serving copy is exactly quantize_tree(restored params).
     expect = mx_lib.quantize_tree(lane.params, prec)
     for la, lb in zip(jax.tree_util.tree_leaves(lane.serving),

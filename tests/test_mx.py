@@ -219,7 +219,8 @@ def test_mx_dense_vjp_matches_unfused(monkeypatch, mode):
 
 def test_kernel_stats_no_silent_ref_fallback(monkeypatch):
     """Odd shapes must be served by the requested kernel path (padded), not
-    silently dropped onto the ref oracle; ``kernel_stats`` proves it."""
+    silently dropped onto the ref oracle; ``kernel_stats`` proves it —
+    including the PR 9 backward-pair and weight-resident entries."""
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
     ops.reset_kernel_stats()
     try:
@@ -232,12 +233,192 @@ def test_kernel_stats_no_silent_ref_fallback(monkeypatch):
         assert out.shape == (5, 33)
         out_f = ops.mx_matmul_fused(a, b, "mx6", "mx6")
         assert out_f.shape == (5, 33)
+        g = jax.random.normal(jax.random.PRNGKey(21), (5, 33))
+        dx, dw = ops.mx_matmul_bwd_pair(g, a, b, "mx9")
+        assert dx.shape == (5, 48) and dw.shape == (48, 33)
+        out_p = ops.mx_matmul_prequant(a, ops.mx_quantize_rhs(b, "mx6"),
+                                       "mx6")
+        assert out_p.shape == (5, 33)
         stats = ops.kernel_stats()
-        for op in ("mx_quantize", "mx_matmul", "mx_matmul_fused"):
+        for op in ("mx_quantize", "mx_matmul", "mx_matmul_fused",
+                   "mx_matmul_bwd_pair", "mx_matmul_prequant"):
             assert "ref" not in stats[op], (op, stats)
             assert stats[op]["interpret"] >= 1, (op, stats)
     finally:
         ops.reset_kernel_stats()
+
+
+# --------------------------------------------- backward pair (PR 9) --------
+# (m, k, n): aligned, odd/ragged (M/N/K padding on both GEMMs), large mixed.
+BWD_SHAPES = [(8, 128, 128), (5, 33, 48), (16, 432, 64)]
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("mkn", BWD_SHAPES)
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_bwd_pair_matches_two_fused_bitwise(monkeypatch, mode, mkn, prec):
+    """``mx_matmul_bwd_pair`` (ONE program for both gradients) is
+    bit-identical to the two independent fused GEMMs it replaces, in every
+    kernel mode, including odd shapes served through the pad + slice path."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+    m, k, n = mkn
+    g = jax.random.normal(jax.random.PRNGKey(30), (m, n))
+    x = jax.random.normal(jax.random.PRNGKey(31), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(32), (k, n))
+    dx, dw = ops.mx_matmul_bwd_pair(g, x, w, prec)
+    dx_u = ops.mx_matmul_fused(g, w.T, prec, prec)
+    dw_u = ops.mx_matmul_fused(x.T, g, prec, prec)
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(dx_u))
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_u))
+    assert dx.shape == (m, k) and dw.shape == (k, n)
+
+
+def test_bwd_pair_zero_block_cotangent(monkeypatch):
+    """All-zero 16-blocks of the cotangent hit the inf-quantize-scale edge
+    (0 * inf = nan mantissa) in BOTH phases of the pair kernel — each must
+    flush it to zero exactly like the standalone fused launches do."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    g = jax.random.normal(jax.random.PRNGKey(33), (8, 128))
+    g = g.at[:, 32:64].set(0.0)  # zero blocks along N (dX's contraction)
+    g = g.at[3].set(0.0)  # zero row -> zero blocks along M (dW's)
+    x = jax.random.normal(jax.random.PRNGKey(34), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(35), (64, 128))
+    for prec in PRECISIONS:
+        dx, dw = ops.mx_matmul_bwd_pair(g, x, w, prec)
+        assert np.all(np.isfinite(np.asarray(dx))), prec
+        assert np.all(np.isfinite(np.asarray(dw))), prec
+        dx_u = ops.mx_matmul_fused(g, w.T, prec, prec)
+        dw_u = ops.mx_matmul_fused(x.T, g, prec, prec)
+        np.testing.assert_array_equal(np.asarray(dx), np.asarray(dx_u))
+        np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_u))
+        np.testing.assert_array_equal(np.asarray(dx)[3], np.zeros(64))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       m=st.sampled_from([1, 3, 8, 17]),
+       k=st.sampled_from([8, 33, 64]),
+       n=st.sampled_from([16, 48]),
+       precision=st.sampled_from(PRECISIONS))
+def test_bwd_pair_property_bitwise(seed, m, k, n, precision):
+    """Property sweep over random shapes/precisions in whatever kernel mode
+    the suite runs under (auto/ref/interpret — CI covers all three): the
+    pair is ALWAYS bitwise the two-GEMM chain."""
+    kg = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(kg, 3)
+    g = jax.random.normal(k1, (m, n))
+    x = jax.random.normal(k2, (m, k))
+    w = jax.random.normal(k3, (k, n))
+    dx, dw = ops.mx_matmul_bwd_pair(g, x, w, precision)
+    np.testing.assert_array_equal(
+        np.asarray(dx), np.asarray(ops.mx_matmul_fused(g, w.T, precision,
+                                                       precision)))
+    np.testing.assert_array_equal(
+        np.asarray(dw), np.asarray(ops.mx_matmul_fused(x.T, g, precision,
+                                                       precision)))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_mx_dense_vjp_through_bwd_pair(monkeypatch, mode):
+    """``mx_dense``'s VJP now routes through the backward pair; its
+    gradients stay bitwise the manual two-GEMM composition (the same
+    contract ``test_mx_dense_vjp_matches_unfused`` pins via mx_matmul)."""
+    from repro.core.mx import mx_dense
+
+    monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+    x = jax.random.normal(jax.random.PRNGKey(36), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(37), (64, 32))
+
+    def loss(x, w):
+        return jnp.sum(mx_dense(x, w, "mx6", "mx9") ** 2)
+
+    y = ops.mx_matmul_fused(x, w, "mx6", "mx6")
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    g2 = jnp.asarray(np.asarray(2.0 * y, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(gx),
+        np.asarray(ops.mx_matmul_fused(g2, w.T, "mx9", "mx9")))
+    np.testing.assert_array_equal(
+        np.asarray(gw),
+        np.asarray(ops.mx_matmul_fused(x.T, g2, "mx9", "mx9")))
+
+
+# ------------------------------------- weight-resident serving (PR 9) -------
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (5, 33, 48)])
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_prequant_matches_fused_bitwise(monkeypatch, mode, mkn, prec):
+    """Serving against the RESIDENT quantized weight (``mx_quantize_rhs``
+    once, ``mx_matmul_prequant`` per call) is bit-identical to the fused
+    GEMM that re-quantizes the weight every call — MX quantization is
+    idempotent, so the stored mantissas/scales ARE what fused recomputes."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+    m, k, n = mkn
+    a = jax.random.normal(jax.random.PRNGKey(40), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(41), (k, n))
+    qb = ops.mx_quantize_rhs(b, prec)
+    out_p = np.asarray(ops.mx_matmul_prequant(a, qb, prec))
+    out_f = np.asarray(ops.mx_matmul_fused(a, b, prec, prec))
+    np.testing.assert_array_equal(out_p, out_f)
+    assert out_p.shape == (m, n)
+
+
+def test_prequant_zero_weight_quantize_ops_per_call(monkeypatch):
+    """After the one-time ``mx_quantize_rhs`` fill, repeated prequant calls
+    perform ZERO weight-quantization ops — kernel_stats proves it."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    ops.reset_kernel_stats()
+    try:
+        a = jax.random.normal(jax.random.PRNGKey(42), (8, 64))
+        b = jax.random.normal(jax.random.PRNGKey(43), (64, 32))
+        qb = ops.mx_quantize_rhs(b, "mx6")
+        for _ in range(5):
+            ops.mx_matmul_prequant(a, qb, "mx6")
+        stats = ops.kernel_stats()
+        assert stats["mx_quantize"]["interpret"] == 1, stats  # the fill
+        assert stats["mx_matmul_prequant"]["interpret"] == 5, stats
+        assert "ref" not in stats["mx_matmul_prequant"], stats
+    finally:
+        ops.reset_kernel_stats()
+
+
+def test_mx_dense_prequant_matches_mx_dense_forward(monkeypatch):
+    """``mx_dense_prequant`` (weight-resident serving) equals ``mx_dense``'s
+    forward bitwise, including a batched >2D activation."""
+    from repro.core.mx import mx_dense, mx_dense_prequant
+
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    x = jax.random.normal(jax.random.PRNGKey(44), (2, 4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(45), (64, 32))
+    qw = ops.mx_quantize_rhs(w, "mx6")
+    y_p = np.asarray(mx_dense_prequant(x, qw, "mx6"))
+    y_f = np.asarray(mx_dense(x, w, "mx6", "mx9"))
+    np.testing.assert_array_equal(y_p, y_f)
+    assert y_p.shape == (2, 4, 32)
+
+
+def test_quantize_tree_mx_round_trip_bitwise():
+    """The resident quantized tree (``quantize_tree_mx``) dequantizes back
+    (``dequantize_tree_mx``) bit-for-bit to the legacy ``quantize_tree``
+    fake-quant tree; non-weight leaves pass through by identity."""
+    from repro.core.mx import (MXLeaf, dequantize_tree_mx, quantize_tree,
+                               quantize_tree_mx)
+
+    tree = {"conv": jax.random.normal(jax.random.PRNGKey(46), (3, 3, 8, 16)),
+            "head": jax.random.normal(jax.random.PRNGKey(47), (48, 10)) * 3.0,
+            "bias": jnp.ones((64,)), "step": jnp.zeros((), jnp.int32)}
+    for prec in PRECISIONS:
+        resident = quantize_tree_mx(tree, prec, min_size=256)
+        assert isinstance(resident["conv"], MXLeaf)
+        assert resident["conv"].q.mantissa.dtype == jnp.int8
+        assert resident["bias"] is tree["bias"]
+        back = dequantize_tree_mx(resident)
+        legacy = quantize_tree(tree, prec, min_size=256)
+        for name in tree:
+            np.testing.assert_array_equal(np.asarray(back[name]),
+                                          np.asarray(legacy[name]))
+            assert back[name].dtype == legacy[name].dtype, (prec, name)
+        assert back["step"] is tree["step"]
 
 
 def test_kernel_stats_concurrent_increments():

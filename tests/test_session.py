@@ -221,8 +221,9 @@ def test_serving_cache_maxsize_zero_disables(kernel_setup):
 def test_serving_cache_concurrent_gets_count_exactly(kernel_setup):
     """Under overlapped shard stepping the cache is shared process-global
     state: 8 threads hammering the same (tree, precision) must lose no
-    counter increments, and — because the lock is held across the fill —
-    quantize the tree exactly once."""
+    counter increments, and — because each slot carries its own fill
+    guard — quantize the tree exactly once, even though the cache-wide
+    lock is no longer held across the fill."""
     import threading
 
     est, hp, model, params, x = kernel_setup
@@ -249,6 +250,100 @@ def test_serving_cache_concurrent_gets_count_exactly(kernel_setup):
     assert stats["hits"] + stats["misses"] == n_threads * per_thread
     assert stats["misses"] == 1 and len(fills) == 1
     assert stats == {"hits": 399, "misses": 1, "entries": 1}
+
+
+def test_serving_cache_fill_not_under_cache_lock(kernel_setup):
+    """PR 9 regression: a slow fill of one tree must NOT serialize lookups
+    of a different tree. The old cache quantized under its RLock, so lane
+    B's first serving request waited on lane A's whole-tree quantization;
+    now only the per-slot guard is held across the fill."""
+    import threading
+
+    est, hp, model, params, x = kernel_setup
+    params_b = jax.tree_util.tree_map(lambda p: p + 0, params)
+    cache = ServingParamsCache(maxsize=8)
+    entered = threading.Event()
+    release = threading.Event()
+    order = []
+
+    def slow_quantize(tree, precision):
+        entered.set()
+        release.wait(timeout=10.0)
+        order.append("a")
+        return {"tree": "a"}
+
+    def fast_quantize(tree, precision):
+        order.append("b")
+        return {"tree": "b"}
+
+    t = threading.Thread(
+        target=lambda: cache.get(params, "mx6", quantize=slow_quantize))
+    t.start()
+    assert entered.wait(timeout=10.0)
+    # Lane A's fill is in flight. Under the old lock-across-fill design
+    # this get would deadlock until the release below; now it completes
+    # immediately on its own slot.
+    got_b = cache.get(params_b, "mx6", quantize=fast_quantize)
+    assert got_b == {"tree": "b"}
+    assert order == ["b"]
+    release.set()
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    assert order == ["b", "a"]
+    assert cache.stats() == {"hits": 0, "misses": 2, "entries": 2}
+    assert cache.fills == 2
+    # Both slots memoized: repeat gets are hits on the same objects.
+    assert cache.get(params, "mx6", quantize=slow_quantize) == {"tree": "a"}
+    assert cache.stats()["hits"] == 1
+
+
+def test_serving_cache_resident_quantized_storage(kernel_setup):
+    """The default fill stores the RESIDENT quantized rep (MXLeaf weight
+    leaves); `get` lazily dequantizes — once — to a tree bit-identical to
+    the legacy ``quantize_tree`` output, and ``get_quantized`` hands the
+    resident copy out without ever dequantizing."""
+    from repro.core import mx as mx_lib
+
+    est, hp, model, params, x = kernel_setup
+    cache = ServingParamsCache(maxsize=8)
+    value = cache.get(params, "mx6")
+    legacy = mx_lib.quantize_tree(params, "mx6")
+    for v, l in zip(jax.tree_util.tree_leaves(value),
+                    jax.tree_util.tree_leaves(legacy)):
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(l))
+    # The resident copy shares the slot: no second whole-tree quantize.
+    resident = cache.get_quantized(params, "mx6")
+    assert any(isinstance(leaf, mx_lib.MXLeaf)
+               for leaf in jax.tree_util.tree_leaves(
+                   resident, is_leaf=lambda p: isinstance(p, mx_lib.MXLeaf)))
+    assert cache.fills == 1
+    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    # Repeat gets return the SAME memoized dequantized tree.
+    assert cache.get(params, "mx6") is value
+    assert cache.fills == 1
+
+
+def test_inference_serving_prequant_matches_fake_quant(kernel_setup):
+    """Prequant serving == fake-quant serving bit-for-bit: predictions off
+    the cache's lazily-dequantized resident copy equal predictions off a
+    fresh ``quantize_tree`` tree, and the resident copy's head weight
+    round-trips to exactly the served fake-quant head."""
+    from repro.core import mx as mx_lib
+    from repro.kernels import ops
+
+    est, hp, model, params, x = kernel_setup
+    k = InferenceKernel(model, RESNET18, est, apply_mx=True)
+    serving = k.serving_params(params, "mx6")
+    legacy = mx_lib.quantize_tree(params, "mx6")
+    np.testing.assert_array_equal(k.predict(serving, x),
+                                  k.predict(legacy, x))
+    resident = k.serving_quantized(params, "mx6")
+    back = mx_lib.dequantize_tree_mx(resident)
+    for b, l in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(legacy)):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(l))
+    # One fill total: serving_params and serving_quantized share the slot.
+    assert k.serving_cache.fills == 1
 
 
 def test_labeling_cache_repeated_bursts_hit(kernel_setup):
