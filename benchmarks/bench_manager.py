@@ -3,7 +3,7 @@ stepping, and estimator-driven placement.
 
 Runs the sharded fleet tier (:class:`~repro.core.manager.FleetManager`,
 N shards = N independent FleetSessions on their own sub-accelerators)
-through four experiments on identical pretrained weights and an identical
+through five experiments on identical pretrained weights and an identical
 virtual-clock budget:
 
 * **recovery** — the same fleet twice: a no-fault baseline vs a run where
@@ -43,7 +43,12 @@ virtual-clock budget:
   is charged to the manager ledger). A late admission demonstrates
   admission control: the estimator rejects it when every warm shard is
   past ``oversub_limit`` (surfaced as a ``reject`` action/event),
-  headroom admits unconditionally.
+  headroom admits unconditionally;
+* **scenario_matrix** — ``drift-pack`` vs ``headroom`` crossed with
+  *aligned* vs *scattered* two-camera drift: the same S1/S3 drifters
+  flipping simultaneously (packing their retraining bursts onto one
+  T-SA pays) or staggered by half a segment (the payoff dilutes). The
+  per-layout ``drift_pack_gain`` headline is the accuracy delta.
 
 Writes ``BENCH_manager.json`` with, per experiment arm: mean fleet
 accuracy, per-lane accuracies, rounds, ledger (T-SA / recovery /
@@ -322,6 +327,74 @@ def bench_placement(n_shards, smoke) -> dict:
     return out
 
 
+def build_scattered_drift_streams(n_streams: int, smoke: bool):
+    """The *scattered* twin of bench_fleet's aligned multi-drift fleet.
+
+    Same cameras — S1 and S3 drifters plus stable fillers — but the S3
+    camera's first segment is halved, so every subsequent label flip
+    lands mid-way between the S1 camera's flips. Aligned drift
+    concentrates the retraining load into shared instants (the regime
+    drift-pack consolidates onto one T-SA); scattered drift spreads it
+    across the round, where lane-count balancing has less to lose."""
+    import dataclasses as _dc
+
+    from repro.data.stream import DriftStream, Segment, scenario
+
+    seg_s = 30.0 if smoke else 45.0
+    n_seg = 3 if smoke else 4
+
+    def compressed(name):
+        return [_dc.replace(s, duration_s=seg_s)
+                for s in scenario(name, n_seg)]
+
+    staggered = compressed("S3")
+    staggered[0] = _dc.replace(staggered[0], duration_s=seg_s / 2)
+    streams = [DriftStream(compressed("S1"), seed=17, img=24),
+               DriftStream(staggered, seed=17, img=24)]
+    for _ in range(max(0, n_streams - 2)):
+        streams.append(DriftStream([Segment(duration_s=seg_s)] * n_seg,
+                                   seed=17, img=24))
+    return streams[:n_streams]
+
+
+def bench_scenario_matrix(n_shards, smoke) -> dict:
+    """drift-pack vs headroom across aligned vs scattered two-camera
+    drift, at equal budget on identical pretrained weights.
+
+    Aligned (bench_fleet's ``build_multi_drift_streams``): both cameras
+    flip at the same instants — packing both drifters onto one shard
+    lets their N_ldd bursts share a T-SA while the other shard serves
+    undisturbed. Scattered (``build_scattered_drift_streams``): the same
+    flips staggered by half a segment, diluting the payoff of packing.
+    The headline ``drift_pack_gain`` per layout is drift-pack's fleet
+    accuracy minus headroom's."""
+    from benchmarks.bench_fleet import build_multi_drift_streams
+
+    duration = 90.0 if smoke else 180.0
+    hp = _hp(smoke)
+    tp, sp = _pretrain(build_multi_drift_streams(4, smoke), smoke)
+
+    builders = {"aligned": build_multi_drift_streams,
+                "scattered": build_scattered_drift_streams}
+    out = {"layouts": {}}
+    for layout, build in builders.items():
+        arms = {}
+        for arm, kw in (
+                ("drift-pack", {"placement": "drift-pack"}),
+                ("headroom", {"placement": "headroom",
+                              "placement_kwargs": {"min_gap": 1}})):
+            mgr = _manager(hp, smoke, n_shards=n_shards, migration=True,
+                           migration_cooldown=2, **kw)
+            mgr.set_pretrained(tp, sp)
+            _, arms[arm] = _run(mgr, build(4, smoke), duration)
+        out["layouts"][layout] = arms
+    out["drift_pack_gain"] = {
+        layout: round(arms["drift-pack"]["fleet_avg_accuracy"]
+                      - arms["headroom"]["fleet_avg_accuracy"], 6)
+        for layout, arms in out["layouts"].items()}
+    return out
+
+
 def main(argv=None):
     import tempfile
 
@@ -346,6 +419,7 @@ def main(argv=None):
     migration = bench_migration(args.shards, args.smoke, args.parallel)
     parallel = bench_parallel(args.smoke)
     placement = bench_placement(args.shards, args.smoke)
+    scenario_matrix = bench_scenario_matrix(args.shards, args.smoke)
     result = {
         "bench": "manager",
         "mode": "smoke" if args.smoke else "full",
@@ -357,6 +431,7 @@ def main(argv=None):
         "migration": migration,
         "parallel": parallel,
         "placement": placement,
+        "scenario_matrix": scenario_matrix,
     }
 
     # Write BEFORE the acceptance asserts so a failing comparison still
@@ -404,6 +479,15 @@ def main(argv=None):
         "estimator admitted the late camera on an oversubscribed fleet"
     assert placement["headroom"]["lanes"] == 6  # late camera admitted
     assert est["lanes"] == 5  # late camera rejected
+    # Scenario matrix: every arm keeps all four cameras with conserved
+    # ledgers in both drift layouts (which placement wins per layout is
+    # the measured result, not an invariant).
+    for layout, arms in scenario_matrix["layouts"].items():
+        for arm in ("drift-pack", "headroom"):
+            assert arms[arm]["lanes"] == 4, \
+                f"scenario_matrix/{layout}/{arm}: a camera was lost"
+            assert arms[arm]["conservation_gap"] < 1e-6, \
+                f"scenario_matrix/{layout}/{arm}: ledgers diverged"
     return result
 
 
@@ -439,6 +523,11 @@ def run():
         r = result["placement"][arm]
         rows.append((f"manager/placement/{arm}", r["wall_s"] * 1e6,
                      f"acc={r['fleet_avg_accuracy']}"))
+    for layout, arms in result["scenario_matrix"]["layouts"].items():
+        for arm, r in arms.items():
+            rows.append((f"manager/scenario/{layout}/{arm}",
+                         r["wall_s"] * 1e6,
+                         f"acc={r['fleet_avg_accuracy']}"))
     return rows
 
 

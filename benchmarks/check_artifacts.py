@@ -36,6 +36,11 @@ HEADLINE_KEYS = {
     "fleet": [("modes", "*", "fleet_avg_accuracy"),
               ("row_policies", "*", "fleet_avg_accuracy"),
               ("fleet_batched_serve_speedup",)],
+    "replay": [("prediction", "sequential", "bitwise_exact"),
+               ("prediction", "concurrent", "bitwise_exact"),
+               ("policy", "*", "avg_accuracy"),
+               ("replay_phase_time_mape",),
+               ("replay_policy_gain",)],
     "manager": [("recovery", "no_fault", "fleet_avg_accuracy"),
                 ("recovery", "fault", "fleet_avg_accuracy"),
                 ("recovery", "fault", "conservation_gap"),
@@ -47,7 +52,11 @@ HEADLINE_KEYS = {
                 ("parallel", "4_shards", "wall_speedup"),
                 ("placement", "headroom", "fleet_avg_accuracy"),
                 ("placement", "estimator", "fleet_avg_accuracy"),
-                ("placement", "migration_divergence")],
+                ("placement", "migration_divergence"),
+                ("scenario_matrix", "layouts", "*", "*",
+                 "fleet_avg_accuracy"),
+                ("scenario_matrix", "drift_pack_gain", "aligned"),
+                ("scenario_matrix", "drift_pack_gain", "scattered")],
 }
 # Mappings a bench may legitimately leave empty (e.g. a --row-policy matrix
 # run skips the temporal-mode sweep).

@@ -23,6 +23,7 @@ def main() -> None:
         bench_kernels,
         bench_manager,
         bench_reallocation,
+        bench_replay,
         bench_table3_models,
     )
     from benchmarks.common import emit
@@ -41,6 +42,7 @@ def main() -> None:
             # standalone scripts expose the full sweeps + JSON artifacts).
             ("dispatch", bench_dispatch),
             ("reallocation", bench_reallocation),
+            ("replay", bench_replay),
             ("fleet", bench_fleet),
             ("manager", bench_manager),
         ]

@@ -15,8 +15,14 @@ serial chain, and frame windows flow through the speculative FramePipeline
 spatial re-allocator: watch the tsa/bsa row split move in the phase log
 when a drift fires, then return as validation accuracy recovers.
 
+``--trace PATH`` turns on the trace spine (core/trace.py) for the DaCapo
+system, dumps the full per-program execution trace as JSON to PATH for
+offline analysis (:meth:`~repro.core.trace.SessionTrace.load` /
+:class:`~repro.core.replay.TraceReplayer`), and prints the top-5 device
+programs by measured host wall time and by virtual-clock cost.
+
 Run:  PYTHONPATH=src python examples/continuous_learning_drive.py [--fast]
-          [--dispatch sequential|concurrent] [--online]
+          [--dispatch sequential|concurrent] [--online] [--trace PATH]
 """
 import argparse
 import os
@@ -35,6 +41,9 @@ def main():
     ap.add_argument("--online", action="store_true",
                     help="use the drift-reactive online spatial "
                          "re-allocator (DC-ST-Online) instead of DC-ST")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the DaCapo run's execution trace and "
+                         "dump it as JSON to PATH")
     args = ap.parse_args()
 
     from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
@@ -67,11 +76,15 @@ def main():
     dacapo = ("dacapo-spatiotemporal-online" if args.online
               else "dacapo-spatiotemporal")
     results = {}
+    trace_rec = None
     for allocator in (dacapo, "ekya"):
         session = CLSystemSpec(
             student=RESNET18, teacher=WIDERESNET50, hp=hp,
             allocator=allocator, apply_mx=False, eval_fps=0.5,
-            mesh=mesh, dispatch=args.dispatch).build()
+            mesh=mesh, dispatch=args.dispatch,
+            trace=bool(args.trace) and allocator == dacapo).build()
+        if allocator == dacapo:
+            trace_rec = session.dispatcher.recorder
         session.set_pretrained(tp, sp)
         # Observer hook: structured per-phase metrics as they happen.
         session.add_observer(lambda rec, name=allocator: print(
@@ -99,6 +112,23 @@ def main():
               f"drifts={res.drift_events} "
               f"label/retrain={res.label_time:.0f}/{res.retrain_time:.0f}s"
               f"{spec}")
+
+    if args.trace and trace_rec is not None:
+        trace = trace_rec.trace
+        trace.save(args.trace)
+        programs = [(ph.index, e) for ph in trace.phases
+                    for e in ph.events if e.kind == "program"]
+        n_events = sum(len(ph.events) for ph in trace.phases)
+        print(f"\ntrace: {len(trace.phases)} phases, {n_events} events "
+              f"({len(programs)} programs) -> {args.trace}")
+        for title, key in (("host wall time", lambda pe: pe[1].wall_s),
+                           ("virtual cost", lambda pe: pe[1].cost_s)):
+            print(f"top-5 programs by {title}:")
+            for idx, e in sorted(programs, key=key, reverse=True)[:5]:
+                path = f" path={e.path}" if e.path else ""
+                print(f"  phase {idx:2d} {e.label:>9} [{e.role}] "
+                      f"cost={e.cost_s:8.4f}s wall={e.wall_s:8.4f}s "
+                      f"units={e.units:g}{path}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from repro.core.allocation import (  # noqa: F401
     FleetAllocator,
     OnlineSpatiotemporalAllocator,
     PhaseFeedback,
+    ReplayAllocator,
     SpatialAllocator,
     SpatiotemporalAllocator,
     make_allocator,
@@ -42,7 +43,9 @@ from repro.core.dispatch import (  # noqa: F401
     ProgramHandle,
 )
 from repro.core.estimator import (  # noqa: F401
+    CalibratedEstimator,
     DaCapoEstimator,
+    PlacementCostModel,
     TPUEstimator,
     spatial_allocation,
 )
@@ -69,6 +72,11 @@ from repro.core.kernel import (  # noqa: F401
 )
 from repro.core.mx import DEFAULT_POLICY, PrecisionPolicy, mx_dense  # noqa: F401
 from repro.core.partition import SpatialPartition, partition_mesh  # noqa: F401
+from repro.core.replay import (  # noqa: F401
+    Calibration,
+    ReplayNode,
+    TraceReplayer,
+)
 from repro.core.sample_buffer import SampleBuffer  # noqa: F401
 from repro.core.session import (  # noqa: F401
     CLResult,
@@ -76,4 +84,10 @@ from repro.core.session import (  # noqa: F401
     CLSystemSpec,
     PhaseRecord,
     pretrain_model,
+)
+from repro.core.trace import (  # noqa: F401
+    PhaseTrace,
+    SessionTrace,
+    TraceEvent,
+    TraceRecorder,
 )

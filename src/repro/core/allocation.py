@@ -33,6 +33,7 @@ weighted-vote, see core/decision.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Type
 
@@ -145,6 +146,9 @@ class AllocationPolicy:
 
     name = "base"
     pace_window_s: Optional[float] = None
+    # Trace-scored policies set True: the session then auto-creates a
+    # TraceRecorder (core/trace.py) and hands it over via attach_trace.
+    needs_trace = False
 
     def __init__(self, hp: CLHyperParams,
                  precision: PrecisionPolicy = DEFAULT_POLICY):
@@ -152,6 +156,13 @@ class AllocationPolicy:
         self.precision = precision
         self.detector = DriftDetector(v_thr=hp.v_thr)
         self._rows: Tuple[Optional[int], Optional[int]] = (None, None)
+        self._trace_recorder = None
+
+    def attach_trace(self, recorder) -> None:
+        """Receive the session's TraceRecorder (called at construction
+        when tracing is on; a no-op source of replay context for policies
+        that don't score by replay)."""
+        self._trace_recorder = recorder
 
     # -------------------------------------------------------------- binding
     def bind(self, estimator, student_cfg: VisionConfig) -> "AllocationPolicy":
@@ -392,6 +403,68 @@ class EOMUAllocator(SpatiotemporalAllocator):
                    or feedback.acc_label < self._last_acc - self.drop_eps)
         self._last_acc = feedback.acc_label
         return self._decision(self.hp.n_t if trigger else 0)
+
+
+class ReplayAllocator(SpatiotemporalAllocator):
+    """DaCapo-Replay: DC-ST with replay-scored retraining boosts.
+
+    The first allocator whose profiling cost is *measured*, not assumed:
+    each phase it builds K candidate decisions (DC-ST's choice with the
+    retraining budget boosted by ``boost_factors``, quantized to SGD-batch
+    multiples and capped at the buffer capacity), prices each by
+    :meth:`~repro.core.replay.TraceReplayer.predict` against the just-
+    recorded phase instead of executing it, and picks the largest boost
+    whose predicted phase time stays within ``slack_tol`` of the
+    unboosted prediction. Under concurrent dispatch that fills the T-SA
+    slack of B-SA-bound phases with extra retraining for free; under
+    sequential dispatch (no slack by construction) every boost extends
+    the phase and the policy degenerates to DC-ST. The wall time the
+    replay scoring itself took is charged to the decision's
+    ``profile_cost_s`` — the Ekya microprofiling cost, made real.
+
+    ``needs_trace`` makes the session auto-create a
+    :class:`~repro.core.trace.TraceRecorder` when none is configured.
+    """
+
+    name = "dacapo-replay"
+    needs_trace = True
+
+    def __init__(self, hp: CLHyperParams,
+                 precision: PrecisionPolicy = DEFAULT_POLICY,
+                 boost_factors: Sequence[float] = (3.0, 2.0, 1.5),
+                 slack_tol: float = 0.02):
+        super().__init__(hp, precision)
+        self.boost_factors = tuple(sorted(boost_factors, reverse=True))
+        self.slack_tol = slack_tol
+
+    def next_decision(self, feedback: PhaseFeedback) -> AllocationDecision:
+        from repro.core.replay import TraceReplayer
+
+        base = super().next_decision(feedback)
+        recorder = self._trace_recorder
+        if recorder is None or len(recorder) == 0:
+            return base
+        phases = recorder.phases
+        last = len(phases) - 1
+        if not any(e.label == "retrain" for e in phases[last].events):
+            return base  # no retraining recorded: nothing to re-price
+        t0 = time.perf_counter()
+        replayer = TraceReplayer(recorder.trace, hp=self.hp)
+        budget = replayer.predict(last, base) * (1.0 + self.slack_tol)
+        pick = base
+        for factor in self.boost_factors:  # descending: largest fit wins
+            n = self.hp.sgd_batch * int(
+                base.retrain_samples * factor // self.hp.sgd_batch)
+            n = min(n, self.hp.c_b)
+            if n <= base.retrain_samples:
+                continue
+            cand = dataclasses.replace(base, retrain_samples=n)
+            if replayer.predict(last, cand) <= budget:
+                pick = cand
+                break
+        # The replay scoring's measured wall IS the profiling cost.
+        return dataclasses.replace(
+            pick, profile_cost_s=time.perf_counter() - t0)
 
 
 FLEET_MODES = ("uniform", "round-robin", "drift-weighted", "isolated")
@@ -785,6 +858,7 @@ ALLOCATORS: Dict[str, Type[AllocationPolicy]] = {
     "dacapo-spatiotemporal": SpatiotemporalAllocator,
     "dacapo-spatiotemporal-online": OnlineSpatiotemporalAllocator,
     "dacapo-spatial": SpatialAllocator,
+    "dacapo-replay": ReplayAllocator,
     "ekya": EkyaAllocator,
     "eomu": EOMUAllocator,
 }

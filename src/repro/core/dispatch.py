@@ -46,11 +46,30 @@ the fleet ledger, so the shared T-SA is charged once for the fleet while
 per-stream shares stay auditable (``lane_time``). ``dispatch_multi`` issues
 one device program on behalf of several lanes (cross-stream batched labeling)
 and fans its per-lane results out into individual handles.
+
+Trace spine (core/trace.py): the plan's program/charge stream IS the
+execution trace. With a :class:`~repro.core.trace.TraceRecorder` attached
+to the dispatcher (``CLSystemSpec(trace=...)``), every ``dispatch`` /
+``dispatch_multi`` issue is recorded as a ``"program"``
+:class:`~repro.core.trace.TraceEvent` — role, label, lane, virtual cost,
+measured host wall time of the issue, the kernel path that served it, and
+the unit count (samples/batches) the cost scales with — and every bare
+``charge`` as a ``"charge"`` event, all in issue order. Recording is
+observational only (no numeric plan state is touched), so traced runs are
+bit-identical to untraced ones; with no recorder (the default) the traced
+overrides reduce to a single ``is None`` check and the original code path.
+The per-phase event order, the phase start/end/floor and the per-role
+float-add sequence are exactly what
+:class:`~repro.core.replay.TraceReplayer` replays to reconstruct — and
+predict — phase times.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.trace import TraceEvent, TraceRecorder
 
 import numpy as np
 
@@ -143,12 +162,23 @@ class PhasePlan:
         """Lane-0 pipeline (back-compat single-stream handle)."""
         return self.pipelines[0] if self.pipelines else None
 
+    @property
+    def traced(self) -> bool:
+        """Is a TraceRecorder observing this plan? (Engines use this to
+        gate wall-time measurement of host-side work like retraining SGD,
+        keeping the untraced path free of even a ``perf_counter`` call.)"""
+        return False
+
     # ----------------------------------------------------------- dispatch
     def dispatch(self, role: str, label: str, issue: Callable[[], Any],
                  cost_s: float = 0.0,
-                 lane: Optional[int] = None) -> ProgramHandle:
+                 lane: Optional[int] = None,
+                 units: float = 0.0) -> ProgramHandle:
         """Issue a device program *now* (async — the thunk must not block)
-        and charge its cost; returns a handle to ``collect()`` later."""
+        and charge its cost; returns a handle to ``collect()`` later.
+        ``units`` is the trace-facing quantity the cost was computed from
+        (frames scored, samples labeled) — ignored untraced."""
+        del units
         handle = ProgramHandle(issue())
         self.programs.append(DeviceProgram(role, label, cost_s, handle, lane))
         self.charge(role, cost_s, lane=lane)
@@ -157,13 +187,16 @@ class PhasePlan:
     def dispatch_multi(self, role: str, label: str,
                        issue: Callable[[], Sequence[Any]],
                        costs: Sequence[float],
-                       lanes: Sequence[int]) -> List[ProgramHandle]:
+                       lanes: Sequence[int],
+                       units: Optional[Sequence[float]] = None
+                       ) -> List[ProgramHandle]:
         """Issue ONE device program serving several stream lanes (e.g. a
         labeling burst batched across the fleet on the shared T-SA) and
         split its per-lane results into individual handles. The thunk must
         return one device value per lane; each lane's cost is charged to
         both the fleet ledger and that lane's ledger, in lane order — for a
         one-lane plan this is exactly a single ``dispatch``."""
+        del units
         values = issue()
         if len(values) != len(lanes) or len(costs) != len(lanes):
             raise ValueError(
@@ -195,10 +228,15 @@ FramePipeline` of ``lane``, so dispatch issues device programs against
                                            tag=tag)
 
     def charge(self, role: str, seconds: float,
-               lane: Optional[int] = None) -> None:
+               lane: Optional[int] = None, label: Optional[str] = None,
+               units: float = 0.0, wall_s: float = 0.0) -> None:
         """Charge virtual time without an attached program (e.g. retraining
         SGD, whose cost is known only after the batch count is). With a
-        ``lane``, the charge is also attributed to that stream's ledger."""
+        ``lane``, the charge is also attributed to that stream's ledger.
+        ``label``/``units``/``wall_s`` annotate the charge for the trace
+        spine (kernel name, quantity the cost scales with, measured host
+        wall) — ignored untraced."""
+        del label, units, wall_s
         self.totals[role] += seconds
         if lane is not None:
             lane_led = self.lane_totals.setdefault(
@@ -260,13 +298,21 @@ class KernelDispatcher:
     are cumulative counters for benchmarks and tests;
     ``programs_by_label`` breaks the program count down by dispatch label
     (e.g. one batched ``"acc_label"`` program per fleet labeling burst).
+
+    ``recorder`` (a :class:`~repro.core.trace.TraceRecorder`, default
+    None) turns on the trace spine: each ``begin_phase`` opens a
+    :class:`~repro.core.trace.PhaseTrace` and the plan's traced overrides
+    record every program issue and ledger charge as
+    :class:`~repro.core.trace.TraceEvent`s (see core/trace.py).
     """
 
-    def __init__(self, mode: str = SEQUENTIAL):
+    def __init__(self, mode: str = SEQUENTIAL,
+                 recorder: Optional[TraceRecorder] = None):
         if mode not in DISPATCH_MODES:
             raise ValueError(
                 f"unknown dispatch mode {mode!r}; known: {DISPATCH_MODES}")
         self.mode = mode
+        self.recorder = recorder
         self.phases_dispatched = 0
         self.programs_dispatched = 0
         self.windows_fetched = 0
@@ -309,34 +355,108 @@ class KernelDispatcher:
             pipe.begin_phase(start, label_hint=hint)
         plan = _TrackedPlan(self, self.mode, start, pipelines)
         plan.decisions = tuple(decisions) if decisions is not None else ()
+        if self.recorder is not None:
+            plan._trace = self.recorder.begin_phase(
+                start, self.mode, decisions=plan.decisions)
         self.phases_dispatched += 1
         return plan
 
 
 class _TrackedPlan(PhasePlan):
-    """PhasePlan that feeds the dispatcher's cumulative counters."""
+    """PhasePlan that feeds the dispatcher's cumulative counters — and,
+    when the dispatcher carries a :class:`~repro.core.trace.TraceRecorder`,
+    records the phase's program/charge stream as
+    :class:`~repro.core.trace.TraceEvent`s. Recording never touches the
+    numeric plan state (ledgers, clock, floor), so traced runs stay
+    bit-identical; with ``_trace is None`` every override falls straight
+    through to the untraced code path."""
 
     def __init__(self, dispatcher: KernelDispatcher, mode: str, start: float,
                  pipeline=None):
         super().__init__(mode, start, pipeline)
         self._dispatcher = dispatcher
+        self._trace = None  # open PhaseTrace when the dispatcher records
+        self._in_program = False  # suppress charge events inside dispatch
+
+    @property
+    def traced(self) -> bool:
+        return self._trace is not None
 
     def dispatch(self, role: str, label: str, issue: Callable[[], Any],
                  cost_s: float = 0.0,
-                 lane: Optional[int] = None) -> ProgramHandle:
+                 lane: Optional[int] = None,
+                 units: float = 0.0) -> ProgramHandle:
         self._dispatcher.programs_dispatched += 1
         by_label = self._dispatcher.programs_by_label
         by_label[label] = by_label.get(label, 0) + 1
-        return super().dispatch(role, label, issue, cost_s, lane=lane)
+        tr = self._trace
+        if tr is None:
+            return super().dispatch(role, label, issue, cost_s, lane=lane)
+        recorder = self._dispatcher.recorder
+        before = recorder.paths_before()
+        t0 = time.perf_counter()
+        self._in_program = True
+        try:
+            handle = super().dispatch(role, label, issue, cost_s, lane=lane)
+        finally:
+            self._in_program = False
+        wall = time.perf_counter() - t0
+        tr.events.append(TraceEvent(
+            kind="program", role=role, label=label, cost_s=cost_s,
+            lane=lane, wall_s=wall, path=recorder.dominant_path(before),
+            units=units))
+        return handle
 
     def dispatch_multi(self, role: str, label: str,
                        issue: Callable[[], Sequence[Any]],
                        costs: Sequence[float],
-                       lanes: Sequence[int]) -> List[ProgramHandle]:
+                       lanes: Sequence[int],
+                       units: Optional[Sequence[float]] = None
+                       ) -> List[ProgramHandle]:
         self._dispatcher.programs_dispatched += 1
         by_label = self._dispatcher.programs_by_label
         by_label[label] = by_label.get(label, 0) + 1
-        return super().dispatch_multi(role, label, issue, costs, lanes)
+        tr = self._trace
+        if tr is None:
+            return super().dispatch_multi(role, label, issue, costs, lanes)
+        recorder = self._dispatcher.recorder
+        before = recorder.paths_before()
+        t0 = time.perf_counter()
+        self._in_program = True
+        try:
+            handles = super().dispatch_multi(role, label, issue, costs,
+                                             lanes)
+        finally:
+            self._in_program = False
+        # One device program fanned across the lanes: the measured wall is
+        # split evenly over the per-lane events (``fan`` marks the group).
+        wall = (time.perf_counter() - t0) / max(1, len(lanes))
+        path = recorder.dominant_path(before)
+        for i, (cost_s, lane) in enumerate(zip(costs, lanes)):
+            tr.events.append(TraceEvent(
+                kind="program", role=role, label=label, cost_s=cost_s,
+                lane=lane, wall_s=wall, path=path,
+                units=(units[i] if units is not None else 0.0),
+                fan=len(lanes)))
+        return handles
+
+    def charge(self, role: str, seconds: float,
+               lane: Optional[int] = None, label: Optional[str] = None,
+               units: float = 0.0, wall_s: float = 0.0) -> None:
+        super().charge(role, seconds, lane=lane)
+        tr = self._trace
+        if tr is not None and not self._in_program:
+            tr.events.append(TraceEvent(
+                kind="charge", role=role, label=label or "charge",
+                cost_s=seconds, lane=lane, wall_s=wall_s, units=units))
+
+    def finish(self) -> float:
+        end = super().finish()
+        tr = self._trace
+        if tr is not None:
+            tr.end = end
+            tr.floor = self._floor
+        return end
 
     def fetch(self, t0: float, t1: float, max_frames: int = 0,
               lane: int = 0, tag: Optional[str] = None):

@@ -1,6 +1,17 @@
 """Performance estimators feeding the resource allocator (paper §IV step 2).
 
-Two backends:
+In trace vocabulary (core/trace.py): an estimator is the *prior* over
+program costs — it predicts, before anything runs, the virtual-clock
+seconds each device program the engine will dispatch (``"valid"``,
+``"label"``, ``"score"`` forwards; ``"retrain"`` SGD batches) should
+charge for a given row split and MX precision. The trace spine records
+what those programs *actually* cost the host (per-event ``wall_s``), and
+:meth:`~repro.core.replay.TraceReplayer.calibrate` closes the loop: it
+fits per-kernel scale factors from recorded traces and wraps the prior in
+a :class:`CalibratedEstimator` whose corrected seconds feed allocation
+and the manager's :class:`PlacementCostModel`.
+
+Two model backends:
 
 * ``DaCapoEstimator`` — the paper's accelerator: an R x 16 array of DPEs at
   500 MHz, each computing one 16-wide dot product in 1 (MX4) / 4 (MX6) /
@@ -137,6 +148,43 @@ class TPUEstimator:
         return 3.0 * self.forward_time(cfg, rows, precision, batch)
 
     def inference_fps(self, cfg, rows, precision):
+        return 1.0 / self.forward_time(cfg, rows, precision, batch=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedEstimator:
+    """An estimator prior corrected by measured trace wall times.
+
+    Wraps any backend with the same surface (``forward_time`` /
+    ``train_step_time`` / ``inference_fps`` / ``total_rows``) and scales
+    its predictions by per-kernel factors — typically the Σwall/Σcost
+    ratios a :meth:`~repro.core.replay.TraceReplayer.calibrate` fit from a
+    recorded trace (``forward_scale`` from the forward-pass programs,
+    ``train_scale`` from the retraining charges). Scale 1.0 is the
+    uncorrected prior; the wrapper stays frozen/hashable like the backends
+    so allocators can hold it exactly where they held the base estimator.
+    """
+
+    base: object = dataclasses.field(default_factory=DaCapoEstimator)
+    forward_scale: float = 1.0
+    train_scale: float = 1.0
+
+    @property
+    def total_rows(self) -> int:
+        return self.base.total_rows
+
+    def forward_time(self, cfg: VisionConfig, rows: int, precision: str,
+                     batch: int = 1) -> float:
+        return self.forward_scale * self.base.forward_time(
+            cfg, rows, precision, batch)
+
+    def train_step_time(self, cfg: VisionConfig, rows: int, precision: str,
+                        batch: int) -> float:
+        return self.train_scale * self.base.train_step_time(
+            cfg, rows, precision, batch)
+
+    def inference_fps(self, cfg: VisionConfig, rows: int,
+                      precision: str) -> float:
         return 1.0 / self.forward_time(cfg, rows, precision, batch=1)
 
 

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import time
 from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -361,7 +362,7 @@ class FleetRun:
                 "b_sa",
                 len(x) * session.inference.plan_time_per_sample(
                     self._spatial),
-                lane=lane.index)
+                lane=lane.index, label="score", units=len(x))
         else:
             x, y = lane.pipe.frames(lane.eval_cursor, t_end,
                                     max_frames=n_eval)
@@ -413,7 +414,7 @@ class FleetRun:
                 lane.acc_v = 1.0
                 if temporal[lane.index].profile_cost_s:
                     plan.charge("t_sa", temporal[lane.index].profile_cost_s,
-                                lane=lane.index)
+                                lane=lane.index, label="profile")
             # -------- Retraining (Alg. 1 lines 4-7), lane by lane on the
             # shared T-SA chain --------
             for lane in lanes:
@@ -422,12 +423,17 @@ class FleetRun:
                         and t_lane.retrain_samples > 0):
                     xt, yt, xv, yv = lane.buffer.get_data(
                         t_lane.retrain_samples, t_lane.valid_samples)
+                    fit_t0 = time.perf_counter() if plan.traced else 0.0
                     lane.params, lane.opt, n_batches = session.retrain.fit(
                         lane.params, lane.opt, xt, yt, lane.rng,
                         epochs=t_lane.retrain_epochs)
                     t_phase = n_batches * session.retrain.plan_time_per_batch(
                         spatial)
-                    plan.charge("t_sa", t_phase, lane=lane.index)
+                    plan.charge(
+                        "t_sa", t_phase, lane=lane.index, label="retrain",
+                        units=n_batches,
+                        wall_s=(time.perf_counter() - fit_t0 if plan.traced
+                                else 0.0))
                     lane.retrain_time += t_phase
                     lane.serving = session.inference.serving_params(
                         lane.params, spatial.precisions.inference)
@@ -440,7 +446,7 @@ class FleetRun:
                         session.inference.predict_async(s, v),
                         cost_s=len(xv) * session.inference.plan_time_per_sample(
                             spatial, role=v_role),
-                        lane=lane.index)
+                        lane=lane.index, units=len(xv))
             for lane in lanes:
                 self._score_lane_until(lane, min(plan.now(), duration),
                                        lane.serving, plan)
@@ -475,7 +481,9 @@ class FleetRun:
                     session.teacher_params, [ln.x_l for ln in lanes],
                     spatial.precisions.labeling,
                     microbatch=session._label_microbatch),
-                costs=costs, lanes=[lane.index for lane in lanes])
+                costs=costs, lanes=[lane.index for lane in lanes],
+                units=[float(temporal[lane.index].total_label_samples)
+                       for lane in lanes])
             for lane, handle, cost in zip(lanes, handles, costs):
                 # Replay the plan's serial accumulation so each lane's
                 # label_time reproduces the single-stream float pattern
@@ -491,7 +499,7 @@ class FleetRun:
                     session.inference.predict_async(s, x),
                     cost_s=len(lane.x_l)
                     * session.inference.plan_time_per_sample(spatial),
-                    lane=lane.index)
+                    lane=lane.index, units=len(lane.x_l))
             for lane in lanes:
                 self._score_lane_until(lane, min(plan.now(), duration),
                                        lane.serving, plan)

@@ -94,6 +94,7 @@ from repro.core.fleet import (
     LaneSnapshot,
 )
 from repro.core.session import CLResult
+from repro.core.trace import PhaseTrace, SessionTrace
 from repro.data.pipeline import FramePipeline
 from repro.runtime.fault import FailureInjector
 
@@ -474,6 +475,7 @@ class _Shard:
     recent_t_tsa: float = 0.0
     recent_phase_s: float = 0.0
     phases: int = 0
+    trace_seen: int = 0  # cursor into the shard recorder's phase list
 
 
 @dataclasses.dataclass
@@ -580,6 +582,12 @@ class FleetManager:
             "t_tsa": 0.0, "t_bsa": 0.0, "recovery_cost": 0.0,
             "migration_cost": 0.0}
         self.parallel_rounds = 0
+        # Merged trace spine: when the fleet spec carries ``trace``, every
+        # shard session records its own phases (each ``spec.build()`` gets
+        # its own recorder) and the manager merges them at the round
+        # barrier, in shard-index order — deterministic whatever order the
+        # overlapped workers finish in. ``self.trace`` is the merged view.
+        self.trace_phases: List[PhaseTrace] = []
         self._streams: Dict[object, object] = {}  # key -> source stream
         self._ckpts: Dict[object, CheckpointManager] = {}
         self._round = 0
@@ -651,6 +659,27 @@ class FleetManager:
             self.ledger["t_tsa"] += entry["t_tsa"]
             self.ledger["t_bsa"] += entry["t_bsa"]
         shard.phases = len(log)
+        self._drain_trace(shard)
+
+    # -------------------------------------------------------------- trace
+    def _drain_trace(self, shard: _Shard) -> None:
+        """Pull the shard recorder's newly-completed phases into the
+        manager's merged trace, stamping their shard index. Called only at
+        the round barrier, in shard-index order, so the merged event
+        stream is identical for serial and overlapped stepping."""
+        recorder = shard.session.dispatcher.recorder
+        if recorder is None:
+            return
+        for phase in recorder.drain_since(shard.trace_seen):
+            phase.shard = shard.index
+            self.trace_phases.append(phase)
+        shard.trace_seen = len(recorder.phases)
+
+    @property
+    def trace(self) -> SessionTrace:
+        """The barrier-merged manager trace (empty when tracing is off)."""
+        return SessionTrace(phases=self.trace_phases,
+                            meta={"tier": "manager", "name": self.name})
 
     # -------------------------------------------------------- checkpoints
     def _ckpt_for(self, key: object) -> Optional[CheckpointManager]:
@@ -702,6 +731,7 @@ class FleetManager:
         never checkpointed), and re-home across survivors; each re-homed
         lane costs ``recovery_cost_s`` on the manager ledger."""
         shard.alive = False
+        self._drain_trace(shard)  # keep any completed phases of the dead
         t = self._frontier()
         self.events.append(ManagerEvent(
             round=self._round, t=t, kind="fail", shard=shard.index,
@@ -1009,10 +1039,18 @@ class ManagerSpec:
     recovery_cost_s: float = 0.0
     parallel_shards: int = 0
     shard_pace: float = 0.0
+    # Trace spine: ``True`` gives EVERY shard its own fresh recorder (one
+    # per ``fleet.build()``), merged at the manager's round barrier into
+    # ``FleetManager.trace``. Prefer True over a shared recorder instance
+    # here — shards step concurrently under ``parallel_shards``.
+    trace: object = None
 
     def build(self) -> FleetManager:
+        fleet = self.fleet
+        if self.trace is not None:
+            fleet = dataclasses.replace(fleet, trace=self.trace)
         return FleetManager(
-            self.fleet, n_shards=self.n_shards, placement=self.placement,
+            fleet, n_shards=self.n_shards, placement=self.placement,
             placement_kwargs=self.placement_kwargs,
             checkpoint_dir=self.checkpoint_dir,
             checkpoint_every=self.checkpoint_every,

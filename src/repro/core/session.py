@@ -54,6 +54,7 @@ Per-phase structured metrics flow to observers — callables receiving a
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -79,6 +80,7 @@ from repro.core.partition import (
     single_device_partition,
 )
 from repro.core.sample_buffer import SampleBuffer
+from repro.core.trace import TraceRecorder
 from repro.data.pipeline import FramePipeline
 from repro.data.stream import DriftStream
 from repro.models.registry import make_vision_model
@@ -224,13 +226,31 @@ class CLSession:
         label_microbatch: Optional[int] = None,
         speculative_frames: Optional[bool] = None,
         decision_aware_spec: bool = True,
+        trace: Union[None, bool, TraceRecorder] = None,
     ):
         self.hp = hp or CLHyperParams()
         self.estimator = estimator or DaCapoEstimator()
         self.policy = precision_policy
         self.apply_mx = apply_mx_numerics
         self.eval_fps = eval_fps  # accuracy-scoring subsample rate
-        self.dispatcher = KernelDispatcher(dispatch)
+        self.allocator = make_allocator(allocator, self.hp, precision_policy)
+        # Trace spine (core/trace.py): ``trace=None`` keeps recording off
+        # (bit-identical, zero overhead) — unless the bound policy declares
+        # ``needs_trace`` (dacapo-replay), in which case a recorder is
+        # auto-created. ``trace=True`` makes a fresh recorder; a ready
+        # TraceRecorder instance is shared as-is (fleet/manager tiers).
+        if trace is None and getattr(self.allocator, "needs_trace", False):
+            trace = True
+        if trace is True:
+            trace = TraceRecorder()
+        elif trace is False:
+            trace = None
+        # NB: ``trace`` is None or a recorder here; len()-based truthiness
+        # would drop a fresh (empty) recorder, so test against None only.
+        self.dispatcher = KernelDispatcher(
+            dispatch, recorder=trace if trace is not None else None)
+        if trace is not None:
+            self.allocator.attach_trace(trace)
         # Speculative frame prefetch (data/pipeline.py): defaults to the
         # dispatch mode's appetite — concurrent dispatch overlaps host frame
         # synthesis with device programs; sequential keeps the transparent
@@ -261,7 +281,8 @@ class CLSession:
         self.rng = np.random.default_rng(seed)
         self._observers: List[PhaseObserver] = list(observers)
 
-        self.allocator = make_allocator(allocator, self.hp, precision_policy)
+        # (allocator constructed above, before the dispatcher, so the trace
+        # recorder could be attached when the policy needs one)
         # The session's precision policy is authoritative — also for ready
         # policy instances handed in via the spec — so decisions, kernel
         # costs and the spatial split all agree on one PrecisionPolicy.
@@ -413,7 +434,8 @@ class CLSession:
                     else pipe.frames(eval_cursor, t_end, max_frames=n_eval))
             if plan is not None:
                 plan.charge("b_sa", len(x)
-                            * self.inference.plan_time_per_sample(spatial))
+                            * self.inference.plan_time_per_sample(spatial),
+                            label="score", units=len(x))
             sink.add(t_end, x, y, keep_frac, serving_params)
             eval_cursor = t_end
 
@@ -440,18 +462,22 @@ class CLSession:
             # rides on the temporal plane and is charged to the T-SA ledger
             # before the window's own work — zero for idealized policies.
             if temporal.profile_cost_s:
-                plan.charge("t_sa", temporal.profile_cost_s)
+                plan.charge("t_sa", temporal.profile_cost_s, label="profile")
             # ---------------- Retraining (Alg. 1 lines 4-7) ----------------
             acc_v = 1.0
             if len(buffer) >= hp.sgd_batch and temporal.retrain_samples > 0:
                 xt, yt, xv, yv = buffer.get_data(temporal.retrain_samples,
                                                  temporal.valid_samples)
+                fit_t0 = time.perf_counter() if plan.traced else 0.0
                 self.student_params, self._opt, n_batches = self.retrain.fit(
                     self.student_params, self._opt, xt, yt, self.rng,
                     epochs=temporal.retrain_epochs)
                 t_phase = n_batches * self.retrain.plan_time_per_batch(
                     spatial)
-                plan.charge("t_sa", t_phase)
+                plan.charge(
+                    "t_sa", t_phase, label="retrain", units=n_batches,
+                    wall_s=(time.perf_counter() - fit_t0 if plan.traced
+                            else 0.0))
                 retrain_time += t_phase
                 # UpdateWeight + Valid (lines 6-7) — dispatched async; the
                 # accuracy is collected at the phase-end feedback barrier.
@@ -466,7 +492,8 @@ class CLSession:
                     v_role, "valid",
                     lambda s=serving, v=xv: self.inference.predict_async(s, v),
                     cost_s=len(xv) * self.inference.plan_time_per_sample(
-                        spatial, role=v_role))
+                        spatial, role=v_role),
+                    units=len(xv))
             score_until(min(plan.now(), duration), serving, plan)
             if plan.now() >= duration:
                 clock = plan.finish()
@@ -485,13 +512,15 @@ class CLSession:
                 lambda: self.labeling.label_async(
                     self.teacher_params, x_l, prec.labeling,
                     microbatch=self._label_microbatch),
-                cost_s=n_label * self.labeling.plan_time_per_sample(spatial))
+                cost_s=n_label * self.labeling.plan_time_per_sample(spatial),
+                units=n_label)
             label_time += plan.now() - t_lab0
             pred_l_h = plan.dispatch(
                 "b_sa", "acc_label",
                 lambda: self.inference.predict_async(serving, x_l),
                 cost_s=len(x_l) * self.inference.plan_time_per_sample(
-                    spatial))
+                    spatial),
+                units=len(x_l))
             score_until(min(plan.now(), duration), serving, plan)
 
             # Fixed-window pacing, declared by the temporal plane (no
@@ -587,6 +616,9 @@ class CLSystemSpec:
     speculative_frames: Optional[bool] = None
     # Pre-size speculated labeling bursts with the next decision's budget.
     decision_aware_spec: bool = True
+    # Trace spine: None = off (bit-identical), True = fresh TraceRecorder,
+    # or a ready TraceRecorder instance to share. See core/trace.py.
+    trace: Union[None, bool, TraceRecorder] = None
 
     def _session_kwargs(self) -> dict:
         """The resolved CLSession constructor kwargs this spec describes —
@@ -613,6 +645,7 @@ class CLSystemSpec:
             label_microbatch=self.label_microbatch,
             speculative_frames=self.speculative_frames,
             decision_aware_spec=self.decision_aware_spec,
+            trace=self.trace,
         )
 
     def build(self) -> CLSession:

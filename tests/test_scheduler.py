@@ -61,6 +61,7 @@ def test_window_pacing_is_declared_on_decisions():
     windows = {"dacapo-spatiotemporal": None,
                "dacapo-spatiotemporal-online": None,
                "dacapo-spatial": None,
+               "dacapo-replay": None,
                "ekya": 120.0, "eomu": 10.0}
     for name, cls in ALLOCATORS.items():
         pol = cls(hp)

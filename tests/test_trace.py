@@ -1,0 +1,260 @@
+"""Trace & replay subsystem tests: off-by-default bit-identity, traced-run
+bit-identity in both dispatch modes, bitwise-exact phase replay, JSON
+round-trip, the per-role dependency DAG, kernel-path capture, calibration,
+the "dacapo-replay" allocation policy, and deterministic merged manager
+traces under overlapped (parallel) shard stepping."""
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.dacapo_pairs import RESNET18, WIDERESNET50
+from repro.core.allocation import ALLOCATORS, CLHyperParams, ReplayAllocator
+from repro.core.estimator import CalibratedEstimator, DaCapoEstimator
+from repro.core.fleet import FleetSpec
+from repro.core.manager import ManagerSpec
+from repro.core.replay import TraceReplayer
+from repro.core.session import CLSystemSpec, pretrain_model
+from repro.core.trace import SessionTrace, TraceEvent, TraceRecorder
+from repro.data.stream import DriftStream, scenario
+from repro.kernels import ops
+from repro.models.registry import make_vision_model
+
+
+@pytest.fixture(scope="module")
+def pretrained():
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    hp = CLHyperParams(n_t=32, n_l=16, c_b=128, epochs=1)
+    rng = np.random.default_rng(0)
+    tp = pretrain_model(make_vision_model(WIDERESNET50.reduced()), stream,
+                        10, 32, rng)
+    sp = pretrain_model(make_vision_model(RESNET18.reduced()), stream, 8,
+                        32, rng, segments=stream.segments[:1], seed=8)
+    return hp, tp, sp
+
+
+def _run(pretrained, dispatch, trace, allocator="dacapo-spatiotemporal",
+         duration=30.0, eval_fps=0.5):
+    hp, tp, sp = pretrained
+    stream = DriftStream(scenario("S1", 2), seed=5, img=24)
+    spec = CLSystemSpec(student=RESNET18, teacher=WIDERESNET50,
+                        allocator=allocator, hp=hp, apply_mx=False, seed=0,
+                        eval_fps=eval_fps, dispatch=dispatch, trace=trace)
+    session = spec.build()
+    session.set_pretrained(tp, sp)
+    res = session.run(stream, duration=duration)
+    return res, session.dispatcher.recorder
+
+
+@pytest.fixture(scope="module")
+def traced_runs(pretrained):
+    """One traced + one untraced run per dispatch mode, shared by the
+    identity/replay tests below."""
+    runs = {}
+    for mode in ("sequential", "concurrent"):
+        runs[mode, False] = _run(pretrained, mode, None)
+        runs[mode, True] = _run(pretrained, mode, True)
+    return runs
+
+
+# ------------------------------------------------------------- off-switch
+def test_trace_off_by_default(traced_runs):
+    """trace=None leaves the dispatcher recorder-free: no trace objects,
+    no events, nothing on the hot path."""
+    for mode in ("sequential", "concurrent"):
+        _, recorder = traced_runs[mode, False]
+        assert recorder is None
+
+
+@pytest.mark.parametrize("mode", ["sequential", "concurrent"])
+def test_traced_run_bit_identical(traced_runs, mode):
+    """Recording is observation-only: accuracy, ledgers and the phase log
+    are bitwise identical with tracing on and off."""
+    r_off, _ = traced_runs[mode, False]
+    r_on, recorder = traced_runs[mode, True]
+    assert recorder is not None and len(recorder) > 0
+    assert r_off.avg_accuracy == r_on.avg_accuracy
+    assert r_off.retrain_time == r_on.retrain_time
+    assert r_off.label_time == r_on.label_time
+    assert r_off.phase_log == r_on.phase_log
+
+
+# ----------------------------------------------------------- exact replay
+@pytest.mark.parametrize("mode", ["sequential", "concurrent"])
+def test_replay_bitwise_exact(traced_runs, mode):
+    """predict() with no candidate reconstructs every phase-end clock
+    bit-for-bit in both dispatch semantics — including after a JSON
+    round trip."""
+    _, recorder = traced_runs[mode, True]
+    trace = recorder.trace
+    rep = TraceReplayer(trace)
+    for i, ph in enumerate(trace.phases):
+        assert rep.phase_time(i) == ph.end
+    rep2 = TraceReplayer(SessionTrace.from_json(trace.to_json()))
+    for i, ph in enumerate(trace.phases):
+        assert rep2.phase_time(i) == ph.end
+
+
+def test_replay_from_units_within_mape(traced_runs):
+    """Histogram-priced (from_units) predictions stay within 5% MAPE of
+    the recorded concurrent phase times."""
+    _, recorder = traced_runs["concurrent", True]
+    trace = recorder.trace
+    rep = TraceReplayer(trace)
+    errs = [abs(rep.predict(i, from_units=True) - ph.end) / ph.end
+            for i, ph in enumerate(trace.phases) if ph.end > 0]
+    assert errs
+    assert 100.0 * sum(errs) / len(errs) < 5.0
+
+
+def test_replay_cross_mode_what_if(traced_runs):
+    """Replaying a sequential trace under mode="concurrent" predicts the
+    concurrent run's first phase end exactly (virtual costs are
+    deterministic, and the two runs share a history of zero phases), and
+    never predicts less than the recorded sequential end for any phase:
+    concurrent adds the ``start + t_BSA`` arm to the same max, while the
+    sequential clock is the T-SA chain alone (seed semantics)."""
+    _, rec_seq = traced_runs["sequential", True]
+    _, rec_con = traced_runs["concurrent", True]
+    rep = TraceReplayer(rec_seq.trace)
+    assert rep.predict(0, mode="concurrent") == pytest.approx(
+        rec_con.phases[0].end, rel=1e-6)
+    for i, ph in enumerate(rec_seq.phases):
+        assert rep.predict(i, mode="concurrent") >= ph.end
+
+
+def test_replay_dag_structure(traced_runs):
+    """Sequential: one serial chain. Concurrent: per-role chains joined
+    at the phase-end barrier."""
+    _, rec_seq = traced_runs["sequential", True]
+    rep = TraceReplayer(rec_seq.trace)
+    d = rep.dag(0)
+    events = rec_seq.phases[0].events
+    assert len(d["nodes"]) == len(events)
+    for node in d["nodes"][1:]:
+        assert node.deps == (node.id - 1,)
+    assert d["tails"] == [len(events) - 1]
+
+    _, rec_con = traced_runs["concurrent", True]
+    rep = TraceReplayer(rec_con.trace)
+    d = rep.dag(0)
+    roles = {e.role for e in rec_con.phases[0].events}
+    assert len(d["tails"]) == len(roles)
+    for node in d["nodes"]:
+        for dep in node.deps:
+            assert d["nodes"][dep].event.role == node.event.role
+
+
+# ------------------------------------------------------------ trace model
+def test_trace_json_rejects_wrong_format():
+    with pytest.raises(ValueError):
+        SessionTrace.from_dict({"format": "not-a-trace", "phases": []})
+
+
+def test_trace_event_round_trip():
+    e = TraceEvent(kind="program", role="t_sa", label="valid", cost_s=0.25,
+                   lane=3, wall_s=0.01, path="pallas", units=48.0, fan=2)
+    assert TraceEvent.from_dict(e.as_dict()) == e
+
+
+def test_dominant_path_capture():
+    """paths_before/dominant_path bracket an issue: the kernel path whose
+    counter moved is recorded (eager ref-mode op so the counter moves on
+    every call, not only at jit trace time)."""
+    rec = TraceRecorder()
+    ops.reset_kernel_stats()
+    before = rec.paths_before()
+    prev = os.environ.get("REPRO_KERNEL_MODE")
+    os.environ["REPRO_KERNEL_MODE"] = "ref"
+    try:
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 32)),
+                        jnp.float32)
+        ops.mx_quantize(x, "mx6")
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_MODE", None)
+        else:
+            os.environ["REPRO_KERNEL_MODE"] = prev
+    assert rec.dominant_path(before) == "ref"
+    # No movement -> empty path; capture_paths=False -> no snapshots.
+    assert rec.dominant_path(rec.paths_before()) == ""
+    assert TraceRecorder(capture_paths=False).paths_before() is None
+
+
+# ------------------------------------------------------------- calibration
+def test_calibrate_scales_estimator(traced_runs):
+    _, recorder = traced_runs["concurrent", True]
+    cal = TraceReplayer(recorder.trace).calibrate()
+    assert "retrain" in cal.scales and cal.scales["retrain"] > 0
+    assert cal.global_scale > 0
+    assert cal.seconds("retrain", 2.0) == 2.0 * cal.scales["retrain"]
+    est = cal.estimator(DaCapoEstimator())
+    assert isinstance(est, CalibratedEstimator)
+    base = DaCapoEstimator()
+    cfg = RESNET18.reduced()
+    assert est.forward_time(cfg, 8, "mx9") == pytest.approx(
+        est.forward_scale * base.forward_time(cfg, 8, "mx9"))
+    assert est.train_step_time(cfg, 8, "mx9", 16) == pytest.approx(
+        est.train_scale * base.train_step_time(cfg, 8, "mx9", 16))
+    assert est.total_rows == base.total_rows
+
+
+# ----------------------------------------------------- replay-scored policy
+def test_replay_allocator_registered():
+    assert ALLOCATORS["dacapo-replay"] is ReplayAllocator
+    assert ReplayAllocator.needs_trace
+
+
+def test_replay_allocator_runs_and_charges_profile(pretrained):
+    """dacapo-replay auto-enables the recorder, scores candidates by
+    replay, and charges the measured replay wall to profile_cost_s."""
+    res, recorder = _run(pretrained, "concurrent", None,
+                         allocator="dacapo-replay", eval_fps=2.0)
+    assert recorder is not None  # needs_trace flipped the default on
+    assert len(recorder) > 0
+    costs = [ph.decisions[0].get("profile_cost_s")
+             for ph in recorder.phases if ph.decisions]
+    assert any(c and c > 0 for c in costs[1:])
+    assert res.avg_accuracy >= 0.0
+
+
+# ----------------------------------------- manager merged-trace determinism
+def _manager_trace(pretrained, workers):
+    hp, tp, sp = pretrained
+    fleet = FleetSpec(student=RESNET18, teacher=WIDERESNET50, hp=hp,
+                      fleet_mode="drift-weighted", apply_mx=False, seed=0,
+                      eval_fps=0.5, dispatch="concurrent")
+    mgr = ManagerSpec(fleet=fleet, n_shards=3, placement="static",
+                      migration=False, parallel_shards=workers,
+                      trace=True).build()
+    mgr.set_pretrained(tp, sp)
+    streams = [DriftStream(scenario(name, 2), seed=seed, img=24)
+               for name, seed in [("S1", 5), ("S3", 6), ("ES1", 7)]]
+    result = mgr.run(streams, duration=40.0)
+    return result, mgr.trace
+
+
+def test_manager_parallel_trace_deterministic(pretrained):
+    """Under parallel_shards the merged manager trace is drained at the
+    round barrier in shard-index order: identical — phase for phase,
+    event for event, shard stamp for shard stamp — to serial stepping,
+    and the traced parallel run stays bit-identical to the untraced
+    serial result."""
+    res_serial, tr_serial = _manager_trace(pretrained, workers=0)
+    res_par, tr_par = _manager_trace(pretrained, workers=3)
+    assert res_par.parallel_rounds > 0
+    assert res_serial.fleet_avg_accuracy == res_par.fleet_avg_accuracy
+    assert res_serial.ledger == res_par.ledger
+    assert len(tr_serial.phases) == len(tr_par.phases) > 0
+    for a, b in zip(tr_serial.phases, tr_par.phases):
+        assert a.shard == b.shard
+        assert a.start == b.start and a.end == b.end
+        assert len(a.events) == len(b.events)
+        for ea, eb in zip(a.events, b.events):
+            # wall_s is measured host time — everything else is virtual
+            # and must be bitwise identical across stepping modes.
+            assert dataclasses.replace(ea, wall_s=0.0) \
+                == dataclasses.replace(eb, wall_s=0.0)
+    assert {ph.shard for ph in tr_par.phases} == {0, 1, 2}
